@@ -1,0 +1,81 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Re-derive collective bytes for existing dryrun JSONL records using the
+StableHLO parser (original dtypes), without recompiling: collective totals
+come from the unrolled L=1/L=2 LOWERINGS only (entry + L*body fit).
+
+  PYTHONPATH=src python -m benchmarks.recollect results/dryrun_single.jsonl
+"""
+import dataclasses
+import json
+import sys
+
+import numpy as np
+
+
+def main():
+    path = sys.argv[1]
+    rows = [json.loads(l) for l in open(path)]
+
+    import jax
+    from repro.configs import get_config, INPUT_SHAPES
+    from repro.launch.mesh import (make_production_mesh, PEAK_FLOPS_BF16,
+                                   HBM_BW, ICI_BW_PER_LINK)
+    from repro.launch.dryrun import (_lower_one, parse_collectives,
+                                     apply_model_overrides)
+
+    out = []
+    for r in rows:
+        if r.get("skipped") or r.get("error"):
+            out.append(r)
+            continue
+        arch, shape = r["arch"], r["shape"]
+        mp = r.get("multi_pod", False)
+        try:
+            cfg = apply_model_overrides(get_config(arch),
+                                        r.get("model_overrides"))
+            seq, gbatch, kind = INPUT_SHAPES[shape]
+            mesh = make_production_mesh(multi_pod=mp)
+            ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+            W = tuple(a for a in ("pod", "data") if a in ms)
+            bsh = bool(W) and gbatch % int(
+                np.prod([ms[a] for a in W])) == 0
+            enc_seq = 1536 if cfg.arch_type == "encdec" else 0
+            pts = []
+            for L in (2, 3):
+                reps = {"n_layers": L, "scan_unroll": True}
+                if cfg.encoder_layers:
+                    reps["encoder_layers"] = L
+                cfg_l = dataclasses.replace(cfg, **reps)
+                lw = _lower_one(cfg_l, kind, mesh, gbatch, seq, enc_seq, W,
+                                bsh, r.get("train_overrides"))
+                pts.append(parse_collectives(lw.as_text()))
+            L_true = cfg.n_layers
+            detail = {}
+            for k in ("all-gather", "all-reduce", "reduce-scatter",
+                      "all-to-all", "collective-permute"):
+                detail[k] = pts[0][k] + (L_true - 2) * (pts[1][k] - pts[0][k])
+            total = sum(detail.values())
+            r["collective_bytes"] = total
+            r["collectives"] = detail
+            r["roofline"]["collective_s"] = total / ICI_BW_PER_LINK
+            terms = r["roofline"]
+            r["bottleneck"] = max(
+                ("compute_s", "memory_s", "collective_s"),
+                key=lambda k: terms[k]).replace("_s", "")
+            print(f"[OK] {arch} x {shape} x {'multi' if mp else 'single'}: "
+                  f"coll={total:.3g}B x={terms['collective_s']:.4f}s "
+                  f"bound={r['bottleneck']}", flush=True)
+        except Exception as ex:  # noqa
+            print(f"[FAIL] {arch} x {shape}: {type(ex).__name__}: {ex}",
+                  flush=True)
+        out.append(r)
+
+    with open(path, "w") as f:
+        for r in out:
+            f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun_*.jsonl.
+
+  PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def load(path):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    # keep the LAST result per (arch, shape, multi_pod)
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"], r.get("multi_pod", False))] = r
+    return list(seen.values())
+
+
+def dryrun_table(rows):
+    print("| arch | shape | mesh | status | HLO FLOPs/dev | HLO bytes/dev |"
+          " coll bytes/dev | temp mem/dev | compile |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"],
+                                         order.get(r["shape"], 9))):
+        mesh = r.get("mesh", "2x16x16" if r.get("multi_pod") else "16x16")
+        if r.get("error"):
+            print(f"| {r['arch']} | {r['shape']} | {mesh} | FAIL |"
+                  f" - | - | - | - | - |")
+        elif r.get("skipped"):
+            print(f"| {r['arch']} | {r['shape']} | {mesh} | skip"
+                  f" (full-attn) | - | - | - | - | - |")
+        else:
+            print(f"| {r['arch']} | {r['shape']} | {mesh} | ok |"
+                  f" {r['hlo_flops']:.3g} | {_fmt_bytes(r['hlo_bytes'])} |"
+                  f" {_fmt_bytes(r['collective_bytes'])} |"
+                  f" {_fmt_bytes(r['memory']['temp_bytes'])} |"
+                  f" {r['compile_s']}s |")
+
+
+def roofline_table(rows):
+    print("| arch | shape | compute s | memory s | collective s |"
+          " bottleneck | MODEL_FLOPS/dev | useful ratio | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"],
+                                         order.get(r["shape"], 9))):
+        if r.get("error") or r.get("skipped"):
+            continue
+        t = r["roofline"]
+        ur = r.get("useful_flops_ratio")
+        note = _note(r)
+        print(f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} |"
+              f" {t['memory_s']:.4f} | {t['collective_s']:.4f} |"
+              f" {r['bottleneck']} | {r['model_flops']:.3g} |"
+              f" {ur and round(ur, 3)} | {note} |")
+
+
+def _note(r):
+    """One sentence: what would move the dominant term down."""
+    b = r["bottleneck"]
+    kind = r.get("kind")
+    arch = r.get("arch", "")
+    if b == "collective":
+        if kind == "decode":
+            return ("per-step int8 weight gather dominates single-token "
+                    "decode: keep dequantized weights resident across steps")
+        if "mamba" in arch or "hymba" in arch:
+            return "SSD state exchange: ppermute ladder + bf16 wire (§Perf)"
+        return "int8 model-axis FSDP gather + 4-bit packed a2a (§Perf)"
+    if b == "memory":
+        if kind == "decode":
+            return ("KV-cache + weight streaming bound (expected for "
+                    "batch-limited decode); raise batch to amortize")
+        if r.get("useful_flops_ratio") and r["useful_flops_ratio"] < 0.4:
+            return ("low useful-FLOPs ratio: dispatch/remat waste - "
+                    "sort-based MoE dispatch (§Perf), selective checkpoint")
+        return ("op-level byte accounting (upper bound incl. fusion-"
+                "eliminable traffic): selective checkpoint, fused EF pass")
+    return "compute-bound: raise per-device batch or reduce remat"
+
+
+def main():
+    single = load(os.path.join(ROOT, "results", "dryrun_single.jsonl"))
+    multi = load(os.path.join(ROOT, "results", "dryrun_multi.jsonl"))
+    print("## Dry-run (single-pod 16x16)\n")
+    dryrun_table(single)
+    if multi:
+        print("\n## Dry-run (multi-pod 2x16x16)\n")
+        dryrun_table(multi)
+    print("\n## Roofline (single-pod, per device, v5e model:"
+          " 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link)\n")
+    roofline_table(single)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""The paper's experimental comparison at laptop scale (Tables 2-3 analogue).
+
+CIFAR/ResNet are not available offline, so the same *comparative protocol*
+runs on a synthetic Gaussian-cluster classification task with an MLP
+(the paper's claims are about optimizer/communication behaviour, which
+this preserves): QADAM (ours) vs TernGrad vs blockwise-EF SGD (Zheng et
+al.) vs WQuan (post-training weight quantization), at matched wire bits.
+
+  PYTHONPATH=src python examples/paper_repro.py --steps 400
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qadam import (QAdamConfig, qadam, ef_sgdm, terngrad_sgd,
+                              apply_updates, wquan)
+from repro.data.pipeline import (ClsDataConfig, classification_dataset,
+                                 classification_batches)
+
+
+def mlp_init(key, d_in, d_hidden, n_classes):
+    ks = jax.random.split(key, 3)
+    s = 1 / np.sqrt(d_in)
+    return {
+        "w1": jax.random.normal(ks[0], (d_in, d_hidden)) * s,
+        "b1": jnp.zeros((d_hidden,)),
+        "w2": jax.random.normal(ks[1], (d_hidden, d_hidden)) * 0.05,
+        "b2": jnp.zeros((d_hidden,)),
+        "w3": jax.random.normal(ks[2], (d_hidden, n_classes)) * 0.05,
+        "b3": jnp.zeros((n_classes,)),
+    }
+
+
+def mlp_apply(p, x):
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    h = jnp.tanh(h @ p["w2"] + p["b2"])
+    return h @ p["w3"] + p["b3"]
+
+
+def loss_fn(p, x, y):
+    logits = mlp_apply(p, x)
+    return jnp.mean(-jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y])
+
+
+def accuracy(p, x, y):
+    return float(jnp.mean(jnp.argmax(mlp_apply(p, x), -1) == y))
+
+
+def run(opt, steps, data, key, batch=128, seed=0, n_workers=8):
+    """Multi-worker protocol: each worker gets its own minibatch; updates
+    are the mean of the workers' (quantized) deltas - Algorithm 2.
+    Workers are vmapped; one jitted step."""
+    xtr, ytr, xte, yte = data
+    params = mlp_init(key, xtr.shape[1], 256, int(ytr.max()) + 1)
+    state0 = opt.init(params)
+    # independent PRNG stream per worker (TernGrad is stochastic)
+    wkeys = jax.vmap(lambda i: jax.random.fold_in(state0.key, i))(
+        jnp.arange(n_workers))
+    sstack = jax.vmap(lambda k: state0._replace(key=k))(wkeys)
+
+    @jax.jit
+    def step(params, sstack, xs, ys):
+        def worker(st, x, y):
+            fp = opt.forward_params(params, st)
+            g = jax.grad(loss_fn)(fp, x, y)
+            upd, st2 = opt.update(g, st, params)
+            return upd, st2
+
+        upds, sstack2 = jax.vmap(worker)(sstack, xs, ys)
+        mean_upd = jax.tree.map(lambda u: jnp.mean(u, axis=0), upds)
+        return apply_updates(params, mean_upd), sstack2
+
+    its = [classification_batches(xtr, ytr, batch, seed=seed + w)
+           for w in range(n_workers)]
+    for t in range(steps):
+        pairs = [next(it) for it in its]
+        xs = jnp.stack([p[0] for p in pairs])
+        ys = jnp.stack([p[1] for p in pairs])
+        params, sstack = step(params, sstack, xs, ys)
+    return params
+
+
+def wire_bits(name):
+    return {"fp32": 32, "qadam_log3": 3, "qadam_log2": 2, "terngrad": 2,
+            "blockwise": 1}.get(name, 32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    data = classification_dataset(ClsDataConfig(seed=1))
+    xte, yte = data[2], data[3]
+
+    methods = {
+        # name: (optimizer builder, weight quant after?)
+        "QADAM fp32": (lambda: qadam(QAdamConfig(
+            alpha=2e-3, grad_q=None, weight_q=None)), None),
+        "QADAM log-3bit": (lambda: qadam(QAdamConfig(
+            alpha=2e-3, grad_q="log:2")), None),
+        "QADAM log-2bit": (lambda: qadam(QAdamConfig(
+            alpha=2e-3, grad_q="log:1")), None),
+        "QADAM log-3bit no-EF": (lambda: qadam(QAdamConfig(
+            alpha=2e-3, grad_q="log:2", error_feedback=False)), None),
+        "QADAM + Qx(k=5)": (lambda: qadam(QAdamConfig(
+            alpha=2e-3, grad_q="log:2", weight_q="uniform_amax:5")), None),
+        "WQuan(k=5) post": (lambda: qadam(QAdamConfig(
+            alpha=2e-3, grad_q=None, weight_q=None)), 5),
+        "TernGrad": (lambda: terngrad_sgd(alpha=2e-2), None),
+        "Blockwise-EF SGD": (lambda: ef_sgdm(alpha=2e-3, beta=0.9,
+                                             grad_q="blockwise:256"), None),
+    }
+
+    rows = []
+    for name, (builder, wq_after) in methods.items():
+        accs = []
+        for s in range(args.seeds):
+            p = run(builder(), args.steps, data, jax.random.PRNGKey(s),
+                    seed=s * 100, n_workers=args.workers)
+            if wq_after is not None:
+                p = wquan(p, k_x=wq_after, absolute=False)
+            accs.append(accuracy(p, xte, yte))
+        rows.append((name, float(np.mean(accs)), float(np.std(accs))))
+        print(f"{name:26s} acc {np.mean(accs) * 100:.2f} "
+              f"+/- {np.std(accs) * 100:.2f}%")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([{"method": n, "acc": a, "std": s}
+                       for n, a, s in rows], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: train a small LM with Quantized Adam + Error Feedback
+(Algorithm 1) and watch the communication budget shrink 8x.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.core.qadam import QAdamConfig, qadam, apply_updates
+from repro.core.quantizers import get_quantizer
+from repro.core.packing import pack_codes
+from repro.data.pipeline import batch_for_model
+
+
+def main():
+    cfg = get_config("yi-6b", smoke=True)  # 2-layer GQA toy
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name} (smoke) - {n_params / 1e6:.2f}M params")
+
+    # Algorithm 1: log-grid Q_g (4-bit wire) + EF + absolute-grid Q_x
+    opt = qadam(QAdamConfig(alpha=3e-3, grad_q="log:6",
+                            weight_q="uniform_amax:7",
+                            weight_q_min_numel=2 ** 14))
+    state = opt.init(params)
+
+    batches = batch_for_model(cfg, seq_len=64, global_batch=8)
+
+    @jax.jit
+    def grads_fn(p, batch):
+        def lfn(p):
+            ls, nt = model.loss(p, batch)
+            return ls / nt
+        return jax.value_and_grad(lfn)(p)
+
+    # wire accounting for one parameter tensor, to make the 8x concrete
+    q = get_quantizer("log:6")
+    leaf = params["blocks"]["attn"]["q"]
+    qt = q.encode(leaf)
+    packed = pack_codes(qt.codes, 4)
+    print(f"example tensor {leaf.shape}: fp32 wire {leaf.size * 4 / 1e3:.1f}KB"
+          f" -> 4-bit codes {packed.size / 1e3:.1f}KB"
+          f" ({leaf.size * 4 / packed.size:.1f}x smaller)")
+
+    for step in range(1, 41):
+        batch = next(batches)
+        fp = opt.forward_params(params, state)   # Q_x(x_t)
+        loss, grads = grads_fn(fp, batch)
+        upd, state = opt.update(grads, state, params)
+        params = apply_updates(params, upd)
+        if step % 10 == 0 or step == 1:
+            print(f"step {step:3d}  loss {float(loss):.4f}")
+    print("done - loss decreasing under 4-bit update + 8-bit weight wire.")
+
+
+if __name__ == "__main__":
+    main()

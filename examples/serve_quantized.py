@@ -1,0 +1,49 @@
+"""Serving with quantized-resident weights: the paper's weight-quantization
+motivation ("storage on edge devices") as a serving engine demo.
+
+Loads a smoke-scale LM, serves a batch of requests twice - fp32-resident
+and Q_x-resident - and checks the outputs stay consistent while the model
+footprint drops ~4x.
+
+  PYTHONPATH=src python examples/serve_quantized.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    cfg = get_config("gemma2-2b", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    nbytes = sum(int(np.prod(p.shape)) * 4 for p in jax.tree.leaves(params))
+    print(f"{cfg.name} (smoke): fp32 model {nbytes / 1e6:.1f}MB; "
+          f"int-coded (k_x=6) ~{nbytes / 4 / 1e6:.1f}MB on device")
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size, size=12)),
+                    max_new_tokens=12) for _ in range(4)]
+
+    outs = {}
+    for tag, quantized in (("fp32", False), ("Qx-int", True)):
+        eng = Engine(model, params, max_seq=64, quantized=quantized)
+        t0 = time.time()
+        res = eng.generate(reqs)
+        outs[tag] = [r.tokens for r in res]
+        print(f"{tag:7s}: {sum(len(r.tokens) for r in res)} tokens "
+              f"in {time.time() - t0:.2f}s; req0 -> {res[0].tokens[:8]}")
+
+    agree = np.mean([
+        np.mean(np.asarray(a[:6]) == np.asarray(b[:6]))
+        for a, b in zip(outs["fp32"], outs["Qx-int"])])
+    print(f"greedy agreement over first 6 tokens: {agree * 100:.0f}% "
+          f"(quantization perturbs logits mildly - Table 2's 'WQuan' row)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Sharding-aware checkpointing: npz payloads + json manifest.
+
+No orbax offline; this stores any pytree of arrays (train state, serve
+params) with dtype/shape manifest and restores onto a mesh by device_put
+with the original NamedShardings (or host arrays when mesh is None).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                     for k in path) for path, _ in flat]
+    vals = [v for _, v in flat]
+    return keys, vals, treedef
+
+
+def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    keys, vals, _ = _flatten(tree)
+    arrays = {}
+    manifest = {"step": step, "leaves": []}
+    for i, (k, v) in enumerate(zip(keys, vals)):
+        arr = np.asarray(jax.device_get(v))
+        shape = list(arr.shape)  # before ascontiguousarray 0d->1d promotion
+        arr = np.ascontiguousarray(arr)
+        name = f"leaf_{i}"
+        # store raw bytes: npz mangles non-native dtypes (bfloat16 -> |V2)
+        arrays[name] = arr.view(np.uint8).reshape(-1)
+        manifest["leaves"].append(
+            {"key": k, "name": name, "dtype": str(arr.dtype),
+             "shape": shape})
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like: Any, shardings: Any = None) -> Any:
+    """`like`: pytree with the target structure. `shardings`: optional
+    matching pytree of jax.sharding.Sharding to place leaves."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    keys, vals, treedef = _flatten(like)
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+    out = []
+    import ml_dtypes  # registers bfloat16 etc. with numpy  # noqa: F401
+    for k, v in zip(keys, vals):
+        ent = by_key[k]
+        raw = data[ent["name"]]
+        dt = np.dtype(ent["dtype"])
+        arr = raw.view(dt).reshape(ent["shape"])
+        assert list(arr.shape) == list(v.shape), (k, arr.shape, v.shape)
+        out.append(jnp.asarray(arr))
+    tree = jax.tree.unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree
+
+
+def latest_step(path: str) -> Optional[int]:
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f).get("step")
+    except FileNotFoundError:
+        return None

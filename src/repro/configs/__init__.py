@@ -1,0 +1,52 @@
+"""Architecture registry + assigned input shapes.
+
+``get_config(arch_id)`` returns the exact assigned configuration;
+``get_config(arch_id, smoke=True)`` the reduced CPU-smoke variant
+(2 layers, d_model <= 512, <= 4 experts).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "whisper-small": "repro.configs.whisper_small",
+    "mamba2-2.7b": "repro.configs.mamba2_2p7b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "yi-6b": "repro.configs.yi_6b",
+    "qwen2.5-14b": "repro.configs.qwen2p5_14b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+# assigned input shapes: name -> (seq_len, global_batch, kind)
+INPUT_SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention; these archs are full-attention
+# (or architecturally capped, whisper) -> skipped, see DESIGN.md §5.
+LONG_CONTEXT_ARCHS = ("mamba2-2.7b", "hymba-1.5b", "gemma2-2b", "gemma3-4b")
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def shape_applicable(arch_id: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_id in LONG_CONTEXT_ARCHS
+    return True

@@ -1,0 +1,220 @@
+"""Quantized Generic Adam with Error Feedback (Algorithm 1) + baselines.
+
+Optax-style API (no optax dependency):
+
+    opt = qadam(QAdamConfig(alpha=1e-3, grad_q="log:6", weight_q="uniform:7"))
+    state = opt.init(params)
+    qparams = opt.forward_params(params, state)       # Q_x(x_t) - run fwd/bwd on these
+    updates, state = opt.update(grads, state)         # quantized delta, EF applied
+    params = apply_updates(params, updates)
+
+The hyperparameter schedule follows Assumption 4 / Section 5:
+  theta_t = 1 - theta/t, alpha_t per `schedule`, beta constant.
+`schedule` options: "sqrt" (alpha/sqrt(t), Assumption 4), "constant",
+"halving:K" (halve every K steps - the paper's experimental setting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import Quantizer, IdentityQuantizer, get_quantizer
+
+
+@dataclasses.dataclass(frozen=True)
+class QAdamConfig:
+    alpha: float = 1e-3
+    beta: float = 0.99
+    theta: float = 0.999
+    eps: float = 1e-5
+    schedule: str = "constant"     # "sqrt" | "constant" | "halving:K"
+    grad_q: Optional[str] = "log:6"
+    weight_q: Optional[str] = None
+    error_feedback: bool = True    # ablation knob (paper: EF on)
+    # leaves smaller than this skip Q_x (norm scales / biases would be
+    # clipped by the absolute grid; the paper quantizes weight matrices).
+    # 0 = quantize everything (fully faithful Algorithm 1).
+    weight_q_min_numel: int = 0
+
+    def grad_quantizer(self) -> Quantizer:
+        return get_quantizer(self.grad_q)
+
+    def weight_quantizer(self) -> Quantizer:
+        return get_quantizer(self.weight_q)
+
+
+class QAdamState(NamedTuple):
+    count: jax.Array          # t (starts at 0; step uses t+1)
+    m: Any                    # first moment, per param
+    v: Any                    # second moment, per param
+    e: Any                    # error-feedback residual, per param
+    key: jax.Array            # PRNG for stochastic quantizers (TernGrad)
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+    forward_params: Callable
+
+
+def _alpha_t(cfg: QAdamConfig, t: jax.Array) -> jax.Array:
+    tf = t.astype(jnp.float32)
+    if cfg.schedule == "sqrt":
+        return cfg.alpha / jnp.sqrt(tf)
+    if cfg.schedule == "constant":
+        return jnp.float32(cfg.alpha)
+    if cfg.schedule.startswith("halving"):
+        k = int(cfg.schedule.split(":")[1])
+        return cfg.alpha * 0.5 ** jnp.floor((tf - 1.0) / k)
+    raise ValueError(cfg.schedule)
+
+
+def _theta_t(cfg: QAdamConfig, t: jax.Array) -> jax.Array:
+    # theta_t = 1 - theta/t  (Assumption 4). With theta<1 this stays in (0,1).
+    return 1.0 - cfg.theta / t.astype(jnp.float32)
+
+
+def _zeros_like_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def qadam(cfg: QAdamConfig, seed: int = 0) -> Optimizer:
+    """Algorithm 1: Quantized Generic Adam (single worker)."""
+    gq = cfg.grad_quantizer()
+    wq = cfg.weight_quantizer()
+
+    def init(params) -> QAdamState:
+        return QAdamState(
+            count=jnp.zeros((), jnp.int32),
+            m=_zeros_like_tree(params),
+            v=_zeros_like_tree(params),
+            e=_zeros_like_tree(params),
+            key=jax.random.PRNGKey(seed),
+        )
+
+    def forward_params(params, state=None):
+        """Q_x(x_t): weights the gradient must be sampled at (Assumption 3)."""
+        if isinstance(wq, IdentityQuantizer):
+            return params
+
+        def leaf(p):
+            if p.size < cfg.weight_q_min_numel:
+                return p
+            return wq(p).astype(p.dtype)
+        return jax.tree.map(leaf, params)
+
+    def update(grads, state: QAdamState, params=None):
+        t = state.count + 1
+        a_t = _alpha_t(cfg, t)
+        th_t = _theta_t(cfg, t)
+        key, sub = jax.random.split(state.key)
+        leaves = jax.tree.structure(grads).num_leaves
+        subkeys = list(jax.random.split(sub, leaves))
+        keys_tree = jax.tree.unflatten(jax.tree.structure(grads), subkeys)
+
+        def leaf(g, m, v, e, k):
+            g = g.astype(jnp.float32)
+            v_new = th_t * v + (1.0 - th_t) * g * g
+            m_new = cfg.beta * m + (1.0 - cfg.beta) * g
+            delta_full = a_t * m_new / jnp.sqrt(v_new + cfg.eps) + e
+            if isinstance(gq, IdentityQuantizer):
+                delta_q = delta_full
+            else:
+                delta_q = gq(delta_full, key=k)
+            e_new = (delta_full - delta_q) if cfg.error_feedback \
+                else jnp.zeros_like(e)
+            return -delta_q, m_new, v_new, e_new
+
+        out = jax.tree.map(leaf, grads, state.m, state.v, state.e, keys_tree)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        e = jax.tree.map(lambda o: o[3], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, QAdamState(count=t, m=m, v=v, e=e, key=key)
+
+    return Optimizer(init=init, update=update, forward_params=forward_params)
+
+
+def ef_sgdm(alpha: float = 0.1, beta: float = 0.9,
+            grad_q: str = "blockwise:256", schedule: str = "constant",
+            seed: int = 0) -> Optimizer:
+    """Zheng et al. '19 baseline: blockwise-compressed momentum SGD with EF."""
+    gq = get_quantizer(grad_q)
+    cfg = QAdamConfig(alpha=alpha, beta=beta, schedule=schedule)
+
+    def init(params):
+        return QAdamState(count=jnp.zeros((), jnp.int32),
+                          m=_zeros_like_tree(params),
+                          v=_zeros_like_tree(params),
+                          e=_zeros_like_tree(params),
+                          key=jax.random.PRNGKey(seed))
+
+    def forward_params(params, state=None):
+        return params
+
+    def update(grads, state, params=None):
+        t = state.count + 1
+        a_t = _alpha_t(cfg, t)
+        key, sub = jax.random.split(state.key)
+        leaves = jax.tree.structure(grads).num_leaves
+        keys_tree = jax.tree.unflatten(jax.tree.structure(grads),
+                                       list(jax.random.split(sub, leaves)))
+
+        def leaf(g, m, e, k):
+            g = g.astype(jnp.float32)
+            m_new = beta * m + g
+            delta_full = a_t * m_new + e
+            delta_q = gq(delta_full, key=k)
+            return -delta_q, m_new, delta_full - delta_q
+
+        out = jax.tree.map(leaf, grads, state.m, state.e, keys_tree)
+        upd = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        e = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return upd, QAdamState(count=t, m=m, v=state.v, e=e, key=key)
+
+    return Optimizer(init=init, update=update, forward_params=forward_params)
+
+
+def terngrad_sgd(alpha: float = 0.1, schedule: str = "constant",
+                 seed: int = 0) -> Optimizer:
+    """TernGrad baseline (Wen et al. '17): unbiased ternary SGD, no EF."""
+    gq = get_quantizer("terngrad")
+    cfg = QAdamConfig(alpha=alpha, schedule=schedule)
+
+    def init(params):
+        return QAdamState(count=jnp.zeros((), jnp.int32),
+                          m=_zeros_like_tree(params), v=_zeros_like_tree(params),
+                          e=_zeros_like_tree(params), key=jax.random.PRNGKey(seed))
+
+    def forward_params(params, state=None):
+        return params
+
+    def update(grads, state, params=None):
+        t = state.count + 1
+        a_t = _alpha_t(cfg, t)
+        key, sub = jax.random.split(state.key)
+        leaves = jax.tree.structure(grads).num_leaves
+        keys_tree = jax.tree.unflatten(jax.tree.structure(grads),
+                                       list(jax.random.split(sub, leaves)))
+        upd = jax.tree.map(lambda g, k: -a_t * gq(g.astype(jnp.float32), key=k),
+                           grads, keys_tree)
+        return upd, QAdamState(count=t, m=state.m, v=state.v, e=state.e, key=key)
+
+    return Optimizer(init=init, update=update, forward_params=forward_params)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def wquan(params, k_x: int = 7, absolute: bool = True):
+    """WQuan baseline: quantize weights once, after training."""
+    wq = get_quantizer(f"uniform:{k_x}" if absolute else f"uniform_amax:{k_x}")
+    return jax.tree.map(lambda p: wq(p).astype(p.dtype), params)

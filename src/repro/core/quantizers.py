@@ -1,0 +1,322 @@
+"""Quantization operators from the paper (and the baselines it compares to).
+
+The paper's two quantizers (Section 5):
+
+  Q_g(g) = ||g||_inf * argmin_{ghat in G^d} || g/||g||_inf - ghat ||,
+      G = {-1, ..., -2^{-k_g}, 0, 2^{-k_g}, ..., 1}            (log grid)
+
+  Q_x(x) = 0.5 * argmin_{xhat in X} || 2x - xhat ||,
+      X = {-1, ..., -1/2^{k_x}, 0, 1/2^{k_x}, ..., 1}          (uniform grid)
+
+Baselines:
+  * TernGrad (Wen et al. '17): unbiased stochastic ternary levels
+    {-amax, 0, +amax}.
+  * Blockwise (Zheng et al. '19): sign() scaled by per-block mean |.|.
+
+Every quantizer is exposed as a `Quantizer` with
+  encode(x)  -> QTensor (integer codes + scale metadata)
+  decode(qt) -> dequantized float array
+  __call__   -> decode(encode(x))  (the mathematical operator Q(.))
+
+All are pure-jnp reference implementations; the Pallas kernels in
+`repro.kernels` implement the hot paths and are tested against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Integer codes + scale. The wire format of the paper's channel.
+
+    codes: integer array (int8 storage; possibly bit-packed, see packing.py)
+    scale: scalar (per-tensor) or per-block array of float32
+    meta:  static metadata (grid kind, bits, shape) - not traced.
+    """
+
+    codes: jax.Array
+    scale: jax.Array
+    kind: str = dataclasses.field(metadata=dict(static=True))
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    shape: tuple = dataclasses.field(metadata=dict(static=True))
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), (self.kind, self.bits, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scale = children
+        kind, bits, shape = aux
+        return cls(codes=codes, scale=scale, kind=kind, bits=bits, shape=shape)
+
+    @property
+    def nbytes_wire(self) -> int:
+        """Bytes on the wire: ceil(bits/8 packing) * numel + scale bytes."""
+        numel = int(np.prod(self.shape)) if self.shape else 1
+        code_bytes = (numel * self.bits + 7) // 8
+        scale_bytes = int(np.prod(self.scale.shape)) * 4 if hasattr(self.scale, "shape") else 4
+        return code_bytes + scale_bytes
+
+
+# ---------------------------------------------------------------------------
+# Log-grid gradient quantizer (the paper's Q_g)
+# ---------------------------------------------------------------------------
+
+def _log_levels(k_g: int) -> int:
+    """Number of representable levels: +/- 2^0..2^-k_g plus 0."""
+    return 2 * (k_g + 1) + 1
+
+
+def log_bits(k_g: int) -> int:
+    """Bits per element needed for the log grid (sign + exponent index)."""
+    return max(2, int(np.ceil(np.log2(_log_levels(k_g)))))
+
+
+def log_encode(g: jax.Array, k_g: int) -> QTensor:
+    """Nearest-in-linear-space log-grid quantization, per-tensor amax scale.
+
+    Code layout: 0 encodes the value 0; code c in [1, k_g+1] encodes magnitude
+    2^{-(k_g+1-c)}... we store (exp_idx+1) with a sign bit, i.e.
+      code = sign_bit << (bits-1) | (k_g - e + 1)   where value = +/- 2^{-e}.
+    """
+    g = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.where(amax > 0, amax, 1.0).astype(jnp.float32)
+    y = jnp.abs(g) / scale  # in [0, 1]
+    # nearest level in *linear* space for grid {0} U {2^-e, e=0..k_g}:
+    # boundaries between 2^-(e+1) and 2^-e sit at 1.5*2^-(e+1); below
+    # 2^-k_g/2 the nearest level is 0.
+    # e_real = -log2(y); nearest exponent: compare y against midpoints.
+    safe_y = jnp.where(y > 0, y, 1.0)
+    e_float = -jnp.log2(safe_y)
+    e_lo = jnp.floor(e_float)  # y <= 2^-e_lo, y >= 2^-(e_lo+1)
+    # midpoint in linear space between 2^-e_lo and 2^-(e_lo+1):
+    mid = 1.5 * jnp.exp2(-(e_lo + 1.0))
+    e_near = jnp.where(y >= mid, e_lo, e_lo + 1.0)
+    e_near = jnp.clip(e_near, 0.0, float(k_g))
+    # zero threshold: halfway to the smallest level
+    is_zero = (y < jnp.exp2(-float(k_g)) * 0.5) | (g == 0.0)
+    mag_code = (float(k_g) + 1.0 - e_near)  # in [1, k_g+1]
+    mag_code = jnp.where(is_zero, 0.0, mag_code)
+    sign_bit = (g < 0) & ~is_zero
+    bits = log_bits(k_g)
+    codes = mag_code.astype(jnp.int8)
+    codes = jnp.where(sign_bit, -codes, codes)  # signed int8 code, 0 == 0.0
+    return QTensor(codes=codes, scale=scale, kind="log", bits=bits, shape=tuple(g.shape))
+
+
+def log_decode(qt: QTensor, k_g: int) -> jax.Array:
+    c = qt.codes.astype(jnp.float32)
+    mag_code = jnp.abs(c)
+    e = (float(k_g) + 1.0) - mag_code  # exponent; mag_code==0 -> e=k_g+1 junk
+    val = jnp.exp2(-e)
+    val = jnp.where(mag_code == 0, 0.0, val)
+    return jnp.sign(c) * val * qt.scale
+
+
+# ---------------------------------------------------------------------------
+# Uniform weight quantizer (the paper's Q_x)
+# ---------------------------------------------------------------------------
+
+def uniform_encode(x: jax.Array, k_x: int, absolute: bool = True) -> QTensor:
+    """Uniform grid. `absolute=True` is the paper's Q_x: grid over [-0.5,0.5]
+    with spacing 2^-(k_x+1), no data-dependent scale (Assumption 3 is an
+    additive bound). `absolute=False` scales the grid by amax (robust mode
+    for big-model configs)."""
+    x = x.astype(jnp.float32)
+    if absolute:
+        scale = jnp.float32(0.5)
+    else:
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.where(amax > 0, amax, 1.0).astype(jnp.float32)
+    n = 2 ** k_x  # levels per side -> codes in [-n, n]
+    y = jnp.clip(x / scale, -1.0, 1.0)
+    codes = jnp.round(y * n).astype(jnp.int8 if k_x <= 6 else jnp.int32)
+    return QTensor(codes=codes, scale=scale, kind="uniform", bits=k_x + 1,
+                   shape=tuple(x.shape))
+
+
+def uniform_decode(qt: QTensor, k_x: int) -> jax.Array:
+    n = 2 ** k_x
+    return qt.codes.astype(jnp.float32) / n * qt.scale
+
+
+# ---------------------------------------------------------------------------
+# TernGrad (unbiased stochastic ternary) - baseline
+# ---------------------------------------------------------------------------
+
+def ternary_encode(g: jax.Array, key: jax.Array) -> QTensor:
+    g = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.where(amax > 0, amax, 1.0).astype(jnp.float32)
+    p = jnp.abs(g) / scale
+    b = jax.random.bernoulli(key, p).astype(jnp.int8)
+    codes = jnp.sign(g).astype(jnp.int8) * b
+    return QTensor(codes=codes, scale=scale, kind="ternary", bits=2,
+                   shape=tuple(g.shape))
+
+
+def ternary_decode(qt: QTensor) -> jax.Array:
+    return qt.codes.astype(jnp.float32) * qt.scale
+
+
+# ---------------------------------------------------------------------------
+# Blockwise sign compression (Zheng et al. '19) - baseline
+# ---------------------------------------------------------------------------
+
+def blockwise_encode(g: jax.Array, block: int = 256) -> QTensor:
+    g32 = g.astype(jnp.float32).reshape(-1)
+    numel = g32.shape[0]
+    pad = (-numel) % block
+    gp = jnp.pad(g32, (0, pad)).reshape(-1, block)
+    scale = jnp.mean(jnp.abs(gp), axis=1)  # per-block mean |g|
+    codes = jnp.sign(gp).astype(jnp.int8)
+    return QTensor(codes=codes, scale=scale, kind="blockwise", bits=1,
+                   shape=tuple(g.shape))
+
+
+def blockwise_decode(qt: QTensor) -> jax.Array:
+    vals = qt.codes.astype(jnp.float32) * qt.scale[:, None]
+    numel = int(np.prod(qt.shape))
+    return vals.reshape(-1)[:numel].reshape(qt.shape)
+
+
+# ---------------------------------------------------------------------------
+# Quantizer objects
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Quantizer:
+    """A named quantization operator Q(.)."""
+
+    name: str
+
+    def encode(self, x, *, key=None) -> QTensor:
+        raise NotImplementedError
+
+    def decode(self, qt: QTensor) -> jax.Array:
+        raise NotImplementedError
+
+    def __call__(self, x, *, key=None) -> jax.Array:
+        return self.decode(self.encode(x, key=key))
+
+    @property
+    def wire_bits(self) -> float:
+        """Average payload bits per element (excluding scales)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityQuantizer(Quantizer):
+    name: str = "identity"
+
+    def encode(self, x, *, key=None):
+        x = jnp.asarray(x)
+        return QTensor(codes=x, scale=jnp.float32(1.0), kind="identity",
+                       bits=x.dtype.itemsize * 8, shape=tuple(x.shape))
+
+    def decode(self, qt):
+        return qt.codes
+
+    def __call__(self, x, *, key=None):
+        return jnp.asarray(x)
+
+    @property
+    def wire_bits(self):
+        return 32.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LogGradQuantizer(Quantizer):
+    """The paper's Q_g."""
+
+    k_g: int = 6
+    name: str = "log"
+
+    def encode(self, x, *, key=None):
+        return log_encode(x, self.k_g)
+
+    def decode(self, qt):
+        return log_decode(qt, self.k_g)
+
+    @property
+    def wire_bits(self):
+        return float(log_bits(self.k_g))
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformWeightQuantizer(Quantizer):
+    """The paper's Q_x."""
+
+    k_x: int = 7
+    absolute: bool = True
+    name: str = "uniform"
+
+    def encode(self, x, *, key=None):
+        return uniform_encode(x, self.k_x, absolute=self.absolute)
+
+    def decode(self, qt):
+        return uniform_decode(qt, self.k_x)
+
+    @property
+    def wire_bits(self):
+        return float(self.k_x + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TernGradQuantizer(Quantizer):
+    name: str = "terngrad"
+
+    def encode(self, x, *, key=None):
+        assert key is not None, "TernGrad is stochastic; pass key="
+        return ternary_encode(x, key)
+
+    def decode(self, qt):
+        return ternary_decode(qt)
+
+    @property
+    def wire_bits(self):
+        return 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockwiseQuantizer(Quantizer):
+    block: int = 256
+    name: str = "blockwise"
+
+    def encode(self, x, *, key=None):
+        return blockwise_encode(x, self.block)
+
+    def decode(self, qt):
+        return blockwise_decode(qt)
+
+    @property
+    def wire_bits(self):
+        return 1.0 + 32.0 / self.block
+
+
+def get_quantizer(spec: Optional[str]) -> Quantizer:
+    """Parse a quantizer spec string: 'none', 'log:k', 'uniform:k',
+    'uniform_amax:k', 'terngrad', 'blockwise:b'."""
+    if spec is None or spec in ("none", "identity", "fp32"):
+        return IdentityQuantizer()
+    head, _, arg = spec.partition(":")
+    if head == "log":
+        return LogGradQuantizer(k_g=int(arg or 6))
+    if head == "uniform":
+        return UniformWeightQuantizer(k_x=int(arg or 7), absolute=True)
+    if head == "uniform_amax":
+        return UniformWeightQuantizer(k_x=int(arg or 7), absolute=False)
+    if head == "terngrad":
+        return TernGradQuantizer()
+    if head == "blockwise":
+        return BlockwiseQuantizer(block=int(arg or 256))
+    raise ValueError(f"unknown quantizer spec: {spec}")

@@ -1,0 +1,121 @@
+"""Deterministic synthetic data pipelines.
+
+No datasets ship offline, so the pipelines generate structured synthetic
+data with a fixed PRNG stream, sharding-aware and reproducible:
+
+  * `lm_batches` - token streams with Zipf-ish unigram structure plus
+    copy/induction patterns (so a real LM can actually reduce loss).
+  * `classification_batches` - Gaussian-cluster k-class problems (stand-in
+    for the paper's MNIST/CIFAR experiments; see benchmarks/).
+  * `vlm_batches` / `audio_batches` - embedding front-end stand-ins for
+    the llava/whisper input stubs.
+
+Every batch also carries `targets` (next token) and `mask`, pre-shifted so
+sequence sharding never needs cross-shard target access.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class LMDataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    copy_period: int = 64   # induction structure: token repeats each period
+
+
+def _zipf_probs(vocab: int, a: float) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = ranks ** (-a)
+    return (p / p.sum()).astype(np.float64)
+
+
+def lm_batches(cfg: LMDataConfig) -> Iterator[Dict[str, jnp.ndarray]]:
+    rng = np.random.default_rng(cfg.seed)
+    probs = _zipf_probs(cfg.vocab_size, cfg.zipf_a)
+    B, S, P = cfg.global_batch, cfg.seq_len, cfg.copy_period
+    while True:
+        toks = rng.choice(cfg.vocab_size, size=(B, S + 1), p=probs)
+        # induction heads: second half of each period copies the first
+        half = P // 2
+        for start in range(0, S + 1 - P, P):
+            toks[:, start + half:start + P] = toks[:, start:start + half]
+        toks = toks.astype(np.int32)
+        yield {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "targets": jnp.asarray(toks[:, 1:]),
+            "mask": jnp.ones((B, S), jnp.float32),
+        }
+
+
+def batch_for_model(mcfg: ModelConfig, seq_len: int, global_batch: int,
+                    seed: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Model-aware synthetic batches (handles the stubbed frontends)."""
+    base = lm_batches(LMDataConfig(vocab_size=mcfg.vocab_size,
+                                   seq_len=seq_len,
+                                   global_batch=global_batch, seed=seed))
+    rng = np.random.default_rng(seed + 1)
+    for b in base:
+        if mcfg.input_mode == "embeddings":
+            b = dict(b)
+            b.pop("tokens")
+            b["embeds"] = jnp.asarray(rng.normal(
+                size=(global_batch, seq_len, mcfg.d_model),
+                scale=0.7).astype(np.float32))
+        elif mcfg.input_mode == "audio+tokens":
+            b = dict(b)
+            b["audio"] = jnp.asarray(rng.normal(
+                size=(global_batch, mcfg.encoder_seq, mcfg.d_model),
+                scale=0.7).astype(np.float32))
+        yield b
+
+
+@dataclasses.dataclass
+class ClsDataConfig:
+    # defaults tuned so full-precision 8-worker Adam lands ~60-70% test
+    # accuracy in a few hundred steps - the regime where the paper's
+    # method comparisons (Tables 2-3) actually differentiate
+    n_features: int = 32
+    n_classes: int = 50
+    n_train: int = 8192
+    n_test: int = 2048
+    cluster_std: float = 2.2
+    seed: int = 0
+
+
+def classification_dataset(cfg: ClsDataConfig):
+    """Gaussian clusters with class-dependent low-rank structure."""
+    rng = np.random.default_rng(cfg.seed)
+    centers = rng.normal(size=(cfg.n_classes, cfg.n_features)) * 1.5
+    mix = rng.normal(size=(cfg.n_features, cfg.n_features)) / np.sqrt(
+        cfg.n_features)
+
+    def sample(n):
+        y = rng.integers(0, cfg.n_classes, size=n)
+        x = centers[y] + rng.normal(size=(n, cfg.n_features)) * cfg.cluster_std
+        x = np.tanh(x @ mix)  # nonconvex twist
+        return x.astype(np.float32), y.astype(np.int32)
+
+    xtr, ytr = sample(cfg.n_train)
+    xte, yte = sample(cfg.n_test)
+    return (jnp.asarray(xtr), jnp.asarray(ytr),
+            jnp.asarray(xte), jnp.asarray(yte))
+
+
+def classification_batches(x, y, batch: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    while True:
+        idx = rng.choice(n, size=batch, replace=False)
+        yield x[idx], y[idx]

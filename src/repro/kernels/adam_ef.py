@@ -1,0 +1,97 @@
+"""Fused Adam+EF worker-step kernel (Algorithm 3 lines 4-7, minus comm).
+
+Two Pallas passes over the parameter shard:
+
+  pass A (`adam_moments`): one streamed read of (g, m, v, e), one write of
+      (m', v', Delta+e) plus per-block amax partials -> the scale for Q_g.
+      Naively this is 6 separate elementwise XLA ops with ~10 HBM
+      round-trips; the fusion does 4 reads + 3 writes.
+  pass B (`ef_quantize`): reads Delta+e, writes int8 codes and the new
+      error-feedback residual e' = (Delta+e) - deq(codes).
+
+Scalars (alpha_t, beta, theta_t, eps) arrive as a (4,) f32 operand broadcast
+to every grid step (index_map pins block 0), which keeps them in SMEM on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quantize import BLOCK_ROWS, LANES
+
+
+def _moments_kernel(g_ref, m_ref, v_ref, e_ref, hp_ref,
+                    m_out, v_out, de_out, amax_out):
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    v = v_ref[...]
+    e = e_ref[...]
+    alpha_t, beta, theta_t, eps = hp_ref[0], hp_ref[1], hp_ref[2], hp_ref[3]
+    v_new = theta_t * v + (1.0 - theta_t) * g * g
+    m_new = beta * m + (1.0 - beta) * g
+    de = alpha_t * m_new * jax.lax.rsqrt(v_new + eps) + e
+    m_out[...] = m_new
+    v_out[...] = v_new
+    de_out[...] = de
+    amax_out[0] = jnp.max(jnp.abs(de))
+
+
+def adam_moments_pallas(g2d, m2d, v2d, e2d, hp, *, interpret: bool):
+    """hp: (4,) f32 = [alpha_t, beta, theta_t, eps]."""
+    rows = g2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    blk = lambda: pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    m_new, v_new, de, partials = pl.pallas_call(
+        _moments_kernel,
+        grid=(grid,),
+        in_specs=[blk(), blk(), blk(), blk(),
+                  pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=[blk(), blk(), blk(), pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g2d, m2d, v2d, e2d, hp)
+    return m_new, v_new, de, jnp.max(partials)
+
+
+def _ef_quantize_kernel(de_ref, scale_ref, codes_ref, e_out, *, k_g: int):
+    de = de_ref[...]
+    s = jnp.maximum(scale_ref[0], 1e-30)
+    y = jnp.abs(de) / s
+    safe_y = jnp.where(y > 0, y, 1.0)
+    e_lo = jnp.floor(-jnp.log2(safe_y))
+    mid = 1.5 * jnp.exp2(-(e_lo + 1.0))
+    e_near = jnp.where(y >= mid, e_lo, e_lo + 1.0)
+    e_near = jnp.clip(e_near, 0.0, float(k_g))
+    is_zero = (y < jnp.exp2(-float(k_g)) * 0.5) | (de == 0.0)
+    mag = jnp.where(is_zero, 0.0, float(k_g) + 1.0 - e_near)
+    codes = jnp.where(de < 0, -mag, mag)
+    # dequantize in-register for the EF residual
+    deq_mag = jnp.where(mag == 0, 0.0, jnp.exp2(mag - (float(k_g) + 1.0)))
+    deq = jnp.sign(codes) * deq_mag * scale_ref[0]
+    codes_ref[...] = codes.astype(jnp.int8)
+    e_out[...] = de - deq
+
+
+def ef_quantize_pallas(de2d, scale, k_g: int, *, interpret: bool):
+    rows = de2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    blk = lambda: pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_ef_quantize_kernel, k_g=k_g),
+        grid=(grid,),
+        in_specs=[blk(), pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[blk(), blk()],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.int8),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(de2d, scale.reshape(1))

@@ -1,0 +1,116 @@
+"""Pallas TPU flash attention (forward) for the serving/prefill hot path.
+
+Online-softmax tiling: queries blocked (BLOCK_Q, head_dim) in VMEM, K/V
+streamed in (BLOCK_K, head_dim) tiles; running (max, sum, acc) carried in
+VREGs so the S x S score matrix never materializes in HBM. Heads ride the
+grid; GQA handled by mapping each q-head block to its kv-head tile via the
+BlockSpec index map.
+
+Forward-only by design: training attention goes through the jnp path
+(layers.attention) where XLA's remat handles the backward; this kernel is
+the inference prefill hot spot (no bwd needed). Supports causal masking,
+sliding windows, and gemma-style logit softcap. Validated against
+ref.flash_attention_ref in interpret mode (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, seq_kv: int,
+                      causal: bool, window: int, softcap, sm_scale: float,
+                      q_offset: int):
+    # q_ref: (BLOCK_Q, hd); k_ref/v_ref: (seq_kv, hd) - streamed via fori
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * sm_scale
+    hd = q.shape[-1]
+
+    m0 = jnp.full((BLOCK_Q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((BLOCK_Q,), jnp.float32)
+    acc0 = jnp.zeros((BLOCK_Q, hd), jnp.float32)
+    q_pos = q_offset + qi * BLOCK_Q + jnp.arange(BLOCK_Q)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(k_ref[0], (kb * BLOCK_K, 0),
+                                  (BLOCK_K, hd)).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(v_ref[0], (kb * BLOCK_K, 0),
+                                  (BLOCK_K, hd)).astype(jnp.float32)
+        s = q @ k.T                                    # (BQ, BK)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kv_pos = kb * BLOCK_K + jnp.arange(BLOCK_K)
+        mask = jnp.ones((BLOCK_Q, BLOCK_K), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    nkb = seq_kv // BLOCK_K
+    if causal:
+        # only stream kv blocks that can be visible to this q block
+        last = (q_offset + (qi + 1) * BLOCK_Q + BLOCK_K - 1) // BLOCK_K
+        nkb_eff = jnp.minimum(nkb, last)
+    else:
+        nkb_eff = nkb
+    m, l, acc = jax.lax.fori_loop(0, nkb_eff, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap=None, q_offset: int = 0,
+                    interpret=None) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, K, hd) with H % K == 0.
+
+    Sq % BLOCK_Q == 0 and Skv % BLOCK_K == 0 (pad upstream).
+    Returns (B, Sq, H, hd) in q.dtype.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    rep = H // K
+    sm_scale = 1.0 / np.sqrt(hd)
+
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * K, Skv, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * K, Skv, hd)
+
+    kern = functools.partial(
+        _flash_fwd_kernel, seq_kv=Skv, causal=causal, window=int(window),
+        softcap=softcap, sm_scale=sm_scale, q_offset=q_offset)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * H, Sq // BLOCK_Q),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_Q, hd), lambda h, i: (h, i, 0)),
+            # GQA: q head h reads kv head h // rep of batch h // H
+            pl.BlockSpec((1, Skv, hd),
+                         lambda h, i: ((h // (H)) * K + (h % H) // rep,
+                                       0, 0)),
+            pl.BlockSpec((1, Skv, hd),
+                         lambda h, i: ((h // (H)) * K + (h % H) // rep,
+                                       0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_Q, hd), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

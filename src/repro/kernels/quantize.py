@@ -1,0 +1,150 @@
+"""Pallas TPU kernels: amax reduction + log/uniform grid quantization.
+
+TPU adaptation notes (vs the paper's CUDA-free formulation):
+  * These are VPU (vector unit) kernels - no MXU involvement. Blocks are
+    (BLOCK_ROWS, 128): the last dim matches the 128-lane VREG layout, rows
+    a multiple of 8 (f32 sublane) so every load is a full tile.
+  * Two-pass scheme: pass 1 tiles the tensor and emits one partial amax per
+    grid step into SMEM-resident (grid,) vector; the tiny final max happens
+    in XLA. Pass 2 re-streams the tensor and writes int8 codes. This is the
+    standard TPU pattern for data-dependent scales (one HBM round-trip per
+    pass; fusing the passes would require keeping the whole tensor in VMEM).
+  * exp2/log2 are VPU-native (transcendental unit), so the log-grid math
+    runs at full vector throughput.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _amax_kernel(x_ref, o_ref):
+    o_ref[0] = jnp.max(jnp.abs(x_ref[...].astype(jnp.float32)))
+
+
+def amax_pallas(x2d: jax.Array, *, interpret: bool) -> jax.Array:
+    """Per-block amax -> (grid,) partials. x2d: (R, 128), R % BLOCK_ROWS == 0."""
+    rows = x2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    partials = pl.pallas_call(
+        _amax_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid,), jnp.float32),
+        interpret=interpret,
+    )(x2d)
+    return jnp.max(partials)
+
+
+def _log_quantize_kernel(x_ref, scale_ref, codes_ref, *, k_g: int):
+    x = x_ref[...].astype(jnp.float32)
+    s = jnp.maximum(scale_ref[0], 1e-30)
+    y = jnp.abs(x) / s
+    safe_y = jnp.where(y > 0, y, 1.0)
+    e_lo = jnp.floor(-jnp.log2(safe_y))
+    mid = 1.5 * jnp.exp2(-(e_lo + 1.0))
+    e_near = jnp.where(y >= mid, e_lo, e_lo + 1.0)
+    e_near = jnp.clip(e_near, 0.0, float(k_g))
+    is_zero = (y < jnp.exp2(-float(k_g)) * 0.5) | (x == 0.0)
+    mag = jnp.where(is_zero, 0.0, float(k_g) + 1.0 - e_near)
+    codes_ref[...] = jnp.where(x < 0, -mag, mag).astype(jnp.int8)
+
+
+def log_quantize_pallas(x2d: jax.Array, scale: jax.Array, k_g: int,
+                        *, interpret: bool) -> jax.Array:
+    rows = x2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    return pl.pallas_call(
+        functools.partial(_log_quantize_kernel, k_g=k_g),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int8),
+        interpret=interpret,
+    )(x2d, scale.reshape(1))
+
+
+def _log_dequantize_kernel(codes_ref, scale_ref, o_ref, *, k_g: int,
+                           out_dtype):
+    c = codes_ref[...].astype(jnp.float32)
+    mag = jnp.abs(c)
+    val = jnp.exp2(mag - (float(k_g) + 1.0))
+    val = jnp.where(mag == 0, 0.0, val)
+    o_ref[...] = (jnp.sign(c) * val * scale_ref[0]).astype(out_dtype)
+
+
+def log_dequantize_pallas(codes2d: jax.Array, scale: jax.Array, k_g: int,
+                          *, out_dtype=jnp.float32, interpret: bool) -> jax.Array:
+    rows = codes2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    return pl.pallas_call(
+        functools.partial(_log_dequantize_kernel, k_g=k_g, out_dtype=out_dtype),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), out_dtype),
+        interpret=interpret,
+    )(codes2d, scale.reshape(1))
+
+
+def _uniform_quantize_kernel(x_ref, scale_ref, codes_ref, *, k_x: int):
+    n = float(2 ** k_x)
+    y = jnp.clip(x_ref[...].astype(jnp.float32)
+                 / jnp.maximum(scale_ref[0], 1e-30), -1.0, 1.0)
+    codes_ref[...] = jnp.round(y * n).astype(jnp.int8)
+
+
+def uniform_quantize_pallas(x2d: jax.Array, scale: jax.Array, k_x: int,
+                            *, interpret: bool) -> jax.Array:
+    rows = x2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    return pl.pallas_call(
+        functools.partial(_uniform_quantize_kernel, k_x=k_x),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int8),
+        interpret=interpret,
+    )(x2d, scale.reshape(1))
+
+
+def _uniform_dequantize_kernel(codes_ref, scale_ref, o_ref, *, k_x: int,
+                               out_dtype):
+    n = float(2 ** k_x)
+    o_ref[...] = (codes_ref[...].astype(jnp.float32) / n
+                  * scale_ref[0]).astype(out_dtype)
+
+
+def uniform_dequantize_pallas(codes2d: jax.Array, scale: jax.Array, k_x: int,
+                              *, out_dtype=jnp.float32,
+                              interpret: bool) -> jax.Array:
+    rows = codes2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    return pl.pallas_call(
+        functools.partial(_uniform_dequantize_kernel, k_x=k_x,
+                          out_dtype=out_dtype),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), out_dtype),
+        interpret=interpret,
+    )(codes2d, scale.reshape(1))

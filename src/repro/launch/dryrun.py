@@ -1,0 +1,467 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against placeholder devices and extract the roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+
+The XLA_FLAGS line above MUST run before any jax import: jax locks the
+device count at first initialization. (setdefault so the test harness can
+run a reduced 8-device pass.)
+
+Per combination this records:
+  * compiled.memory_analysis()  - bytes per device (proves it fits)
+  * compiled.cost_analysis()    - per-device HLO FLOPs / bytes. XLA counts
+    a while-loop (scan-over-layers) body ONCE, so totals are calibrated by
+    additionally compiling fully-UNROLLED 1-layer and 2-layer variants:
+    metric(L) = entry + L*body exactly (the body HLO is layer-independent;
+    per-layer heterogeneity rides in scanned flag arrays).
+  * collective bytes parsed from the (unrolled-calibrated) compiled HLO,
+    with a ring cost model per op kind.
+  * the three roofline terms + dominant bottleneck (v5e hardware model).
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# HLO collective parsing
+# --------------------------------------------------------------------------
+
+_STABLE_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+                       "i64": 8, "ui64": 8, "i32": 4, "ui32": 4,
+                       "i16": 2, "ui16": 2, "i8": 1, "ui8": 1, "i1": 1,
+                       "f8E4M3FN": 1, "f8E5M2": 1}
+
+_ST_OP_RE = re.compile(r'"stablehlo\.(all_gather|all_to_all|reduce_scatter'
+                       r'|all_reduce|collective_permute)"')
+_ST_RES_RE = re.compile(r"->\s*(\(?tensor<[^)]*?)(?:\s*$|\s*\()")
+_ST_TENSOR_RE = re.compile(r"tensor<([0-9x]*)x?([a-z][a-zA-Z0-9]*)>")
+_ST_GROUPS_RE = re.compile(r"replica_groups\s*=\s*dense<[^>]*>\s*:\s*"
+                           r"tensor<(\d+)x(\d+)xi64>")
+
+
+def _st_result_bytes(line: str) -> int:
+    m = _ST_RES_RE.search(line)
+    seg = m.group(1) if m else line[line.rfind("->"):]
+    total = 0
+    for dims, dt in _ST_TENSOR_RE.findall(seg):
+        if dt not in _STABLE_DTYPE_BYTES:
+            continue
+        numel = 1
+        for d in dims.split("x"):
+            if d:
+                numel *= int(d)
+        total += numel * _STABLE_DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(stablehlo_text: str) -> Dict:
+    """Sum modeled per-device wire bytes of every collective in the LOWERED
+    StableHLO (original dtypes - the compiled CPU module upcasts bf16 to
+    f32, which would inflate wire bytes 2x vs the TPU target).
+
+    jax emits rematerialized scan bodies as shared `closed_call` functions
+    invoked once per (unrolled) layer, so op counts are propagated through
+    the call graph with multiplicities.
+
+    Ring cost model per op (n = group size, S = result bytes):
+      all_gather: S*(n-1)/n ; reduce_scatter: S*(n-1) (input = S*n);
+      all_reduce: 2*S*(n-1)/n ; all_to_all: S*(n-1)/n ;
+      collective_permute: S.
+    """
+    names = {"all_gather": "all-gather", "all_reduce": "all-reduce",
+             "reduce_scatter": "reduce-scatter", "all_to_all": "all-to-all",
+             "collective_permute": "collective-permute"}
+    kinds = tuple(names.values())
+    funcs: Dict[str, dict] = {}
+    cur = None
+    pending = None
+    func_re = re.compile(r"func\.func\s+(?:private\s+|public\s+)?@([\w.$-]+)")
+    call_re = re.compile(r"call\s+@([\w.$-]+)")
+    for line in stablehlo_text.splitlines():
+        fm = func_re.search(line)
+        if fm:
+            cur = fm.group(1)
+            funcs[cur] = {"events": [], "calls": {}}
+            pending = None
+            continue
+        if cur is None:
+            continue
+        f = funcs[cur]
+        m = _ST_OP_RE.search(line)
+        if m:
+            kind = names[m.group(1)]
+            gm = _ST_GROUPS_RE.search(line)
+            n = int(gm.group(2)) if gm else 1
+            if "->" in line:
+                f["events"].append((kind, n, _st_result_bytes(line)))
+            else:
+                pending = (kind, n)
+        elif pending and "}) :" in line and "->" in line:
+            kind, n = pending
+            f["events"].append((kind, n, _st_result_bytes(line)))
+            pending = None
+        for callee in call_re.findall(line):
+            f["calls"][callee] = f["calls"].get(callee, 0) + 1
+
+    def event_bytes(kind, n, size):
+        if kind == "all-gather":
+            return size * (n - 1) / n
+        if kind == "reduce-scatter":
+            return size * (n - 1)
+        if kind == "all-reduce":
+            return 2 * size * (n - 1) / n
+        if kind == "all-to-all":
+            return size * (n - 1) / n
+        return size
+
+    memo: Dict[str, tuple] = {}
+
+    def totals(fname, stack=()):
+        if fname in memo:
+            return memo[fname]
+        if fname not in funcs or fname in stack:
+            return ({k: 0.0 for k in kinds}, {k: 0 for k in kinds})
+        agg = {k: 0.0 for k in kinds}
+        cnt = {k: 0 for k in kinds}
+        f = funcs[fname]
+        for kind, n, size in f["events"]:
+            agg[kind] += event_bytes(kind, n, size)
+            cnt[kind] += 1
+        for callee, times in f["calls"].items():
+            sub, subc = totals(callee, stack + (fname,))
+            for k in kinds:
+                agg[k] += times * sub[k]
+                cnt[k] += times * subc[k]
+        memo[fname] = (agg, cnt)
+        return memo[fname]
+
+    entry = "main" if "main" in funcs else (next(iter(funcs)) if funcs
+                                            else None)
+    agg, cnt = totals(entry) if entry else (
+        {k: 0.0 for k in kinds}, {k: 0 for k in kinds})
+    per_kind = dict(agg)
+    per_kind["total"] = sum(agg.values())
+    per_kind["counts"] = cnt
+    return per_kind
+
+
+# --------------------------------------------------------------------------
+# lowering one configuration
+# --------------------------------------------------------------------------
+
+def _batch_sds(cfg, gbatch, seq, enc_seq, sds, Wb):
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    fdt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    b = {}
+    if cfg.input_mode == "embeddings":
+        b["embeds"] = sds((gbatch, seq, cfg.d_model), fdt,
+                          P(Wb, "model", None))
+    else:
+        b["tokens"] = sds((gbatch, seq), jnp.int32, P(Wb, "model"))
+    if cfg.input_mode == "audio+tokens":
+        b["audio"] = sds((gbatch, enc_seq, cfg.d_model), fdt,
+                         P(Wb, "model", None))
+    b["targets"] = sds((gbatch, seq), jnp.int32, P(Wb, "model"))
+    b["mask"] = sds((gbatch, seq), jnp.float32, P(Wb, "model"))
+    return b
+
+
+def _lower_one(cfg, kind, mesh, gbatch, seq, enc_seq, W, batch_shardable,
+               train_overrides):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models.model import Model
+    from repro.dist.step import (make_train_step, make_serve_step,
+                                 TrainConfig, ServeConfig, _leaf_meta)
+
+    model = Model(cfg)
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    Nm = ms["model"]
+    Wb = W if batch_shardable else None
+
+    def sds(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    if kind == "train":
+        tc = TrainConfig(worker_axes=W, **(train_overrides or {}))
+        art = make_train_step(model, mesh, tc)
+        metas = _leaf_meta(art.layout, art.n_workers)
+        wdims = tuple(ms[a] for a in art.worker_axes)
+        spec = P(*art.worker_axes, "model", None)
+        mtree = jax.tree.map(
+            lambda l, m: sds(wdims + (Nm, m.c), jnp.float32, spec),
+            art.layout._leaves, metas)
+        ztree = jax.tree.map(
+            lambda l, m: sds(
+                wdims + (Nm, m.c if tc.mode == "dp_adam"
+                         else int(np.prod(m.shp))), jnp.float32, spec),
+            art.layout._leaves, metas)
+        state = {"master": mtree, "m": ztree, "v": ztree, "e": ztree,
+                 "count": jax.ShapeDtypeStruct((), jnp.int32)}
+        batch = _batch_sds(cfg, gbatch, seq, enc_seq, sds, Wb)
+        return jax.jit(art.step_fn).lower(state, batch)
+
+    if kind == "prefill":
+        sc = ServeConfig(worker_axes=W, batch_dim_shardable=batch_shardable)
+        step, pspecs, _ = make_serve_step(model, mesh, sc, kind="prefill")
+        pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        ptree = jax.tree.map(lambda l, s: sds(l.shape, jnp.float32, s),
+                             pshapes, pspecs)
+        batch = _batch_sds(cfg, gbatch, seq, enc_seq, sds, Wb)
+        return jax.jit(step).lower(ptree, batch)
+
+    # decode
+    sc = ServeConfig(worker_axes=W, batch_dim_shardable=batch_shardable)
+    step, pspecs, (ispecs, cspecs) = make_serve_step(model, mesh, sc,
+                                                     kind="decode")
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    ptree = jax.tree.map(lambda l, s: sds(l.shape, jnp.float32, s),
+                         pshapes, pspecs)
+    cshapes = jax.eval_shape(
+        lambda: Model(cfg).init_cache(gbatch, max_seq_local=seq,
+                                      encoder_seq_local=enc_seq))
+    ctree = jax.tree.map(lambda l, s: sds(l.shape, l.dtype, s),
+                         cshapes, cspecs)
+    if cfg.input_mode == "embeddings":
+        itree = {"embeds": sds((gbatch, 1, cfg.d_model), jnp.bfloat16
+                               if cfg.dtype == "bfloat16" else jnp.float32,
+                               ispecs["embeds"])}
+    else:
+        itree = {"token": sds((gbatch, 1), jnp.int32, ispecs["token"])}
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return jax.jit(step).lower(ptree, itree, ctree, pos)
+
+
+# --------------------------------------------------------------------------
+# dry-run driver
+# --------------------------------------------------------------------------
+
+def apply_model_overrides(cfg, overrides: Optional[dict]):
+    """dataclasses.replace on ModelConfig, with ssm./moe. nesting."""
+    if not overrides:
+        return cfg
+    top, ssm_o, moe_o = {}, {}, {}
+    for k, v in overrides.items():
+        if k.startswith("ssm."):
+            ssm_o[k[4:]] = v
+        elif k.startswith("moe."):
+            moe_o[k[4:]] = v
+        else:
+            top[k] = v
+    if ssm_o and cfg.ssm is not None:
+        top["ssm"] = dataclasses.replace(cfg.ssm, **ssm_o)
+    if moe_o and cfg.moe is not None:
+        top["moe"] = dataclasses.replace(cfg.moe, **moe_o)
+    return dataclasses.replace(cfg, **top)
+
+
+def build_and_compile(arch: str, shape_name: str, multi_pod: bool,
+                      mesh_override=None, smoke: bool = False,
+                      train_overrides: Optional[dict] = None,
+                      model_overrides: Optional[dict] = None,
+                      calibrate: bool = True) -> Dict:
+    import jax
+
+    from repro.configs import get_config, INPUT_SHAPES, shape_applicable
+    from repro.launch.mesh import (make_production_mesh, PEAK_FLOPS_BF16,
+                                   HBM_BW, ICI_BW_PER_LINK)
+
+    t_start = time.time()
+    cfg = apply_model_overrides(get_config(arch, smoke=smoke),
+                                model_overrides)
+    seq, gbatch, kind = INPUT_SHAPES[shape_name]
+    if smoke:
+        seq, gbatch = 64, 8
+    mesh = mesh_override if mesh_override is not None else \
+        make_production_mesh(multi_pod=multi_pod)
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_dev = int(np.prod(mesh.devices.shape))
+
+    if not shape_applicable(arch, shape_name):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "full-attention arch: long_500k needs "
+                          "sub-quadratic attention (DESIGN.md §5)"}
+
+    enc_seq = 0
+    if cfg.arch_type == "encdec":
+        enc_seq = cfg.encoder_seq if smoke else 1536  # 1500 padded /16
+
+    worker_axes = tuple(a for a in ("pod", "data") if a in ms)
+    W = worker_axes
+    batch_shardable = bool(W) and gbatch % int(
+        np.prod([ms[a] for a in W])) == 0
+
+    result = {"arch": arch, "shape": shape_name, "kind": kind,
+              "mesh": "x".join(str(s) for s in mesh.devices.shape),
+              "n_devices": n_dev, "skipped": False,
+              "seq": seq, "global_batch": gbatch}
+
+    lowered = _lower_one(cfg, kind, mesh, gbatch, seq, enc_seq, W,
+                         batch_shardable, train_overrides)
+    t_lower = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time()
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    coll_bytes = parse_collectives(lowered.as_text())["total"]
+    coll_detail = None
+
+    if calibrate:
+        pts = []
+        for L in (2, 3):
+            reps = {"n_layers": L, "scan_unroll": True}
+            if cfg.encoder_layers:
+                reps["encoder_layers"] = L
+            cfg_l = dataclasses.replace(cfg, **reps)
+            lw = _lower_one(cfg_l, kind, mesh, gbatch, seq, enc_seq, W,
+                            batch_shardable, train_overrides)
+            coll = parse_collectives(lw.as_text())
+            cp = lw.compile()
+            cal = cp.cost_analysis() or {}
+            pts.append((float(cal.get("flops", 0.0)),
+                        float(cal.get("bytes accessed", 0.0)),
+                        coll["total"], coll))
+        L_true = cfg.n_layers
+        L1 = 2
+        df = pts[1][0] - pts[0][0]
+        db = pts[1][1] - pts[0][1]
+        dc = pts[1][2] - pts[0][2]
+        flops = pts[0][0] + (L_true - L1) * df
+        bytes_acc = pts[0][1] + (L_true - L1) * db
+        coll_bytes = pts[0][2] + (L_true - L1) * dc
+        coll_detail = {
+            k: pts[0][3][k] + (L_true - L1) * (pts[1][3][k] - pts[0][3][k])
+            for k in ("all-gather", "all-reduce", "reduce-scatter",
+                      "all-to-all", "collective-permute")}
+    t_cal = time.time()
+
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_bytes / ICI_BW_PER_LINK
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    n_params = cfg.n_params()
+    n_active = cfg.n_active_params()
+    if kind == "train":
+        model_flops = 6 * n_active * gbatch * seq / n_dev
+    elif kind == "prefill":
+        model_flops = 2 * n_active * gbatch * seq / n_dev
+    else:
+        model_flops = 2 * n_active * gbatch / n_dev
+
+    result.update({
+        "lower_s": round(t_lower - t_start, 2),
+        "compile_s": round(t_compile - t_lower, 2),
+        "calibrate_s": round(t_cal - t_compile, 2),
+        "hlo_flops": flops, "hlo_bytes": bytes_acc,
+        "collective_bytes": coll_bytes,
+        "collectives": coll_detail,
+        "roofline": terms, "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / flops) if flops else None,
+        "n_params": n_params, "n_active_params": n_active,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+    })
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (test harness)")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--train-overrides", default=None,
+                    help="json dict of TrainConfig overrides")
+    ap.add_argument("--model-overrides", default=None,
+                    help='json dict, e.g. {"moe.dispatch":"sort"}')
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS, INPUT_SHAPES
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    overrides = json.loads(args.train_overrides) if args.train_overrides \
+        else None
+    m_overrides = json.loads(args.model_overrides) if args.model_overrides \
+        else None
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                mesh_override = None
+                if args.smoke:
+                    import jax
+                    mesh_override = (
+                        jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+                        if mp else jax.make_mesh((2, 2), ("data", "model")))
+                    tag = f"{arch} x {shape} x smoke-{'2x2x2' if mp else '2x2'}"
+                try:
+                    res = build_and_compile(
+                        arch, shape, mp, mesh_override=mesh_override,
+                        smoke=args.smoke, train_overrides=overrides,
+                        model_overrides=m_overrides,
+                        calibrate=not args.no_calibrate)
+                    res["multi_pod"] = mp
+                    if overrides:
+                        res["train_overrides"] = overrides
+                    if m_overrides:
+                        res["model_overrides"] = m_overrides
+                    if res.get("skipped"):
+                        print(f"[SKIP] {tag}: {res['reason']}", flush=True)
+                    else:
+                        r = res["roofline"]
+                        print(
+                            f"[OK] {tag}: flops={res['hlo_flops']:.3g} "
+                            f"bytes={res['hlo_bytes']:.3g} "
+                            f"coll={res['collective_bytes']:.3g} "
+                            f"bottleneck={res['bottleneck']} "
+                            f"(c={r['compute_s']:.4f}s m={r['memory_s']:.4f}s"
+                            f" x={r['collective_s']:.4f}s) "
+                            f"useful={res['useful_flops_ratio'] and round(res['useful_flops_ratio'], 3)} "
+                            f"compile={res['compile_s']}s", flush=True)
+                except Exception as ex:  # noqa
+                    res = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "error": f"{type(ex).__name__}: {ex}"}
+                    print(f"[FAIL] {tag}: {res['error']}", flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(res) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh builders.
+
+A FUNCTION (not module-level state) so importing never touches jax device
+initialization. Production target: TPU v5e, 16x16 = 256 chips per pod;
+multi-pod adds a leading 'pod' axis (2 pods = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Mesh over however many local devices exist (tests/examples)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# v5e hardware model for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW_PER_LINK = 50e9        # B/s per link

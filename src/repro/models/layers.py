@@ -1,0 +1,542 @@
+"""Building-block layers, written to be context-parallel ("cp") native.
+
+Every function takes a `ShardCtx`. With `ctx.cp_axis=None` the code is purely
+local (single-device smoke tests). Under `shard_map` with `cp_axis='model'`,
+the sequence dimension is sharded and the layers use explicit collectives:
+
+  * attention      - all_gather of K/V over the cp axis (GQA keeps it small)
+  * decode attn    - KV cache sharded along sequence; flash-style partial
+                     softmax per shard + logsumexp combine via tiny psum
+  * SSD (mamba2)   - chunk-local work + linear cross-device state correction
+  * causal conv1d  - halo exchange of d_conv-1 tokens via ppermute
+  * MoE            - experts sharded over the cp axis; token routing via
+                     all_to_all (the cp token partition IS the EP dispatch
+                     partition)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """How the current trace is sharded (static)."""
+    cp_axis: Optional[str] = None    # mesh axis for sequence/expert sharding
+    cp_size: int = 1
+    dp_axes: tuple = ()              # data-parallel axes (loss reduction)
+    # FSDP hook: callable(subtree, kind) with kind in
+    # ("static", "blocks", "enc_blocks"); gathers weight shards over cp_axis
+    # (plain bf16 or int8 Q_x - see repro.dist.collectives). None = identity.
+    param_gather: Optional[object] = None
+
+    @property
+    def sharded(self) -> bool:
+        return self.cp_axis is not None and self.cp_size > 1
+
+    def cp_index(self):
+        if not self.sharded:
+            return 0
+        return jax.lax.axis_index(self.cp_axis)
+
+    def gather(self, subtree, kind: str):
+        if self.param_gather is None:
+            return subtree
+        return self.param_gather(subtree, kind)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"], p["b"], cfg.norm_eps)
+    return rmsnorm(x, p["w"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: (S,) int32 global positions.
+    theta may be a traced per-layer scalar (gemma3 mixes 10k/1M bases)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    theta = jnp.asarray(theta, jnp.float32)
+    inv_freq = jnp.exp(-jnp.log(theta) * 2.0
+                       * jnp.arange(half, dtype=jnp.float32) / hd)
+    ang = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]  # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(S, d, offset=0):
+    # offset may be traced (decode position)
+    pos = (jnp.asarray(offset, jnp.float32)
+           + jnp.arange(S, dtype=jnp.float32))[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (training / prefill): local queries vs gathered K/V
+# ---------------------------------------------------------------------------
+
+def _softcap(s, cap):
+    if cap is None:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+def attention(q, k, v, *, q_pos, causal=True, window=0, softcap=None,
+              meta_tokens=0, ctx: ShardCtx = ShardCtx(), kv_pos0_full=0):
+    """q: (B,Sq,H,hd) local; k,v: (B,Skv,K,hd) local (sequence-sharded iff ctx).
+
+    q_pos: (Sq,) global positions of the local queries.
+    window=0 -> full attention; window>0 -> sliding window of that size.
+    """
+    B, Sq, H, hd = q.shape
+    if ctx.sharded:
+        k = jax.lax.all_gather(k, ctx.cp_axis, axis=1, tiled=True)
+        v = jax.lax.all_gather(v, ctx.cp_axis, axis=1, tiled=True)
+    Skv = k.shape[1]
+    K = k.shape[2]
+    rep = H // K
+    qr = q.reshape(B, Sq, K, rep, hd)
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qr, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(hd)
+    scores = _softcap(scores, softcap)
+    kv_pos = kv_pos0_full + jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    # `window` may be a traced per-layer flag (0 = full attention)
+    win = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window, jnp.int32),
+                    jnp.int32(2 ** 30))
+    wmask = kv_pos[None, :] > q_pos[:, None] - win
+    if meta_tokens:
+        wmask |= kv_pos[None, :] < meta_tokens
+    mask &= wmask
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def decode_attention(q, k_cache, v_cache, *, total_len, window=0,
+                     softcap=None, q_pos, ctx: ShardCtx = ShardCtx(),
+                     meta_kv=None):
+    """Single-token decode against a sequence-sharded KV cache.
+
+    q: (B,1,H,hd); k_cache/v_cache: (B,S_loc,K,hd) covering global positions
+    [cp_index*S_loc, ...). total_len: #valid cache entries (int scalar);
+    q_pos: scalar global position of the query token.
+
+    Computes flash-style partial softmax per shard and combines across the
+    cp axis with (logsumexp, weighted-sum) psums - bytes moved per step are
+    O(B*H*hd), independent of sequence length.
+
+    meta_kv: optional (mk, mv) learned prefix of shape (B,M,K,hd); always
+    visible. Under cp it is counted on shard 0 only (so the logsumexp
+    combine sees it exactly once).
+    """
+    B, _, H, hd = q.shape
+    S_loc, K = k_cache.shape[1], k_cache.shape[2]
+    rep = H // K
+    pos0 = ctx.cp_index() * S_loc
+    kv_pos = pos0 + jnp.arange(S_loc)
+    valid = kv_pos < total_len
+    win = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window, jnp.int32),
+                    jnp.int32(2 ** 30))
+    valid &= kv_pos > q_pos - win
+    if meta_kv is not None:
+        mk, mv = meta_kv
+        M = mk.shape[1]
+        k_cache = jnp.concatenate([mk.astype(k_cache.dtype), k_cache], axis=1)
+        v_cache = jnp.concatenate([mv.astype(v_cache.dtype), v_cache], axis=1)
+        meta_valid = jnp.broadcast_to(ctx.cp_index() == 0, (M,))
+        valid = jnp.concatenate([meta_valid, valid])
+        S_loc += M
+    qr = q.reshape(B, K, rep, hd)
+    scores = jnp.einsum("bkrd,bskd->bkrs", qr, k_cache,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    scores = _softcap(scores, softcap)
+    scores = jnp.where(valid[None, None, None], scores, -jnp.inf)
+    l_loc = jnp.max(scores, axis=-1)                      # (B,K,rep)
+    l_safe = jnp.where(jnp.isfinite(l_loc), l_loc, -1e30)
+    p = jnp.exp(scores - l_safe[..., None])
+    p = jnp.where(valid[None, None, None], p, 0.0)
+    denom = jnp.sum(p, axis=-1)                           # (B,K,rep)
+    o_un = jnp.einsum("bkrs,bskd->bkrd", p, v_cache.astype(jnp.float32))
+    if ctx.sharded:
+        l_max = jax.lax.pmax(l_safe, ctx.cp_axis)
+        w = jnp.exp(l_safe - l_max)
+        o = jax.lax.psum(o_un * w[..., None], ctx.cp_axis)
+        z = jax.lax.psum(denom * w, ctx.cp_axis)
+    else:
+        o, z = o_un, denom
+    out = o / jnp.maximum(z[..., None], 1e-30)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp(params, x, act="silu"):
+    dt = x.dtype
+    if act == "gelu":  # whisper: non-gated
+        h = jax.nn.gelu(x @ params["w_up"].astype(dt), approximate=True)
+        return h @ params["w_down"].astype(dt)
+    h = (jax.nn.silu(x @ params["w_gate"].astype(dt))
+         * (x @ params["w_up"].astype(dt)))
+    return h @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (shared + routed, einsum dispatch, optional EP a2a)
+# ---------------------------------------------------------------------------
+
+def moe(params, x, mcfg: MoEConfig, ctx: ShardCtx = ShardCtx()):
+    """x: (B,S,d). Experts in params are per-device shards (E_loc,...) when
+    ctx.sharded else the full set (E,...). Returns (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E = mcfg.n_experts
+    n_dev = ctx.cp_size if ctx.sharded else 1
+    E_loc = E // n_dev
+
+    logits = (xt @ params["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, mcfg.top_k)    # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E), axis=0)
+    aux = jnp.sum(me * ce) * E * mcfg.router_aux_weight
+
+    C = max(1, int(np.ceil(T * mcfg.top_k / E * mcfg.capacity_factor)))
+    if mcfg.dispatch == "sort":
+        xe, sort_aux = _moe_dispatch_sort(xt, gate_idx, gate_vals, E, C)
+    else:
+        # classic Switch one-hot dispatch: builds (T,k,E,C) intermediates
+        onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)     # (T,k,E)
+        flatoh = onehot.reshape(T * mcfg.top_k, E)
+        pos = jnp.cumsum(flatoh, axis=0) * flatoh - 1             # (T*k, E)
+        pos = pos.reshape(T, mcfg.top_k, E)
+        in_cap = (pos >= 0) & (pos < C)
+        disp = (jax.nn.one_hot(pos, C, dtype=x.dtype)
+                * in_cap[..., None].astype(x.dtype)
+                * onehot[..., None].astype(x.dtype))              # (T,k,E,C)
+        comb = jnp.sum(disp * gate_vals.astype(x.dtype)[:, :, None, None],
+                       axis=1)                                    # (T,E,C)
+        xe = jnp.einsum("td,tkec->ecd", xt, disp)                 # (E,C,d)
+    if ctx.sharded:
+        # send expert-chunks to their owners; receive every device's tokens
+        # for the local experts: (E, C, d) -> (E_loc, n_dev*C, d)
+        xe = jax.lax.all_to_all(xe, ctx.cp_axis, split_axis=0, concat_axis=1,
+                                tiled=True)
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(xe.dtype))
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", xe,
+                                    params["w_up"].astype(xe.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(xe.dtype))
+    if ctx.sharded:
+        # (E_loc, n_dev*C, d) -> (E, C, d)
+        ye = jax.lax.all_to_all(ye, ctx.cp_axis, split_axis=1, concat_axis=0,
+                                tiled=True)
+    if mcfg.dispatch == "sort":
+        y = _moe_combine_sort(ye, sort_aux, T, xt.dtype)
+    else:
+        y = jnp.einsum("ecd,tec->td", ye, comb)
+
+    if mcfg.n_shared:
+        y = y + mlp(params["shared"], xt)
+    return y.reshape(B, S, d), aux
+
+
+def _moe_dispatch_sort(xt, gate_idx, gate_vals, E, C):
+    """argsort/scatter dispatch: no (T,E,C) one-hot tensors.
+
+    Drop order matches the einsum path exactly: stable sort by expert keeps
+    token order, so capacity evicts the same late tokens.
+    """
+    T, k = gate_idx.shape
+    d = xt.shape[1]
+    flat_e = gate_idx.reshape(-1)                      # (T*k,)
+    tok = jnp.arange(T * k, dtype=jnp.int32) // k      # owning token
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    st = tok[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * k, dtype=jnp.int32) - starts[se]
+    keep = rank < C
+    dest = se * C + jnp.minimum(rank, C - 1)
+    gv = gate_vals.reshape(-1)[order]
+    contrib = jnp.where(keep[:, None], xt[st], jnp.zeros((1, d), xt.dtype))
+    xbuf = jnp.zeros((E * C, d), xt.dtype).at[dest].add(contrib)
+    return xbuf.reshape(E, C, d), (st, dest, keep, gv)
+
+
+def _moe_combine_sort(ye, aux, T, dtype):
+    st, dest, keep, gv = aux
+    d = ye.shape[-1]
+    w = (gv * keep.astype(gv.dtype)).astype(dtype)
+    vals = ye.reshape(-1, d)[dest] * w[:, None]
+    return jnp.zeros((T, d), dtype).at[st].add(vals)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality), chunked, cp-aware
+# ---------------------------------------------------------------------------
+
+def _segsum(a):
+    """a: (..., l). Returns (..., l, l) lower-tri segment sums:
+    out[..., i, j] = sum_{k=j+1..i} a[...,k] for i>=j, -inf above diag."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(xdt, a_bar, Bm, Cm, *, chunk, ctx: ShardCtx = ShardCtx(),
+                initial_state=None, cp_exchange: str = "gather",
+                cp_wire_dtype=jnp.float32):
+    """Chunked SSD scan.
+
+    xdt:  (B, S, H, P)   inputs pre-multiplied by dt
+    a_bar:(B, S, H)      log-decay per token (dt * A, negative)
+    Bm,Cm:(B, S, G, N)   input/output projections (G groups broadcast to H)
+    Returns y (B,S,H,P) and final_state (B,H,P,N).
+
+    Under cp the sequence is device-sharded; the inter-chunk recurrence is
+    linear in the initial state, so each device runs its local scan from
+    zero and adds `initial_state * decay` correction terms computed from an
+    all_gather of per-device (total_decay, final_state) summaries.
+    """
+    B, S, H, P = xdt.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    reph = H // G
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xc = xdt.reshape(B, nc, chunk, H, P).astype(f32)
+    ac = a_bar.reshape(B, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(B, nc, chunk, G, N).astype(f32)
+    Cc = Cm.reshape(B, nc, chunk, G, N).astype(f32)
+    Bh = jnp.repeat(Bc, reph, axis=3)  # (B,nc,l,H,N)
+    Ch = jnp.repeat(Cc, reph, axis=3)
+
+    acum = jnp.cumsum(ac, axis=2)                       # (B,nc,l,H)
+    # intra-chunk (diagonal) term
+    Lmat = jnp.exp(_segsum(jnp.swapaxes(ac, 2, 3)))     # (B,nc,H,l,l)
+    Y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp", Ch, Bh, Lmat, xc)
+
+    # per-chunk output states
+    decay_states = jnp.exp(acum[:, :, -1:, :] - acum)   # (B,nc,l,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bh, decay_states, xc)
+    chunk_decay = jnp.exp(acum[:, :, -1, :])            # (B,nc,H)
+
+    # inter-chunk recurrence: prefix (exclusive) states
+    def comb(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dfx, sfx = jax.lax.associative_scan(comb, (chunk_decay, states), axis=1)
+    # exclusive prefix: shift right by one chunk
+    prev = jnp.concatenate(
+        [jnp.zeros_like(sfx[:, :1]), sfx[:, :-1]], axis=1)  # (B,nc,H,P,N)
+    local_total_decay = dfx[:, -1]                          # (B,H)
+    local_final = sfx[:, -1]                                # (B,H,P,N)
+
+    if ctx.sharded:
+        ndev = ctx.cp_size
+        idx = jax.lax.axis_index(ctx.cp_axis)
+        if cp_exchange == "ladder":
+            # Hillis-Steele prefix scan over the cp axis via ppermute:
+            # (log2(n)+1) hops x state bytes instead of n x (all_gather).
+            # The wire optionally carries bf16 (re-rounded per hop).
+            wd = jnp.dtype(cp_wire_dtype)
+            acc_d, acc_s = local_total_decay, local_final
+            hop = 1
+            while hop < ndev:
+                perm = [(i, i + hop) for i in range(ndev - hop)]
+                rd = jax.lax.ppermute(acc_d.astype(wd), ctx.cp_axis,
+                                      perm).astype(acc_d.dtype)
+                rs = jax.lax.ppermute(acc_s.astype(wd), ctx.cp_axis,
+                                      perm).astype(acc_s.dtype)
+                take = idx >= hop
+                # incoming segment precedes ours: (d_in, s_in) o (d, s)
+                acc_s = jnp.where(take, rs * acc_d[..., None, None] + acc_s,
+                                  acc_s)
+                acc_d = jnp.where(take, rd * acc_d, acc_d)
+                hop *= 2
+            shift = [(i, i + 1) for i in range(ndev - 1)]
+            inc_state = jax.lax.ppermute(acc_s.astype(wd), ctx.cp_axis,
+                                         shift).astype(acc_s.dtype)
+            inc_decay = jnp.where(
+                idx == 0, jnp.ones_like(acc_d),
+                jax.lax.ppermute(acc_d.astype(wd), ctx.cp_axis,
+                                 shift).astype(acc_d.dtype))
+            # nameable for remat policy "ssd_state": saving these skips the
+            # whole ladder replay in the backward pass
+            from jax.ad_checkpoint import checkpoint_name
+            inc_state = checkpoint_name(inc_state, "ssd_prefix_state")
+            inc_decay = checkpoint_name(inc_decay, "ssd_prefix_state")
+        else:
+            # reference: all_gather every device's (decay, state) summary
+            gd = jax.lax.all_gather(local_total_decay, ctx.cp_axis)
+            gs = jax.lax.all_gather(local_final, ctx.cp_axis)
+
+            def dev_comb(c, i):
+                d_acc, s_acc = c
+                take = i < idx
+                d_i = jnp.where(take, gd[i], jnp.ones_like(gd[i]))
+                s_i = jnp.where(take, gs[i], jnp.zeros_like(gs[i]))
+                return (d_acc * d_i, s_acc * d_i[..., None, None] + s_i), None
+
+            (inc_decay, inc_state), _ = jax.lax.scan(
+                dev_comb, (jnp.ones_like(local_total_decay),
+                           jnp.zeros_like(local_final)),
+                jnp.arange(ndev))
+        init = inc_state if initial_state is None \
+            else inc_state + initial_state * inc_decay[..., None, None]
+    else:
+        init = initial_state
+
+    if init is not None:
+        # correction: chunk c sees extra state init * prod(decay of chunks<c)
+        excl_decay = jnp.concatenate(
+            [jnp.ones_like(dfx[:, :1]), dfx[:, :-1]], axis=1)  # (B,nc,H)
+        prev = prev + init[:, None] * excl_decay[..., None, None]
+        local_final = local_final + init * local_total_decay[..., None, None]
+
+    decay_out = jnp.exp(acum)                               # (B,nc,l,H)
+    Y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Ch, prev, decay_out)
+    y = (Y_diag + Y_off).reshape(B, S, H, P)
+    return y.astype(xdt.dtype), local_final
+
+
+def causal_conv1d(x, w, *, ctx: ShardCtx = ShardCtx(), prev_tail=None):
+    """Depthwise causal conv. x: (B,S,C), w: (d_conv, C).
+
+    Under cp, the left halo (d_conv-1 tokens) comes from the previous device
+    via ppermute; device 0 gets zeros (or `prev_tail` from a decode cache).
+    """
+    B, S, C = x.shape
+    dconv = w.shape[0]
+    halo = dconv - 1
+    if prev_tail is None:
+        tail = jnp.zeros((B, halo, C), x.dtype)
+    else:
+        tail = prev_tail
+    if ctx.sharded:
+        src_tail = x[:, -halo:, :]
+        perm = [(i, i + 1) for i in range(ctx.cp_size - 1)]
+        recv = jax.lax.ppermute(src_tail, ctx.cp_axis, perm)
+        idx = jax.lax.axis_index(ctx.cp_axis)
+        tail = jnp.where(idx > 0, recv, tail)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, S+halo, C)
+    # depthwise conv as stacked shifts (d_conv is tiny, typically 4)
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(dconv):
+        y = y + xp[:, i:i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def mamba2_mix(params, x, scfg: SSMConfig, d_model: int,
+               ctx: ShardCtx = ShardCtx(), decode_cache=None):
+    """Full mamba2 mixer. x: (B,S,d_model).
+
+    decode_cache: None for train/prefill (returns (y, final_state, conv_tail))
+    or dict(conv=(B,halo,conv_dim), ssm=(B,H,P,N)) for single-token decode.
+    """
+    B, S, d = x.shape
+    di = scfg.expand * d_model
+    G, N, Pd = scfg.n_groups, scfg.d_state, scfg.head_dim
+    H = di // Pd
+    conv_dim = di + 2 * G * N
+
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # (H,)
+
+    if decode_cache is None:
+        xbc_c = causal_conv1d(xbc, params["conv_w"], ctx=ctx)
+        new_conv_tail = xbc[:, -(scfg.d_conv - 1):, :]
+    else:
+        xbc_c = causal_conv1d(xbc, params["conv_w"],
+                              prev_tail=decode_cache["conv"])
+        new_conv_tail = jnp.concatenate(
+            [decode_cache["conv"], xbc], axis=1)[:, -(scfg.d_conv - 1):, :]
+    xbc_c = jax.nn.silu(xbc_c)
+    xs, Bm, Cm = jnp.split(xbc_c, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, Pd)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+
+    a_bar = dt * A[None, None, :]               # (B,S,H) log decay
+    xdt = xs * dt[..., None].astype(xs.dtype)
+
+    if decode_cache is None:
+        y, final_state = ssd_chunked(
+            xdt, a_bar, Bm, Cm, chunk=scfg.chunk, ctx=ctx,
+            cp_exchange=scfg.cp_exchange,
+            cp_wire_dtype=jnp.bfloat16
+            if scfg.cp_wire_dtype == "bfloat16" else jnp.float32)
+        new_ssm = final_state
+    else:
+        # single-token recurrence (S == 1)
+        h = decode_cache["ssm"]                  # (B,H,P,N)
+        dA = jnp.exp(a_bar[:, 0])                # (B,H)
+        Bh = jnp.repeat(Bm[:, 0], H // G, axis=1)   # (B,H,N)
+        Ch = jnp.repeat(Cm[:, 0], H // G, axis=1)
+        h = h * dA[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xdt[:, 0].astype(jnp.float32),
+            Bh.astype(jnp.float32))
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch.astype(jnp.float32))
+        y = y[:, None].astype(x.dtype)           # (B,1,H,P)
+        new_ssm = h
+
+    y = y + xs * params["D"].astype(xs.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"])
+    out = y @ params["out_proj"].astype(y.dtype)
+    return out, {"ssm": new_ssm, "conv": new_conv_tail}

@@ -1,0 +1,618 @@
+"""Model zoo: one scan-over-layers implementation per architecture family.
+
+Families (arch_type):
+  dense   - llama-style GQA stacks: yi-6b, qwen2.5-14b (QKV bias),
+            gemma2-2b (alt local/global + softcaps + post-norms),
+            gemma3-4b (5:1 local:global + qk-norm + dual rope bases)
+  moe     - deepseek-moe-16b (2 shared + 64 routed top-6),
+            llama4-maverick (1 shared + 128 routed top-1)
+  ssm     - mamba2 (SSD)
+  hybrid  - hymba (parallel attn+SSM heads, SWA+3 global layers, meta tokens
+            realized as learned per-layer KV prefix + learned SSM init state)
+  encdec  - whisper (conv/mel frontend stubbed: audio arrives as frame
+            embeddings per the brief)
+  vlm     - llava-next (vision tower stubbed: inputs are patch+text
+            embeddings; mistral-7b decoder)
+
+Every block is homogeneous within a stack so `lax.scan` keeps the HLO small
+(512-device dry-runs compile in seconds, remat stays per-layer). Per-layer
+heterogeneity (local/global windows, rope bases) rides along as scanned
+flag arrays, never as Python branching.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ShardCtx
+
+
+def _norm_param(cfg, d, key=None):
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def _dense(key, shape, std=0.02):
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * std)
+
+
+# ---------------------------------------------------------------------------
+# Per-family block parameter builders
+# ---------------------------------------------------------------------------
+
+def _attn_params(key, cfg: ModelConfig):
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "q": _dense(ks[0], (d, H * hd)),
+        "k": _dense(ks[1], (d, K * hd)),
+        "v": _dense(ks[2], (d, K * hd)),
+        "o": _dense(ks[3], (H * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((K * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((K * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    if cfg.meta_tokens:
+        p["meta_k"] = _dense(jax.random.fold_in(key, 7),
+                             (cfg.meta_tokens, K, hd))
+        p["meta_v"] = _dense(jax.random.fold_in(key, 8),
+                             (cfg.meta_tokens, K, hd))
+    return p
+
+
+def _mlp_params(key, cfg: ModelConfig, d_in=None, d_ff=None):
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "gelu":
+        return {"w_up": _dense(ks[0], (d, f)), "w_down": _dense(ks[1], (f, d))}
+    return {"w_gate": _dense(ks[0], (d, f)), "w_up": _dense(ks[1], (d, f)),
+            "w_down": _dense(ks[2], (f, d))}
+
+
+def _moe_params(key, cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    fe = m.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense(ks[0], (d, m.n_experts)),
+        "w_gate": _dense(ks[1], (m.n_experts, d, fe)),
+        "w_up": _dense(ks[2], (m.n_experts, d, fe)),
+        "w_down": _dense(ks[3], (m.n_experts, fe, d)),
+    }
+    if m.n_shared:
+        p["shared"] = _mlp_params(ks[4], cfg, d_in=d, d_ff=m.n_shared * fe)
+    return p
+
+
+def _ssm_params(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    H = di // s.head_dim
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32)
+                 * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    p = {
+        "in_proj": _dense(ks[0], (d, 2 * di + 2 * s.n_groups * s.d_state + H)),
+        "conv_w": _dense(ks[1], (s.d_conv, conv_dim), std=0.2),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32) % 15 + 1.0),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense(ks[3], (di, d)),
+    }
+    if cfg.meta_tokens:
+        p["init_state"] = jnp.zeros((H, s.head_dim, s.d_state), jnp.float32)
+    return p
+
+
+def _block_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    if cfg.arch_type == "ssm":
+        return {"ln1": _norm_param(cfg, d), "ssm": _ssm_params(ks[0], cfg)}
+    p = {"ln1": _norm_param(cfg, d), "attn": _attn_params(ks[0], cfg),
+         "ln2": _norm_param(cfg, d)}
+    if cfg.post_norm:
+        p["ln1_post"] = _norm_param(cfg, d)
+        p["ln2_post"] = _norm_param(cfg, d)
+    if cfg.arch_type == "hybrid":
+        p["ssm"] = _ssm_params(ks[1], cfg)
+        p["attn_out_norm"] = _norm_param(cfg, d)
+        p["ssm_out_norm"] = _norm_param(cfg, d)
+    if cfg.moe is not None:
+        p["moe"] = _moe_params(ks[2], cfg)
+    else:
+        p["mlp"] = _mlp_params(ks[3], cfg)
+    return p
+
+
+def _encdec_block_params(key, cfg: ModelConfig, cross: bool):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {"ln1": _norm_param(cfg, d), "attn": _attn_params(ks[0], cfg),
+         "ln2": _norm_param(cfg, d), "mlp": _mlp_params(ks[1], cfg)}
+    if cross:
+        p["ln_x"] = _norm_param(cfg, d)
+        p["xattn"] = _attn_params(ks[2], cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- init ----------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        params: Dict[str, Any] = {
+            "embed": _dense(ks[0], (cfg.vocab_size, cfg.d_model)),
+            "final_norm": _norm_param(cfg, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = _dense(ks[4], (cfg.d_model, cfg.vocab_size))
+
+        def stack(fn, key, n):
+            keys = jax.random.split(key, n)
+            return jax.vmap(fn)(keys)
+
+        if cfg.arch_type == "encdec":
+            params["enc_blocks"] = stack(
+                lambda k: _encdec_block_params(k, cfg, cross=False),
+                ks[1], cfg.encoder_layers)
+            params["enc_norm"] = _norm_param(cfg, cfg.d_model)
+            params["blocks"] = stack(
+                lambda k: _encdec_block_params(k, cfg, cross=True),
+                ks[2], cfg.n_layers)
+        else:
+            params["blocks"] = stack(lambda k: _block_params(k, cfg),
+                                     ks[1], cfg.n_layers)
+        return params
+
+    # ---------------- flags ----------------
+    def _flags(self):
+        cfg = self.cfg
+        return (jnp.asarray(cfg.layer_windows(), jnp.int32),
+                jnp.asarray(cfg.layer_rope_thetas(), jnp.float32))
+
+    # ---------------- sublayers ----------------
+    def _attn_sublayer(self, p, h, *, q_pos, window, theta, ctx,
+                       kv_override=None, causal=True, return_kv=False):
+        cfg = self.cfg
+        B, S, d = h.shape
+        H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+        q = h @ p["q"].astype(h.dtype)
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(h.dtype)
+        q = q.reshape(B, S, H, hd)
+        if kv_override is None:
+            kh = h
+            k = kh @ p["k"].astype(h.dtype)
+            v = kh @ p["v"].astype(h.dtype)
+            if cfg.qkv_bias:
+                k = k + p["bk"].astype(h.dtype)
+                v = v + p["bv"].astype(h.dtype)
+            k = k.reshape(B, S, K, hd)
+            v = v.reshape(B, S, K, hd)
+        else:
+            k, v = kv_override
+        if cfg.qk_norm:
+            q = L.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+            k = L.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+        if cfg.arch_type != "encdec":  # whisper uses absolute positions
+            q = L.rope(q, q_pos, theta)
+            if kv_override is None:
+                kv_pos = q_pos
+                k = L.rope(k, kv_pos, theta)
+        if cfg.meta_tokens and kv_override is None:
+            mk = jnp.broadcast_to(p["meta_k"].astype(h.dtype),
+                                  (B,) + p["meta_k"].shape)
+            mv = jnp.broadcast_to(p["meta_v"].astype(h.dtype),
+                                  (B,) + p["meta_v"].shape)
+            # meta prefix participates only on device 0's gathered segment:
+            # we emulate "always visible" by giving it positions < meta_tokens
+            # and letting the window mask whitelist those columns.
+            if ctx.sharded:
+                k_full = jax.lax.all_gather(k, ctx.cp_axis, axis=1, tiled=True)
+                v_full = jax.lax.all_gather(v, ctx.cp_axis, axis=1, tiled=True)
+            else:
+                k_full, v_full = k, v
+            k_full = jnp.concatenate([mk, k_full], axis=1)
+            v_full = jnp.concatenate([mv, v_full], axis=1)
+            out = L.attention(
+                q, k_full, v_full, q_pos=q_pos + cfg.meta_tokens,
+                causal=causal, window=window,
+                softcap=cfg.attn_softcap, meta_tokens=cfg.meta_tokens,
+                ctx=ShardCtx())  # already gathered
+            out = out.reshape(B, S, H * hd) @ p["o"].astype(h.dtype)
+            return (out, (k, v)) if return_kv else out
+        out = L.attention(q, k, v, q_pos=q_pos, causal=causal,
+                          window=window, softcap=cfg.attn_softcap,
+                          meta_tokens=cfg.meta_tokens, ctx=ctx)
+        out = out.reshape(B, S, H * hd) @ p["o"].astype(h.dtype)
+        return (out, (k, v)) if return_kv else out
+
+    # ---------------- decoder-only forward ----------------
+    def _embed_in(self, params, batch, ctx):
+        cfg = self.cfg
+        if cfg.input_mode == "embeddings":
+            x = batch["embeds"].astype(_dt(cfg))
+        else:
+            x = params["embed"].astype(_dt(cfg))[batch["tokens"]]
+        if cfg.emb_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        return x
+
+    def forward(self, params, batch, ctx: ShardCtx = ShardCtx(),
+                collect_cache: bool = False):
+        """Training/prefill forward -> (logits (B,S_local,V), aux) or,
+        with collect_cache=True, (logits, aux, per-layer cache pytree)."""
+        cfg = self.cfg
+        if cfg.arch_type == "encdec":
+            assert not collect_cache, "use prefill() for enc-dec serving"
+            return self._forward_encdec(params, batch, ctx)
+        params = ctx.gather(params, "static")
+        x = self._embed_in(params, batch, ctx)
+        B, S, d = x.shape
+        q_pos = ctx.cp_index() * S + jnp.arange(S)
+        windows, thetas = self._flags()
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def block(carry, scanned):
+            x, aux = carry
+            p, window, theta = scanned
+            p = ctx.gather(p, "blocks")
+            ys = {}
+            h = L.apply_norm(x, p["ln1"], cfg)
+            if cfg.arch_type == "ssm":
+                out, st = L.mamba2_mix(p["ssm"], h, cfg.ssm, cfg.d_model,
+                                       ctx=ctx)
+                if collect_cache:
+                    ys["ssm"], ys["conv"] = st["ssm"], st["conv"]
+                x = x + out
+                return (x, aux), ys
+            attn_out, kv = self._attn_sublayer(p["attn"], h, q_pos=q_pos,
+                                               window=window, theta=theta,
+                                               ctx=ctx, return_kv=True)
+            if collect_cache:
+                ys["k"], ys["v"] = kv
+            if cfg.arch_type == "hybrid":
+                ssm_out, st = L.mamba2_mix(p["ssm"], h, cfg.ssm, cfg.d_model,
+                                           ctx=ctx)
+                if collect_cache:
+                    ys["ssm"], ys["conv"] = st["ssm"], st["conv"]
+                attn_out = 0.5 * (
+                    L.apply_norm(attn_out, p["attn_out_norm"], cfg)
+                    + L.apply_norm(ssm_out, p["ssm_out_norm"], cfg))
+            if cfg.post_norm:
+                attn_out = L.apply_norm(attn_out, p["ln1_post"], cfg)
+            x = x + attn_out
+            h2 = L.apply_norm(x, p["ln2"], cfg)
+            if cfg.moe is not None:
+                mlp_out, a = L.moe(p["moe"], h2, cfg.moe, ctx=ctx)
+                aux = aux + a
+            else:
+                mlp_out = L.mlp(p["mlp"], h2, cfg.act)
+            if cfg.post_norm:
+                mlp_out = L.apply_norm(mlp_out, p["ln2_post"], cfg)
+            x = x + mlp_out
+            return (x, aux), ys
+
+        blk = jax.checkpoint(block, policy=_remat_policy(cfg))
+        (x, aux_total), caches = jax.lax.scan(
+            blk, (x, aux_total), (params["blocks"], windows, thetas),
+            unroll=cfg.scan_unroll)
+        x = L.apply_norm(x, params["final_norm"], cfg)
+        logits = self._head(params, x)
+        if collect_cache:
+            return logits, aux_total, caches
+        return logits, aux_total
+
+    def prefill(self, params, batch, max_seq_local: int,
+                ctx: ShardCtx = ShardCtx()):
+        """Serving prefill: forward pass that also materializes the KV/SSM
+        cache, padded along (local) sequence to max_seq_local."""
+        cfg = self.cfg
+        logits, _, caches = self.forward(params, batch, ctx,
+                                         collect_cache=True)
+        cache = {}
+        if "k" in caches:
+            pad = max_seq_local - caches["k"].shape[2]
+            padw = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+            cache["k"] = jnp.pad(caches["k"], padw)
+            cache["v"] = jnp.pad(caches["v"], padw)
+        if "ssm" in caches:
+            ssm, conv = caches["ssm"].astype(jnp.float32), caches["conv"]
+            if ctx.sharded:
+                # the global final state lives on the last cp shard; decode
+                # keeps SSM state replicated, so broadcast it
+                ssm = jax.lax.all_gather(ssm, ctx.cp_axis)[-1]
+                conv = jax.lax.all_gather(conv, ctx.cp_axis)[-1]
+            cache["ssm"], cache["conv"] = ssm, conv
+        return logits, cache
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].astype(x.dtype).T
+        else:
+            logits = x @ params["unembed"].astype(x.dtype)
+        logits = logits.astype(jnp.float32)
+        if cfg.final_softcap:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return logits
+
+    # ---------------- whisper ----------------
+    def _encode(self, params, audio, ctx):
+        cfg = self.cfg
+        x = audio.astype(_dt(cfg))
+        B, Sa, d = x.shape
+        pos0 = ctx.cp_index() * Sa
+        x = x + L.sinusoidal_positions(Sa, d, offset=pos0).astype(x.dtype)[None]
+
+        def enc_block(x, p):
+            p = ctx.gather(p, "enc_blocks")
+            h = L.apply_norm(x, p["ln1"], cfg)
+            # bidirectional self attention, absolute positions
+            out = self._attn_sublayer(p["attn"], h,
+                                      q_pos=pos0 + jnp.arange(Sa),
+                                      window=0, theta=cfg.rope_theta,
+                                      ctx=ctx, causal=False)
+            x = x + out
+            h2 = L.apply_norm(x, p["ln2"], cfg)
+            return x + L.mlp(p["mlp"], h2, cfg.act), None
+
+        x, _ = jax.lax.scan(jax.checkpoint(enc_block), x,
+                            params["enc_blocks"], unroll=cfg.scan_unroll)
+        return L.apply_norm(x, params["enc_norm"], cfg)
+
+    def _forward_encdec(self, params, batch, ctx):
+        cfg = self.cfg
+        params = ctx.gather(params, "static")
+        enc = self._encode(params, batch["audio"], ctx)
+        x = params["embed"].astype(_dt(cfg))[batch["tokens"]]
+        B, S, d = x.shape
+        pos0 = ctx.cp_index() * S
+        x = x + L.sinusoidal_positions(S, d, offset=pos0).astype(x.dtype)[None]
+        q_pos = pos0 + jnp.arange(S)
+        K, hd = cfg.n_kv_heads, cfg.head_dim_
+
+        def dec_block(x, p):
+            p = ctx.gather(p, "blocks")
+            h = L.apply_norm(x, p["ln1"], cfg)
+            out = self._attn_sublayer(p["attn"], h, q_pos=q_pos, window=0,
+                                      theta=cfg.rope_theta, ctx=ctx)
+            x = x + out
+            hx = L.apply_norm(x, p["ln_x"], cfg)
+            ek = (enc @ p["xattn"]["k"].astype(enc.dtype)).reshape(
+                B, enc.shape[1], K, hd)
+            ev = (enc @ p["xattn"]["v"].astype(enc.dtype)).reshape(
+                B, enc.shape[1], K, hd)
+            xout = self._attn_sublayer(p["xattn"], hx, q_pos=q_pos, window=0,
+                                       theta=cfg.rope_theta, ctx=ctx,
+                                       kv_override=(ek, ev), causal=False)
+            x = x + xout
+            h2 = L.apply_norm(x, p["ln2"], cfg)
+            return x + L.mlp(p["mlp"], h2, cfg.act), None
+
+        x, _ = jax.lax.scan(jax.checkpoint(dec_block), x, params["blocks"],
+                            unroll=cfg.scan_unroll)
+        x = L.apply_norm(x, params["final_norm"], cfg)
+        return self._head(params, x), jnp.zeros((), jnp.float32)
+
+    # ---------------- loss ----------------
+    def loss(self, params, batch, ctx: ShardCtx = ShardCtx()):
+        """Returns (local loss sum, local token count). DP/CP mean happens
+        in the caller (psum over mesh axes)."""
+        logits, aux = self.forward(params, batch, ctx)
+        targets = batch["targets"]
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(targets, jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None],
+                                   axis=-1)[..., 0]
+        nll = (logz - gold) * mask
+        return jnp.sum(nll) + aux, jnp.sum(mask)
+
+    # ---------------- KV cache (decode) ----------------
+    def init_cache(self, batch_size: int, max_seq_local: int,
+                   encoder_seq_local: int = 0,
+                   dtype=None) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = dtype or _dt(cfg)
+        B = batch_size
+        K, hd, lyr = cfg.n_kv_heads, cfg.head_dim_, cfg.n_layers
+        cache: Dict[str, Any] = {}
+        if cfg.arch_type != "ssm":
+            cache["k"] = jnp.zeros((lyr, B, max_seq_local, K, hd), dtype)
+            cache["v"] = jnp.zeros((lyr, B, max_seq_local, K, hd), dtype)
+        if cfg.arch_type in ("ssm", "hybrid"):
+            s = cfg.ssm
+            H = cfg.n_ssm_heads
+            conv_dim = cfg.d_inner + 2 * s.n_groups * s.d_state
+            cache["ssm"] = jnp.zeros((lyr, B, H, s.head_dim, s.d_state),
+                                     jnp.float32)
+            cache["conv"] = jnp.zeros((lyr, B, s.d_conv - 1, conv_dim), dtype)
+        if cfg.arch_type == "encdec":
+            cache["ck"] = jnp.zeros((lyr, B, encoder_seq_local, K, hd), dtype)
+            cache["cv"] = jnp.zeros((lyr, B, encoder_seq_local, K, hd), dtype)
+        return cache
+
+    def prefill_encoder(self, params, audio, cache, ctx: ShardCtx = ShardCtx()):
+        """Whisper: run encoder, fill cross-attention cache."""
+        cfg = self.cfg
+        params = ctx.gather(params, "static")
+        enc = self._encode(params, audio, ctx)
+        B, Sa, _ = enc.shape
+        K, hd = cfg.n_kv_heads, cfg.head_dim_
+
+        def fill(p):
+            p = ctx.gather(p, "blocks")
+            ck = (enc @ p["xattn"]["k"].astype(enc.dtype)).reshape(B, Sa, K, hd)
+            cv = (enc @ p["xattn"]["v"].astype(enc.dtype)).reshape(B, Sa, K, hd)
+            return ck, cv
+
+        ck, cv = jax.vmap(fill)(params["blocks"])
+        cache = dict(cache)
+        cache["ck"], cache["cv"] = ck, cv
+        return cache
+
+    # ---------------- decode ----------------
+    def decode_step(self, params, inputs, cache, pos,
+                    ctx: ShardCtx = ShardCtx()):
+        """One-token decode. inputs: {"token": (B,1)} or {"embeds": (B,1,d)}.
+        pos: scalar int32 - global position of this token. The KV cache is
+        sequence-sharded over the cp axis; SSM state is replicated."""
+        cfg = self.cfg
+        params = ctx.gather(params, "static")
+        if cfg.input_mode == "embeddings":
+            x = inputs["embeds"].astype(_dt(cfg))
+        else:
+            x = params["embed"].astype(_dt(cfg))[inputs["token"]]
+        if cfg.emb_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        if cfg.arch_type == "encdec":
+            B, _, d = x.shape
+            x = x + L.sinusoidal_positions(1, d, offset=pos).astype(x.dtype)[None]
+        B = x.shape[0]
+        windows, thetas = self._flags()
+        K, hd = cfg.n_kv_heads, cfg.head_dim_
+        H = cfg.n_heads
+
+        S_loc = cache["k"].shape[2] if "k" in cache else 0
+        if ctx.sharded and S_loc:
+            local_pos = pos - ctx.cp_index() * S_loc
+            in_range = (local_pos >= 0) & (local_pos < S_loc)
+            local_pos_c = jnp.clip(local_pos, 0, S_loc - 1)
+        else:
+            local_pos_c = pos
+            in_range = jnp.asarray(True)
+
+        def block(carry, scanned):
+            x = carry
+            p, window, theta, cache_l = scanned
+            p = ctx.gather(p, "blocks")
+            h = L.apply_norm(x, p["ln1"], cfg)
+            new_cache_l = dict(cache_l)
+            if cfg.arch_type == "ssm":
+                out, st = L.mamba2_mix(
+                    p["ssm"], h, cfg.ssm, cfg.d_model,
+                    decode_cache={"ssm": cache_l["ssm"],
+                                  "conv": cache_l["conv"]})
+                new_cache_l["ssm"], new_cache_l["conv"] = st["ssm"], st["conv"]
+                return x + out, new_cache_l
+
+            # self-attention against the cache
+            pa = p["attn"]
+            q = h @ pa["q"].astype(h.dtype)
+            if cfg.qkv_bias:
+                q = q + pa["bq"].astype(h.dtype)
+            q = q.reshape(B, 1, H, hd)
+            k = h @ pa["k"].astype(h.dtype)
+            v = h @ pa["v"].astype(h.dtype)
+            if cfg.qkv_bias:
+                k = k + pa["bk"].astype(h.dtype)
+                v = v + pa["bv"].astype(h.dtype)
+            k = k.reshape(B, 1, K, hd)
+            v = v.reshape(B, 1, K, hd)
+            if cfg.qk_norm:
+                q = L.rmsnorm(q, pa["q_norm"], cfg.norm_eps)
+                k = L.rmsnorm(k, pa["k_norm"], cfg.norm_eps)
+            if cfg.arch_type != "encdec":
+                ppos = jnp.asarray(pos)[None]
+                q = L.rope(q, ppos, theta)
+                k = L.rope(k, ppos, theta)
+            kc = jax.lax.dynamic_update_slice(
+                cache_l["k"], k.astype(cache_l["k"].dtype),
+                (0, local_pos_c, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache_l["v"], v.astype(cache_l["v"].dtype),
+                (0, local_pos_c, 0, 0))
+            kc = jnp.where(in_range, kc, cache_l["k"])
+            vc = jnp.where(in_range, vc, cache_l["v"])
+            new_cache_l["k"], new_cache_l["v"] = kc, vc
+
+            meta_kv = None
+            if cfg.meta_tokens:
+                meta_kv = (
+                    jnp.broadcast_to(pa["meta_k"].astype(h.dtype),
+                                     (B,) + pa["meta_k"].shape),
+                    jnp.broadcast_to(pa["meta_v"].astype(h.dtype),
+                                     (B,) + pa["meta_v"].shape))
+            attn_out = L.decode_attention(
+                q, kc, vc, total_len=pos + 1, window=window,
+                softcap=cfg.attn_softcap, q_pos=pos, ctx=ctx,
+                meta_kv=meta_kv)
+            attn_out = attn_out.reshape(B, 1, H * hd) @ pa["o"].astype(h.dtype)
+
+            if cfg.arch_type == "hybrid":
+                ssm_out, st = L.mamba2_mix(
+                    p["ssm"], h, cfg.ssm, cfg.d_model,
+                    decode_cache={"ssm": cache_l["ssm"],
+                                  "conv": cache_l["conv"]})
+                new_cache_l["ssm"], new_cache_l["conv"] = st["ssm"], st["conv"]
+                attn_out = 0.5 * (
+                    L.apply_norm(attn_out, p["attn_out_norm"], cfg)
+                    + L.apply_norm(ssm_out, p["ssm_out_norm"], cfg))
+            if cfg.post_norm:
+                attn_out = L.apply_norm(attn_out, p["ln1_post"], cfg)
+            x = x + attn_out
+
+            if cfg.arch_type == "encdec":
+                hx = L.apply_norm(x, p["ln_x"], cfg)
+                xout = self._attn_sublayer(
+                    p["xattn"], hx, q_pos=jnp.asarray(pos)[None], window=0,
+                    theta=cfg.rope_theta, ctx=ctx,
+                    kv_override=(cache_l["ck"], cache_l["cv"]), causal=False)
+                x = x + xout
+
+            h2 = L.apply_norm(x, p["ln2"], cfg)
+            if cfg.moe is not None:
+                mlp_out, _ = L.moe(p["moe"], h2, cfg.moe, ctx=ctx)
+            else:
+                mlp_out = L.mlp(p["mlp"], h2, cfg.act)
+            if cfg.post_norm:
+                mlp_out = L.apply_norm(mlp_out, p["ln2_post"], cfg)
+            return x + mlp_out, new_cache_l
+
+        x, new_cache = jax.lax.scan(
+            block, x, (params["blocks"], windows, thetas, cache),
+            unroll=cfg.scan_unroll)
+        x = L.apply_norm(x, params["final_norm"], cfg)
+        logits = self._head(params, x)[:, 0]
+        return logits, new_cache
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    if cfg.remat_policy == "ssd_state":
+        return jax.checkpoint_policies.save_only_these_names(
+            "ssd_prefix_state")
+    return None

@@ -1,0 +1,59 @@
+"""Shared helpers for the multi-device (subprocess) tests.
+
+Each script in this directory sets XLA_FLAGS before importing jax, builds a
+small mesh out of the 8 simulated CPU devices, and prints 'OK' on success.
+"""
+import dataclasses
+
+import numpy as np
+
+
+def tiny_config(arch: str):
+    """Shrunken-but-divisible configs for 2-way model-axis sharding."""
+    from repro.configs import get_config
+    cfg = get_config(arch, smoke=True)
+    return cfg
+
+
+def make_batch(cfg, B, S, seed=0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    b = {}
+    if cfg.input_mode == "embeddings":
+        b["embeds"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+    else:
+        b["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32))
+    if cfg.input_mode == "audio+tokens":
+        b["audio"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq, cfg.d_model))
+            .astype(np.float32))
+    b["targets"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32))
+    b["mask"] = jnp.ones((B, S), np.float32)
+    return b
+
+
+def unchunk_params(master_state, layout, metas, worker_axes_sizes, Nm):
+    """Reconstruct model-shaped params from chunked master arrays (host)."""
+    import jax
+    import numpy as np
+
+    def rebuild(arr, leaf, dim, stk, meta):
+        arr = np.asarray(arr)
+        n_workers = int(np.prod(worker_axes_sizes)) if worker_axes_sizes else 1
+        arr = arr.reshape(n_workers, Nm, meta.c)
+        shards = []
+        for mi in range(Nm):
+            flat = arr[:, mi, :].reshape(-1)[: int(np.prod(meta.shp))]
+            shards.append(flat.reshape(meta.shp))
+        off = 1 if stk else 0
+        if dim == -2:
+            return np.concatenate(shards, axis=off)
+        if dim >= 0:
+            return np.concatenate(shards, axis=dim + off)
+        return shards[0]
+
+    return jax.tree.map(rebuild, master_state, layout._leaves, layout.dims,
+                        layout.stacked, metas)

@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced config (2 layers, d_model<=512,
+<=4 experts), one forward/train step + one decode step on CPU; asserts
+output shapes and absence of NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.model import Model
+from repro.core.qadam import QAdamConfig, qadam, apply_updates
+
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    b = {}
+    if cfg.input_mode == "embeddings":
+        b["embeds"] = jax.random.normal(ks[0], (B, S, cfg.d_model),
+                                        jnp.float32)
+    else:
+        b["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    if cfg.input_mode == "audio+tokens":
+        b["audio"] = jax.random.normal(ks[2], (B, cfg.encoder_seq,
+                                               cfg.d_model), jnp.float32)
+    b["targets"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    b["mask"] = jnp.ones((B, S), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_and_train_step(self, arch):
+        cfg = get_config(arch, smoke=True)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = _batch(cfg, jax.random.PRNGKey(1))
+
+        def loss_fn(p):
+            ls, n = model.loss(p, batch)
+            return ls / n
+
+        loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+        assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+        leaves = jax.tree.leaves(grads)
+        assert all(np.all(np.isfinite(np.asarray(l))) for l in leaves), arch
+        # plausible LM init loss ~ log(V)
+        assert float(loss) < 2 * np.log(cfg.vocab_size) + 5
+
+        # one QAdam step end to end
+        opt = qadam(QAdamConfig(alpha=1e-3, grad_q="log:6",
+                                weight_q="uniform_amax:7"))
+        state = opt.init(params)
+        fp = opt.forward_params(params, state)
+        _, grads2 = jax.value_and_grad(loss_fn)(fp)
+        upd, state = opt.update(grads2, state, params)
+        params2 = apply_updates(params, upd)
+        l2, _ = model.loss(params2, batch)
+        assert np.isfinite(float(l2)), arch
+        # params actually moved
+        moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                             params, params2)
+        assert max(jax.tree.leaves(moved)) > 0, arch
+
+    def test_decode_step(self, arch):
+        cfg = get_config(arch, smoke=True)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        cache = model.init_cache(B, max_seq_local=S,
+                                 encoder_seq_local=cfg.encoder_seq or 0)
+        if cfg.arch_type == "encdec":
+            audio = jax.random.normal(jax.random.PRNGKey(2),
+                                      (B, cfg.encoder_seq, cfg.d_model),
+                                      jnp.float32)
+            cache = model.prefill_encoder(params, audio, cache)
+        if cfg.input_mode == "embeddings":
+            inputs = {"embeds": jax.random.normal(
+                jax.random.PRNGKey(3), (B, 1, cfg.d_model), jnp.float32)}
+        else:
+            inputs = {"token": jnp.array([[1], [2]], jnp.int32)}
+
+        step = jax.jit(lambda p, i, c, pos: model.decode_step(p, i, c, pos))
+        logits, cache = step(params, inputs, cache, jnp.int32(0))
+        assert logits.shape == (B, cfg.vocab_size), arch
+        assert np.all(np.isfinite(np.asarray(logits, np.float32))), arch
+        logits2, cache = step(params, inputs, cache, jnp.int32(1))
+        assert np.all(np.isfinite(np.asarray(logits2, np.float32))), arch
+        # cache must have changed
+        if "k" in cache:
+            assert float(jnp.max(jnp.abs(cache["k"]))) > 0, arch
+        else:
+            assert float(jnp.max(jnp.abs(cache["ssm"]))) > 0, arch
+
+    def test_decode_matches_forward(self, arch):
+        """Greedy-decode logits at position t == forward logits at t."""
+        cfg = get_config(arch, smoke=True)
+        if cfg.input_mode == "embeddings":
+            pytest.skip("embeddings-input: covered via forward test")
+        if cfg.moe is not None:
+            # capacity drops are a train-time-only effect; make the test
+            # drop-free so routing equivalence is exact
+            import dataclasses
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = _batch(cfg, jax.random.PRNGKey(1))
+        if cfg.arch_type == "encdec":
+            fwd_logits, _ = model.forward(params, batch)
+        else:
+            fwd_logits, _ = model.forward(params, batch)
+        cache = model.init_cache(B, max_seq_local=S,
+                                 encoder_seq_local=cfg.encoder_seq or 0)
+        if cfg.arch_type == "encdec":
+            cache = model.prefill_encoder(params, batch["audio"], cache)
+        toks = batch["tokens"]
+        step = jax.jit(lambda p, i, c, pos: model.decode_step(p, i, c, pos))
+        for t in range(4):
+            logits_t, cache = step(params, {"token": toks[:, t:t + 1]},
+                                   cache, jnp.int32(t))
+            np.testing.assert_allclose(
+                np.asarray(logits_t, np.float32),
+                np.asarray(fwd_logits[:, t], np.float32),
+                rtol=2e-2, atol=2e-3,
+                err_msg=f"{arch} t={t}")

@@ -1,0 +1,163 @@
+"""Pallas kernels vs pure-jnp oracle: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.core import quantizers as Q
+
+SHAPES = [(7,), (128,), (1000,), (256, 128), (33, 77), (4, 128, 130), (32768,)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(shape, dtype, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale)).astype(dtype)
+
+
+class TestLogQuantizeKernel:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_matches_oracle(self, shape, dtype):
+        x = _rand(shape, dtype, seed=hash(shape) % 1000)
+        k_g = 6
+        codes_p, scale_p = ops.quantize_log(x, k_g)
+        codes_r, scale_r = ops.quantize_log(x, k_g, use_pallas=False)
+        np.testing.assert_allclose(np.float32(scale_p), np.float32(scale_r),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(codes_p), np.asarray(codes_r))
+
+    @pytest.mark.parametrize("k_g", [1, 3, 6])
+    def test_roundtrip_matches_core_quantizer(self, k_g):
+        """kernel path == repro.core.quantizers.LogGradQuantizer semantics."""
+        x = _rand((513,), jnp.float32, seed=k_g)
+        codes, scale = ops.quantize_log(x, k_g)
+        deq = ops.dequantize_log(codes, scale, k_g)
+        expect = Q.LogGradQuantizer(k_g=k_g)(x)
+        np.testing.assert_allclose(np.asarray(deq), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-8)
+
+    def test_zero_tensor(self):
+        x = jnp.zeros((300,), jnp.float32)
+        codes, scale = ops.quantize_log(x, 4)
+        assert np.all(np.asarray(codes) == 0)
+        deq = ops.dequantize_log(codes, scale, 4)
+        assert np.all(np.asarray(deq) == 0)
+
+
+class TestUniformQuantizeKernel:
+    @pytest.mark.parametrize("shape", SHAPES[:5])
+    @pytest.mark.parametrize("absolute", [True, False])
+    def test_matches_oracle(self, shape, absolute):
+        x = _rand(shape, jnp.float32, seed=1, scale=0.2)
+        codes_p, s_p = ops.quantize_uniform(x, 5, absolute=absolute)
+        codes_r, s_r = ops.quantize_uniform(x, 5, absolute=absolute,
+                                            use_pallas=False)
+        np.testing.assert_allclose(np.float32(s_p), np.float32(s_r), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(codes_p), np.asarray(codes_r))
+
+    def test_roundtrip_matches_core(self):
+        x = _rand((777,), jnp.float32, seed=2, scale=0.2)
+        codes, scale = ops.quantize_uniform(x, 6, absolute=True)
+        deq = ops.dequantize_uniform(codes, scale, 6)
+        expect = Q.UniformWeightQuantizer(k_x=6)(x)
+        np.testing.assert_allclose(np.asarray(deq), np.asarray(expect),
+                                   atol=1e-7)
+
+
+class TestAdamEFKernel:
+    @pytest.mark.parametrize("shape", [(100,), (256, 128), (5, 333)])
+    def test_matches_oracle(self, shape):
+        seed = abs(hash(shape)) % 100
+        g = _rand(shape, jnp.float32, seed=seed)
+        m = _rand(shape, jnp.float32, seed=seed + 1, scale=0.1)
+        v = jnp.abs(_rand(shape, jnp.float32, seed=seed + 2, scale=0.01))
+        e = _rand(shape, jnp.float32, seed=seed + 3, scale=1e-3)
+        hp = dict(alpha_t=1e-3, beta=0.99, theta_t=0.9, eps=1e-5)
+        out_p = ops.adam_ef_step(g, m, v, e, **hp, k_g=6)
+        out_r = ops.adam_ef_step(g, m, v, e, **hp, k_g=6, use_pallas=False)
+        names = ["m", "v", "codes", "scale", "e"]
+        for n, a, b in zip(names, out_p, out_r):
+            if n == "codes":
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            else:
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=2e-5, atol=1e-7, err_msg=n)
+
+    def test_fused_step_equals_algorithm1_lines(self):
+        """Fused kernel == the unfused Algorithm 1 computations."""
+        g = _rand((512,), jnp.float32, seed=9)
+        m = jnp.zeros((512,))
+        v = jnp.zeros((512,))
+        e = jnp.zeros((512,))
+        a, b, th, eps, kg = 0.01, 0.99, 0.5, 1e-5, 6
+        m2, v2, codes, scale, e2 = ops.adam_ef_step(
+            g, m, v, e, alpha_t=a, beta=b, theta_t=th, eps=eps, k_g=kg)
+        v_ref = (1 - th) * g * g
+        m_ref = (1 - b) * g
+        de_ref = a * m_ref / jnp.sqrt(v_ref + eps)
+        np.testing.assert_allclose(np.asarray(v2), np.asarray(v_ref), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(m_ref), rtol=1e-5)
+        deq = ops.dequantize_log(codes, scale, kg)
+        np.testing.assert_allclose(np.asarray(deq + e2), np.asarray(de_ref),
+                                   rtol=2e-5, atol=1e-7)
+
+    def test_ef_residual_bound(self):
+        """|e'| per element <= half the local grid step (log grid property)."""
+        g = _rand((4096,), jnp.float32, seed=11)
+        out = ops.adam_ef_step(g, jnp.zeros_like(g), jnp.zeros_like(g),
+                               jnp.zeros_like(g), alpha_t=0.01, beta=0.9,
+                               theta_t=0.5, eps=1e-8, k_g=6)
+        _, _, codes, scale, e2 = out
+        de = ops.dequantize_log(codes, scale, 6) + e2
+        assert float(jnp.max(jnp.abs(e2))) <= float(jnp.max(jnp.abs(de)))
+
+
+class TestPack4Kernel:
+    @pytest.mark.parametrize("rows", [256, 1024])
+    def test_roundtrip_and_matches_core_packing(self, rows):
+        from repro.kernels.pack import pack4_pallas, unpack4_pallas
+        from repro.core.packing import pack_codes
+        rng = np.random.default_rng(rows)
+        codes = jnp.asarray(rng.integers(-8, 8, size=(rows, 256))
+                            .astype(np.int8))
+        packed = pack4_pallas(codes, interpret=True)
+        assert packed.shape == (rows, 128) and packed.dtype == jnp.uint8
+        out = unpack4_pallas(packed, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+        # same wire bytes as the reference codec (layout differs: the
+        # kernel packs lane pairs, the codec packs flat pairs)
+        ref = pack_codes(codes, 4)
+        assert ref.size == packed.size
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("case", [
+        dict(B=2, Sq=256, Skv=256, H=4, K=2, hd=64, causal=True, window=0,
+             softcap=None),
+        dict(B=1, Sq=128, Skv=384, H=8, K=2, hd=32, causal=True, window=0,
+             softcap=None, q_offset=256),       # decode-style suffix queries
+        dict(B=1, Sq=256, Skv=256, H=2, K=2, hd=64, causal=True, window=96,
+             softcap=50.0),                     # gemma-style SWA + softcap
+        dict(B=2, Sq=128, Skv=128, H=4, K=4, hd=128, causal=False, window=0,
+             softcap=None),                     # bidirectional (whisper enc)
+    ])
+    def test_matches_reference_attention(self, case):
+        from repro.kernels.flash_attention import flash_attention
+        from repro.models import layers as L
+        rng = np.random.default_rng(7)
+        B, Sq, Skv, H, K, hd = (case["B"], case["Sq"], case["Skv"],
+                                case["H"], case["K"], case["hd"])
+        q = jnp.asarray(rng.normal(size=(B, Sq, H, hd)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(B, Skv, K, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(B, Skv, K, hd)).astype(np.float32))
+        q_off = case.get("q_offset", 0)
+        out = flash_attention(q, k, v, causal=case["causal"],
+                              window=case["window"], softcap=case["softcap"],
+                              q_offset=q_off, interpret=True)
+        expect = L.attention(q, k, v, q_pos=q_off + jnp.arange(Sq),
+                             causal=case["causal"], window=case["window"],
+                             softcap=case["softcap"])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-4, atol=2e-5)

@@ -1,0 +1,151 @@
+"""Unit + property tests for the paper's quantizers and bit packing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizers as Q
+from repro.core.packing import pack_codes, unpack_codes, packed_nbytes
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale).astype(np.float32))
+
+
+class TestLogGrid:
+    def test_exact_levels_roundtrip(self):
+        # grid points must be reproduced exactly
+        k = 4
+        q = Q.LogGradQuantizer(k_g=k)
+        levels = np.array([2.0 ** -e for e in range(k + 1)])
+        x = jnp.asarray(np.concatenate([levels, -levels, [0.0]]).astype(np.float32))
+        np.testing.assert_allclose(np.asarray(q(x)), np.asarray(x), rtol=1e-6)
+
+    def test_nearest_in_linear_space(self):
+        q = Q.LogGradQuantizer(k_g=4)
+        # 0.8 with amax 1.0: nearest of {1.0, 0.5} in linear space is 1.0
+        x = jnp.asarray([1.0, 0.8, 0.7, 0.3, 0.76, 0.74])
+        out = np.asarray(q(x))
+        np.testing.assert_allclose(out, [1.0, 1.0, 0.5, 0.25, 1.0, 0.5], rtol=1e-6)
+
+    def test_zero_threshold(self):
+        q = Q.LogGradQuantizer(k_g=2)  # min level 0.25
+        x = jnp.asarray([1.0, 0.13, 0.12, 0.0])
+        out = np.asarray(q(x))
+        np.testing.assert_allclose(out, [1.0, 0.25, 0.0, 0.0], rtol=1e-6)
+
+    @given(st.integers(1, 7), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_contraction_property(self, k_g, seed):
+        # Assumption 2: ||g - Q(g)|| <= (1 - delta) ||g|| with delta > 0
+        g = _rand((257,), seed=seed)
+        q = Q.LogGradQuantizer(k_g=k_g)
+        err = np.linalg.norm(np.asarray(g - q(g)))
+        nrm = np.linalg.norm(np.asarray(g))
+        assert err < nrm  # strict contraction for nonzero g
+
+    def test_codes_fit_bits(self):
+        for k in (2, 4, 6):
+            q = Q.LogGradQuantizer(k_g=k)
+            qt = q.encode(_rand((1000,), seed=1))
+            assert int(jnp.max(jnp.abs(qt.codes))) <= 2 ** (Q.log_bits(k) - 1) - 1
+
+    def test_scale_invariance(self):
+        q = Q.LogGradQuantizer(k_g=5)
+        g = _rand((128,), seed=3)
+        np.testing.assert_allclose(np.asarray(q(g * 1000.0)),
+                                   np.asarray(q(g)) * 1000.0, rtol=1e-4)
+
+
+class TestUniform:
+    def test_grid_points_exact(self):
+        k = 3
+        q = Q.UniformWeightQuantizer(k_x=k)
+        grid = np.arange(-8, 9) / 8.0 * 0.5  # the paper's X scaled by 0.5
+        x = jnp.asarray(grid.astype(np.float32))
+        np.testing.assert_allclose(np.asarray(q(x)), np.asarray(x), atol=1e-7)
+
+    @given(st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_additive_bound(self, k_x, seed):
+        # Assumption 3: per-coordinate error <= half grid spacing (in-range x)
+        x = _rand((300,), seed=seed, scale=0.15)
+        x = jnp.clip(x, -0.5, 0.5)
+        q = Q.UniformWeightQuantizer(k_x=k_x)
+        err = np.max(np.abs(np.asarray(x - q(x))))
+        assert err <= 0.5 / 2 ** k_x / 2 + 1e-7
+
+    def test_amax_mode(self):
+        q = Q.UniformWeightQuantizer(k_x=4, absolute=False)
+        x = _rand((64,), seed=7, scale=10.0)
+        rel = np.max(np.abs(np.asarray(x - q(x)))) / np.max(np.abs(np.asarray(x)))
+        assert rel <= 0.5 / 2 ** 4 + 1e-6
+
+
+class TestTernGrad:
+    def test_unbiased(self):
+        g = _rand((64,), seed=5)
+        q = Q.TernGradQuantizer()
+        keys = jax.random.split(jax.random.PRNGKey(0), 3000)
+        samples = jax.vmap(lambda k: q(g, key=k))(keys)
+        mean = np.asarray(jnp.mean(samples, axis=0))
+        np.testing.assert_allclose(mean, np.asarray(g), atol=0.08)
+
+    def test_levels(self):
+        g = _rand((512,), seed=6)
+        q = Q.TernGradQuantizer()
+        out = np.asarray(q(g, key=jax.random.PRNGKey(1)))
+        amax = float(jnp.max(jnp.abs(g)))
+        assert set(np.round(np.unique(out) / amax).astype(int)) <= {-1, 0, 1}
+
+
+class TestBlockwise:
+    def test_block_scale(self):
+        g = _rand((512,), seed=8)
+        q = Q.BlockwiseQuantizer(block=128)
+        out = np.asarray(q(g))
+        g_np = np.asarray(g).reshape(4, 128)
+        expect = np.sign(g_np) * np.mean(np.abs(g_np), axis=1, keepdims=True)
+        np.testing.assert_allclose(out, expect.reshape(-1), rtol=1e-6)
+
+    def test_nonmultiple_shape(self):
+        g = _rand((130, 3), seed=9)
+        q = Q.BlockwiseQuantizer(block=256)
+        assert q(g).shape == (130, 3)
+
+
+class TestPacking:
+    @given(st.sampled_from([2, 4, 8]), st.integers(1, 999),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_roundtrip(self, bits, numel, seed):
+        rng = np.random.default_rng(seed)
+        lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+        codes = jnp.asarray(rng.integers(lo, hi + 1, size=numel).astype(np.int8))
+        packed = pack_codes(codes, bits)
+        assert packed.dtype == jnp.uint8
+        assert packed.shape[0] == packed_nbytes(numel, bits) or bits == 8
+        out = unpack_codes(packed, bits, numel)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+    def test_wire_size_reduction(self):
+        # 4-bit packing halves the int8 payload; this is the paper's "Comm"
+        codes = jnp.zeros((1000,), jnp.int8)
+        assert pack_codes(codes, 4).size == 500
+        assert pack_codes(codes, 2).size == 250
+
+
+class TestSpecParsing:
+    @pytest.mark.parametrize("spec,cls", [
+        ("none", Q.IdentityQuantizer), ("log:4", Q.LogGradQuantizer),
+        ("uniform:5", Q.UniformWeightQuantizer), ("terngrad", Q.TernGradQuantizer),
+        ("blockwise:64", Q.BlockwiseQuantizer)])
+    def test_parse(self, spec, cls):
+        assert isinstance(Q.get_quantizer(spec), cls)
+
+    def test_qtensor_wire_bytes(self):
+        q = Q.LogGradQuantizer(k_g=6)
+        qt = q.encode(_rand((1024,)))
+        assert qt.nbytes_wire == 1024 * 4 // 8 + 4

@@ -1,0 +1,56 @@
+"""Property tests (hypothesis) for the dist sharding/chunking invariants
+that the exchange and broadcast channels rely on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.dist import sharding as SH
+
+
+class TestChunkingInvariants:
+    @given(st.integers(1, 5000), st.integers(1, 64),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_flatten_unflatten_roundtrip(self, numel, n_workers, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(numel,)).astype(np.float32))
+        rows = SH.flatten_pad(x, n_workers)
+        assert rows.shape == (n_workers, SH.chunk_size(numel, n_workers))
+        back = SH.unflatten_chunked(rows, (numel,))
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+    @given(st.integers(1, 10000), st.integers(1, 64))
+    @settings(max_examples=50, deadline=None)
+    def test_chunks_cover_and_partition(self, numel, n_workers):
+        """Every element lands in exactly one worker chunk (the 'server'
+        ownership partition of Algorithm 2)."""
+        c = SH.chunk_size(numel, n_workers)
+        assert c * n_workers >= numel       # coverage
+        assert (c - 1) * n_workers < numel  # minimality of ceil
+
+    @given(st.sampled_from([(64, 32), (128,), (7, 3, 5), (100, 16, 2)]),
+           st.sampled_from([2, 4, 8, 16]))
+    @settings(max_examples=30, deadline=None)
+    def test_shard_dim_rule_consistency(self, shape, axis):
+        """local_shard_shape is consistent with the dim chosen by
+        shard_dim_for, and replicated leaves keep their shape."""
+        dim = SH.shard_dim_for((), shape, axis, stacked=False)
+        loc = SH.local_shard_shape(shape, dim, False, axis)
+        if dim == SH.REPLICATED:
+            assert loc == shape
+        else:
+            d = dim if dim >= 0 else 0
+            assert loc[d] * axis == shape[d]
+            assert all(a == b for i, (a, b) in enumerate(zip(loc, shape))
+                       if i != d)
+
+    def test_expert_leaves_marked(self):
+        import jax.tree_util as jtu
+        tree = {"blocks": {"moe": {"w_gate": jnp.zeros((2, 8, 64, 32)),
+                                   "shared": {"w_gate": jnp.zeros((64, 32))}}}}
+        layout = SH.build_layout(tree, 4)
+        assert layout.dims["blocks"]["moe"]["w_gate"] == SH.EXPERT_MARKER
+        # shared expert is NOT expert-sharded
+        assert layout.dims["blocks"]["moe"]["shared"]["w_gate"] != \
+            SH.EXPERT_MARKER

@@ -1,0 +1,144 @@
+"""Data pipeline, checkpointing, serve engine, and train-loop tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.data import pipeline as dp
+from repro.checkpoint import store
+from repro.serve.engine import Engine, Request, quantize_resident_weights
+
+
+class TestDataPipeline:
+    def test_lm_batches_deterministic(self):
+        cfg = dp.LMDataConfig(vocab_size=100, seq_len=32, global_batch=4,
+                              seed=7)
+        a = next(dp.lm_batches(cfg))
+        b = next(dp.lm_batches(cfg))
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+        assert a["tokens"].shape == (4, 32)
+        # targets are next-token shifted
+        full_a = np.asarray(a["tokens"])
+        full_t = np.asarray(a["targets"])
+        np.testing.assert_array_equal(full_a[:, 1:], full_t[:, :-1])
+
+    def test_induction_structure_learnable(self):
+        """Copy structure means a bigram/induction learner beats unigram."""
+        cfg = dp.LMDataConfig(vocab_size=50, seq_len=128, global_batch=2,
+                              seed=0, copy_period=32)
+        b = next(dp.lm_batches(cfg))
+        toks = np.asarray(b["tokens"])
+        # inside each period, second half == first half
+        assert (toks[:, 16:32] == toks[:, 0:16]).all()
+
+    def test_model_aware_batches(self):
+        for arch in ("llava-next-mistral-7b", "whisper-small"):
+            cfg = get_config(arch, smoke=True)
+            b = next(dp.batch_for_model(cfg, 16, 2))
+            if cfg.input_mode == "embeddings":
+                assert b["embeds"].shape == (2, 16, cfg.d_model)
+            if cfg.input_mode == "audio+tokens":
+                assert b["audio"].shape == (2, cfg.encoder_seq, cfg.d_model)
+
+    def test_classification_dataset(self):
+        x, y, xt, yt = dp.classification_dataset(dp.ClsDataConfig(
+            n_train=256, n_test=64))
+        assert x.shape == (256, 32) and yt.shape == (64,)
+        bx, by = next(dp.classification_batches(x, y, 32))
+        assert bx.shape == (32, 32)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(10, dtype=jnp.float32),
+                "b": {"c": jnp.ones((3, 4), jnp.bfloat16),
+                      "d": jnp.int32(7)}}
+        store.save(str(tmp_path), tree, step=42)
+        like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+        out = store.restore(str(tmp_path), like)
+        for k, (u, v) in enumerate(zip(jax.tree.leaves(tree),
+                                       jax.tree.leaves(out))):
+            np.testing.assert_array_equal(np.asarray(u, np.float32),
+                                          np.asarray(v, np.float32))
+        assert store.latest_step(str(tmp_path)) == 42
+
+    def test_train_state_roundtrip(self, tmp_path):
+        from repro.core.qadam import QAdamConfig, qadam
+        params = {"w": jnp.ones((8, 8))}
+        opt = qadam(QAdamConfig())
+        state = opt.init(params)
+        store.save(str(tmp_path), {"params": params, "opt": state._asdict()},
+                   step=1)
+        out = store.restore(str(tmp_path),
+                            {"params": params, "opt": state._asdict()})
+        assert out["opt"]["count"] == 0
+
+
+class TestServeEngine:
+    def test_generate_batched(self):
+        cfg = get_config("yi-6b", smoke=True)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = Engine(model, params, max_seq=48)
+        reqs = [Request(prompt=[5, 6, 7, 8], max_new_tokens=6),
+                Request(prompt=[9, 10, 11, 12], max_new_tokens=6)]
+        res = eng.generate(reqs)
+        assert len(res) == 2
+        assert all(len(r.tokens) == 6 for r in res)
+        assert all(0 <= t < cfg.vocab_size for r in res for t in r.tokens)
+
+    def test_quantized_resident_consistency(self):
+        cfg = get_config("yi-6b", smoke=True)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(1))
+        reqs = [Request(prompt=[3, 4, 5, 6], max_new_tokens=4)]
+        full = Engine(model, params, max_seq=32).generate(reqs)
+        quant = Engine(model, params, max_seq=32,
+                       quantized=True).generate(reqs)
+        # mild perturbation: first token usually agrees
+        assert full[0].tokens[0] == quant[0].tokens[0]
+
+    def test_engine_matches_forward_greedy(self):
+        """Engine's first generated token == argmax of forward logits."""
+        cfg = get_config("gemma2-2b", smoke=True)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(2))
+        prompt = [2, 3, 4, 5, 6, 7]
+        batch = {"tokens": jnp.asarray([prompt], jnp.int32),
+                 "targets": jnp.asarray([prompt], jnp.int32),
+                 "mask": jnp.ones((1, len(prompt)), jnp.float32)}
+        logits, _ = model.forward(params, batch)
+        want = int(jnp.argmax(logits[0, -1]))
+        res = Engine(model, params, max_seq=32).generate(
+            [Request(prompt=prompt, max_new_tokens=2)])
+        assert res[0].tokens[0] == want
+
+
+class TestTrainLoop:
+    def test_loop_runs_and_logs(self):
+        from repro.launch.mesh import make_local_mesh
+        from repro.dist.step import make_train_step, TrainConfig
+        from repro.train.loop import train, LoopConfig, comm_bytes_per_step
+        from repro.data.pipeline import batch_for_model
+
+        cfg = get_config("yi-6b", smoke=True)
+        model = Model(cfg)
+        mesh = make_local_mesh(data=1, model=1)
+        tc = TrainConfig(alpha=3e-3, grad_k=6, weight_k=None,
+                         worker_axes=())
+        art = make_train_step(model, mesh, tc)
+        comm = comm_bytes_per_step(art, tc)
+        assert comm["total_bytes"] > 0
+        batches = batch_for_model(cfg, 32, 2, seed=0)
+        logs = []
+        state, hist = train(art, tc, batches,
+                            LoopConfig(steps=8, log_every=4),
+                            log=logs.append)
+        assert len(hist) >= 2
+        assert hist[-1]["loss"] < hist[0]["loss"] + 0.5
+        assert any("loss" in l for l in logs)
