@@ -16,7 +16,7 @@ import numpy as np
 
 
 def _flatten(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     keys = ["/".join(str(getattr(k, "key", getattr(k, "name", k)))
                      for k in path) for path, _ in flat]
     vals = [v for _, v in flat]

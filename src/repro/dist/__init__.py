@@ -1,0 +1,8 @@
+"""Distributed QAdam-EF (Algorithms 2+3): sharding plan, quantized wire,
+and the parameter-server train/serve steps.
+
+  sharding     - parameter layout: model-axis shard dims + worker chunking
+  collectives  - the quantized wire (packed uint8 exchange / broadcast)
+  step         - make_train_step / make_serve_step on top of the above
+"""
+from repro.dist import sharding, collectives, step  # noqa: F401

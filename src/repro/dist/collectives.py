@@ -1,0 +1,205 @@
+"""The quantized wire of Algorithm 3: every cross-worker collective ships
+bit-packed uint8 payloads (plus f32 scales), never raw floats.
+
+Two worker-axis channels (both error-compensated in ``repro.dist.step``):
+
+  * **update exchange** (worker -> server): each worker quantizes its
+    update ``Delta_t + e_t`` for the whole model-shard, packs the codes to
+    ``wire_bits_for_log(k_g)`` bits each, and all-to-alls chunk rows so
+    that worker ``w`` (the "server" for chunk ``w``) receives every
+    worker's packed codes for its chunk. Per leaf this moves
+    ``n_workers * packed_nbytes(c, bits)`` bytes per device.
+  * **weight broadcast** (server -> worker): each server quantizes its
+    updated master chunk with Q_x, packs to 8-bit codes and all-gathers,
+    so every worker reassembles Q_x(x_{t+1}) for the full shard.
+
+One model-axis channel:
+
+  * **weight gather** (FSDP / serve): per-layer all_gather of weight
+    shards, optionally int8 (per-shard amax scale) - the serve path's
+    "int8 weight gather" and the train path's ``model_gather_quant``.
+
+All functions that touch ``jax.lax`` collectives must run inside
+``shard_map``; the pack/unpack helpers are pure and unit-tested directly
+(``tests/test_packing.py``).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import pack_codes, unpack_codes, packed_nbytes
+from repro.dist.sharding import chunk_size, flatten_pad
+from repro.kernels import ref as KREF
+
+
+# ---------------------------------------------------------------------------
+# wire format (pure helpers)
+# ---------------------------------------------------------------------------
+
+def wire_bits_for_log(k_g: int) -> int:
+    """Packed bits/code for the log grid: smallest of {2,4,8} whose signed
+    range [-2^(b-1), 2^(b-1)-1] holds codes in [-(k_g+1), k_g+1]."""
+    for b in (2, 4, 8):
+        if k_g + 1 <= 2 ** (b - 1) - 1:
+            return b
+    return 8
+
+
+def pack_rows(codes_rows: jax.Array, bits: int) -> jax.Array:
+    """Pack each worker row independently: (n_workers, c) int codes ->
+    (n_workers, packed_nbytes(c, bits)) uint8. Row-wise packing keeps
+    chunk boundaries byte-aligned for the all_to_all."""
+    return jax.vmap(lambda r: pack_codes(r, bits))(codes_rows)
+
+
+def unpack_rows(packed_rows: jax.Array, bits: int, c: int) -> jax.Array:
+    """Inverse of pack_rows -> (n_workers, c) int8."""
+    return jax.vmap(lambda r: unpack_codes(r, bits, c))(packed_rows)
+
+
+def amax_scale(x: jax.Array) -> jax.Array:
+    """Per-tensor amax scale with the quantizers' zero-guard. Every
+    channel must use this exact formulation - the bit-equivalence tests
+    depend on the scales matching across channels."""
+    amax = jnp.max(jnp.abs(x))
+    return jnp.where(amax > 0, amax, 1.0).astype(jnp.float32)
+
+
+def uniform_wire_codes(x: jax.Array, scale, k_x: int) -> jax.Array:
+    """Q_x codes clipped into int8 wire range. Only k_x=7 can clip (codes
+    reach +/-128 when |x| rides the grid edge); the paper's weights live
+    well inside [-0.5, 0.5], so the clip is a no-op in practice."""
+    codes = KREF.uniform_quantize(x, scale, k_x)
+    if k_x >= 7:
+        codes = jnp.clip(codes, -127, 127)
+    return codes.astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (single source of truth for train.loop + tests).
+# Counts packed *code* payloads only; the f32 scale side-channels (one
+# scalar per leaf per worker, per-256-block for ef_sgd) are excluded.
+# ---------------------------------------------------------------------------
+
+def update_exchange_nbytes(c: int, n_workers: int, grad_k: Optional[int],
+                           mode: str = "qadam") -> int:
+    """Per-device bytes of the update-exchange payload for one leaf, by
+    optimizer mode: qadam ships log-grid codes packed to
+    wire_bits_for_log(grad_k) (f32 rows when grad_k is None), the
+    terngrad/ef_sgd baselines ship 2-bit codes, and dp_adam all-reduces
+    f32 gradient rows (no quantized wire)."""
+    if mode in ("terngrad", "ef_sgd"):
+        return n_workers * packed_nbytes(c, 2)
+    if mode == "dp_adam" or grad_k is None:
+        return n_workers * c * 4
+    return n_workers * packed_nbytes(c, wire_bits_for_log(grad_k))
+
+
+def weight_broadcast_nbytes(c: int, n_workers: int, full_numel: int,
+                            weight_k: Optional[int],
+                            min_numel: int = 0) -> int:
+    """Per-device bytes of the weight-broadcast payload for one leaf
+    (8-bit Q_x codes, or f32 rows for small / unquantized leaves)."""
+    if weight_k is None or full_numel < min_numel:
+        return n_workers * c * 4
+    return n_workers * packed_nbytes(c, 8)
+
+
+# ---------------------------------------------------------------------------
+# worker-axis collectives (inside shard_map)
+# ---------------------------------------------------------------------------
+
+def worker_index(axes: Sequence[str], sizes: Sequence[int]) -> jax.Array:
+    """Flat worker id, row-major over the worker axes."""
+    idx = jnp.int32(0)
+    for a, s in zip(axes, sizes):
+        idx = idx * s + jax.lax.axis_index(a)
+    return idx
+
+
+def gather_rows(x: jax.Array, axes: Sequence[str]) -> jax.Array:
+    """All-gather one per-worker value -> (n_workers, *x.shape), rows in
+    flat worker order (same order as worker_index)."""
+    r = x[None]
+    for a in reversed(tuple(axes)):
+        r = jax.lax.all_gather(r, a, axis=0, tiled=True)
+    return r
+
+
+def exchange_rows(rows: jax.Array, axes: Sequence[str],
+                  sizes: Sequence[int]) -> jax.Array:
+    """All-to-all of worker-ownership rows: send row j to worker j; the
+    result's row i is worker i's row for *this* worker. Implemented as one
+    transposing all_to_all per worker axis."""
+    axes = tuple(axes)
+    if not axes:
+        return rows
+    nw = int(np.prod(sizes))
+    x = rows.reshape(tuple(sizes) + rows.shape[1:])
+    for i, a in enumerate(axes):
+        x = jax.lax.all_to_all(x, a, split_axis=i, concat_axis=i)
+    return x.reshape((nw,) + rows.shape[1:])
+
+
+def exchange_packed(codes: jax.Array, bits: int, n_workers: int,
+                    axes: Sequence[str], sizes: Sequence[int]
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Update-exchange channel for one leaf: flat int codes -> packed
+    uint8 all_to_all -> (n_workers, c) int8 codes received for my chunk.
+    Returns (codes_rows, packed_payload) - the payload is returned so the
+    wire dtype/size is assertable in tests."""
+    c = chunk_size(codes.shape[0], n_workers)
+    rows = flatten_pad(codes, n_workers)
+    packed = pack_rows(rows, bits)
+    assert packed.dtype == jnp.uint8
+    recv = exchange_rows(packed, axes, sizes)
+    return unpack_rows(recv, bits, c), packed
+
+
+def broadcast_packed(codes_chunk: jax.Array, axes: Sequence[str]
+                     ) -> jax.Array:
+    """Weight-broadcast channel for one leaf: my chunk's 8-bit codes ->
+    packed uint8 all_gather -> (n_workers, c) int8 codes of every chunk."""
+    c = codes_chunk.shape[0]
+    packed = pack_codes(codes_chunk, 8)
+    assert packed.dtype == jnp.uint8
+    rows = gather_rows(packed, axes)
+    return unpack_rows(rows, 8, c)
+
+
+# ---------------------------------------------------------------------------
+# model-axis weight gather (FSDP / serve), optionally int8
+# ---------------------------------------------------------------------------
+
+def gather_shard(leaf: jax.Array, ax: int, n_shards: int,
+                 axis_name: str = "model") -> jax.Array:
+    """Plain full-precision all_gather of a weight shard along `ax`."""
+    if n_shards <= 1:
+        return leaf
+    return jax.lax.all_gather(leaf, axis_name, axis=ax, tiled=True)
+
+
+def quantized_gather_shard(leaf: jax.Array, ax: int, n_shards: int,
+                           k_x: int, absolute: bool,
+                           axis_name: str = "model") -> jax.Array:
+    """Int8 weight gather: quantize the local shard (per-shard scale),
+    all_gather codes + scales, dequantize each received segment with its
+    source scale. With n_shards == 1 this degenerates to local Q_x."""
+    leaf32 = leaf.astype(jnp.float32)
+    scale = jnp.float32(0.5) if absolute else amax_scale(leaf32)
+    codes = uniform_wire_codes(leaf32, scale, k_x)
+    if n_shards <= 1:
+        return KREF.uniform_dequantize(codes, scale, k_x)
+    seg = jax.lax.all_gather(codes, axis_name, axis=0,
+                             tiled=False)          # (n_shards, *shard)
+    scales = jax.lax.all_gather(scale, axis_name)  # (n_shards,)
+    bshape = (n_shards,) + (1,) * leaf.ndim
+    deq = KREF.uniform_dequantize(seg, scales.reshape(bshape), k_x)
+    out = jnp.moveaxis(deq, 0, ax)                 # (..., n_shards, loc, ...)
+    shape = list(leaf.shape)
+    shape[ax] = shape[ax] * n_shards
+    return out.reshape(shape)

@@ -1,0 +1,201 @@
+"""Parameter-layout planner for the distributed step.
+
+Two orthogonal partitions are planned here:
+
+  1. **Model-axis sharding** (context/tensor parallelism): each parameter
+     leaf is assigned a shard dim along which it is split over the mesh's
+     ``model`` axis. The forward pass holds only the local shard and
+     gathers full weights per layer (FSDP-style; see
+     ``repro.dist.collectives``). MoE expert tensors are *expert-sharded*
+     and never gathered - ``repro.models.layers.moe`` consumes the local
+     expert slice directly.
+
+  2. **Worker chunking** (the parameter-server partition of Algorithms
+     2+3): each model-shard is flattened, zero-padded and split into
+     ``n_workers`` equal chunks; worker ``w`` is the "server" that owns
+     chunk ``w``, applies the averaged quantized updates to it, and
+     broadcasts its quantized weights back.
+
+Shard-dim encoding (the ``dims`` tree of a :class:`Layout`):
+
+  * ``REPLICATED`` (-1): leaf is not sharded over the model axis.
+  * ``ROW`` (-2): sharded along axis 0 of the *unstacked* shape (axis 1 of
+    a scan-stacked ``blocks`` leaf).
+  * ``EXPERT_MARKER`` (0): MoE expert tensor; sharded along the expert
+    axis (axis 0 unstacked) and kept local during the forward gather.
+  * ``d >= 1``: sharded along unstacked axis ``d``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+REPLICATED = -1
+ROW = -2
+EXPERT_MARKER = 0
+
+# pytrees whose top-level key means "leading dim is the scan-over-layers
+# stack, not a real parameter axis"
+_STACKED_KEYS = ("blocks", "enc_blocks")
+_EXPERT_LEAVES = ("w_gate", "w_up", "w_down")
+
+
+# ---------------------------------------------------------------------------
+# worker chunking
+# ---------------------------------------------------------------------------
+
+def chunk_size(numel: int, n_workers: int) -> int:
+    """Per-worker chunk length: ceil(numel / n_workers)."""
+    return -(-int(numel) // int(n_workers))
+
+
+def flatten_pad(x: jax.Array, n_workers: int) -> jax.Array:
+    """Flatten a leaf (or shard) and split it into the worker-ownership
+    rows of Algorithm 2: (n_workers, chunk_size), zero padded."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    c = chunk_size(n, n_workers)
+    flat = jnp.pad(flat, (0, n_workers * c - n))
+    return flat.reshape(n_workers, c)
+
+
+def unflatten_chunked(rows: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+    """Inverse of flatten_pad: (n_workers, c) -> original shape."""
+    numel = int(np.prod(shape)) if shape else 1
+    return rows.reshape(-1)[:numel].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# model-axis shard dims
+# ---------------------------------------------------------------------------
+
+def _is_expert_path(path: Tuple[str, ...]) -> bool:
+    return ("moe" in path and "shared" not in path
+            and bool(path) and path[-1] in _EXPERT_LEAVES)
+
+
+def shard_dim_for(path: Tuple[str, ...], shape: Tuple[int, ...],
+                  n_shards: int, stacked: bool) -> int:
+    """Choose the model-axis shard dim for one leaf (see module docstring
+    for the encoding). Replicates anything with no divisible axis."""
+    un = tuple(shape[1:]) if stacked else tuple(shape)
+    if not un:
+        return REPLICATED
+    if _is_expert_path(path) and un[0] % n_shards == 0:
+        return EXPERT_MARKER
+    if n_shards <= 1:
+        return REPLICATED
+    if un[0] % n_shards == 0:
+        return ROW
+    for d in range(1, len(un)):
+        if un[d] % n_shards == 0:
+            return d
+    return REPLICATED
+
+
+def axis_of(dim: int, stacked: bool):
+    """Array axis (in the possibly-stacked shape) a shard dim refers to,
+    or None for REPLICATED."""
+    if dim == REPLICATED:
+        return None
+    off = 1 if stacked else 0
+    return off if dim in (ROW, EXPERT_MARKER) else dim + off
+
+
+def local_shard_shape(shape: Tuple[int, ...], dim: int, stacked: bool,
+                      n_shards: int) -> Tuple[int, ...]:
+    """Shape of one model-axis shard of a leaf with the given shape."""
+    ax = axis_of(dim, stacked)
+    if ax is None:
+        return tuple(shape)
+    out = list(shape)
+    out[ax] = out[ax] // n_shards
+    return tuple(out)
+
+
+def shard_of(leaf: jax.Array, dim: int, stacked: bool, n_shards: int,
+             index: int) -> jax.Array:
+    """Static slice of model-shard `index` out of a full leaf."""
+    ax = axis_of(dim, stacked)
+    if ax is None:
+        return leaf
+    size = leaf.shape[ax] // n_shards
+    return jax.lax.slice_in_dim(leaf, index * size, (index + 1) * size,
+                                axis=ax)
+
+
+def leaf_pspec(shape: Tuple[int, ...], dim: int, stacked: bool,
+               model_axis: str = "model") -> P:
+    """PartitionSpec placing a full leaf on a mesh: shard dim -> model
+    axis, everything else replicated (worker axes never shard weights)."""
+    ax = axis_of(dim, stacked)
+    if ax is None:
+        return P()
+    ent = [None] * len(shape)
+    ent[ax] = model_axis
+    return P(*ent)
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Per-leaf sharding plan for one parameter pytree.
+
+    ``_leaves``/``dims``/``stacked`` mirror the params tree; leaves are
+    jax.ShapeDtypeStruct / shard-dim int / stacked bool respectively.
+    """
+    _leaves: Any
+    dims: Any
+    stacked: Any
+    n_shards: int
+
+    def param_specs(self, model_axis: str = "model"):
+        """PartitionSpec tree for the *full* (stacked) parameter leaves."""
+        return jax.tree.map(
+            lambda l, d, s: leaf_pspec(tuple(l.shape), d, s, model_axis),
+            self._leaves, self.dims, self.stacked)
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        out.append(str(getattr(k, "key", getattr(k, "name", k))))
+    return tuple(out)
+
+
+def build_layout(params: Any, n_shards: int) -> Layout:
+    """Plan model-axis sharding for a parameter pytree (concrete arrays or
+    ShapeDtypeStructs). ``n_shards`` is the mesh's model-axis size."""
+    def sds(leaf):
+        dtype = getattr(leaf, "dtype", jnp.float32)
+        return jax.ShapeDtypeStruct(tuple(leaf.shape), dtype)
+
+    leaves = jax.tree_util.tree_map_with_path(lambda p, l: sds(l), params)
+    stacked = jax.tree_util.tree_map_with_path(
+        lambda p, l: bool(_path_keys(p)) and
+        _path_keys(p)[0] in _STACKED_KEYS, params)
+    dims = jax.tree_util.tree_map_with_path(
+        lambda p, l: shard_dim_for(
+            _path_keys(p), tuple(l.shape), n_shards,
+            bool(_path_keys(p)) and _path_keys(p)[0] in _STACKED_KEYS),
+        params)
+    return Layout(_leaves=leaves, dims=dims, stacked=stacked,
+                  n_shards=int(n_shards))
+
+
+def worker_info(mesh, worker_axes) -> Tuple[Tuple[str, ...],
+                                            Tuple[int, ...], int]:
+    """Filter requested worker axes to ones present in the mesh; return
+    (axes, sizes, n_workers)."""
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = tuple(a for a in worker_axes if a in ms)
+    sizes = tuple(ms[a] for a in axes)
+    return axes, sizes, int(np.prod(sizes)) if sizes else 1

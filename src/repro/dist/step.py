@@ -1,0 +1,586 @@
+"""Distributed QAdam-EF step (Algorithms 2+3): quantized parameter server
+over the mesh's worker axes, context/model parallelism over its model axis.
+
+State layout (matches ``repro.launch.dryrun`` and the equivalence tests):
+every leaf of the train state is *chunked* - shape
+``worker_sizes + (n_model_shards, X)`` sharded
+``P(*worker_axes, "model", None)`` - so each device holds a 1-D slice:
+
+  * ``master``: worker w's f32 chunk of model-shard m (X = chunk size c).
+    Worker w is the Algorithm-2 "server" for its chunk.
+  * ``m, v, e``: per-worker Adam moments / EF residual. Workers see
+    different gradients, so each keeps moments for the *whole* shard
+    (X = shard numel); in ``dp_adam`` mode gradients are averaged first
+    and the moments are chunk-sharded like ``master`` (ZeRO-style).
+
+Per step (mode="qadam"):
+  1. weight broadcast: every server quantizes its chunk with Q_x, packed
+     8-bit codes are all-gathered over the worker axes, each worker
+     reassembles Q_x(x_t) for its model shard (small leaves ride f32).
+  2. forward/backward at Q_x(x_t) (Assumption 3), sequence sharded over
+     the model axis, per-layer FSDP weight gather; each worker gets the
+     gradient of *its own* mean loss.
+  3. fused Adam+EF update (``repro.kernels.adam_ef`` on TPU, the jnp
+     oracle elsewhere): Delta_t + e_t, per-shard amax scale, log-grid
+     codes, new residual e_{t+1}.
+  4. update exchange: packed codes all-to-all so each server receives all
+     workers' codes for its chunk; it averages the dequantized deltas and
+     applies them to its master chunk.
+
+Modes: "qadam" (the paper), "dp_adam" (fp32 data-parallel Adam baseline,
+partition-invariant), "terngrad", "ef_sgd" (the paper's comparison
+baselines as distributed optimizers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.qadam import QAdamConfig, _alpha_t, _theta_t
+from repro.dist import sharding as SH
+from repro.dist import collectives as C
+from repro.kernels import ref as KREF
+from repro.models.layers import ShardCtx
+
+MODEL_AXIS = "model"
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    alpha: float = 1e-3
+    beta: float = 0.99
+    theta: float = 0.999
+    eps: float = 1e-5
+    schedule: str = "constant"          # "sqrt" | "constant" | "halving:K"
+    grad_k: Optional[int] = 6           # log-grid k_g; None = f32 wire
+    weight_k: Optional[int] = None      # uniform k_x; None = f32 broadcast
+    weight_absolute: bool = True        # paper's absolute [-0.5,0.5] grid
+    weight_q_min_numel: int = 2 ** 14   # small leaves skip Q_x (biases/norms)
+    error_feedback: bool = True
+    mode: str = "qadam"                 # qadam | dp_adam | terngrad | ef_sgd
+    worker_axes: Tuple[str, ...] = ("pod", "data")
+    batch_dim_shardable: bool = True
+    model_gather_quant: Optional[int] = None  # int8 FSDP gather bits
+    fused_kernels: Optional[bool] = None      # None = auto (TPU only)
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    weight_k: Optional[int] = None      # int8 weight-gather bits
+    weight_absolute: bool = False
+    worker_axes: Tuple[str, ...] = ("pod", "data")
+    batch_dim_shardable: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafMeta:
+    """Per-leaf wire geometry. `shp` is the local model-shard shape,
+    `numel` its element count, `c` the per-worker chunk length."""
+    shp: Tuple[int, ...]
+    c: int
+    numel: int
+    dim: int
+    stacked: bool
+    shape: Tuple[int, ...]
+
+    @property
+    def full_numel(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def _leaf_meta(layout: SH.Layout, n_workers: int):
+    """Tree of LeafMeta mirroring the parameter tree."""
+    def one(l, d, s):
+        shp = SH.local_shard_shape(tuple(l.shape), d, s, layout.n_shards)
+        n = int(np.prod(shp)) if shp else 1
+        return LeafMeta(shp=shp, c=SH.chunk_size(n, n_workers), numel=n,
+                        dim=d, stacked=s, shape=tuple(l.shape))
+    return jax.tree.map(one, layout._leaves, layout.dims, layout.stacked)
+
+
+class StepArtifacts(NamedTuple):
+    init_state: Callable
+    step_fn: Callable
+    layout: SH.Layout
+    n_workers: int
+    worker_axes: Tuple[str, ...]
+    mesh: Any
+    config: Any
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _dims_by_path(layout: SH.Layout):
+    flat = jax.tree_util.tree_flatten_with_path(layout.dims)[0]
+    dims = {SH._path_keys(p): d for p, d in flat}
+    st = {SH._path_keys(p): s for p, s in
+          jax.tree_util.tree_flatten_with_path(layout.stacked)[0]}
+    return dims, st
+
+
+def _make_param_gather(layout: SH.Layout, Nm: int, expert_local: bool,
+                       quant_k: Optional[int], quant_absolute: bool,
+                       quant_min_numel: int = 0,
+                       stacked_at_static: bool = False):
+    """ctx.param_gather hook: reconstruct full weights from model-axis
+    shards, leaving expert tensors local when the MoE layer is sharded.
+
+    ``stacked_at_static`` (serve): gather the scan-stacked ``blocks``
+    leaves whole during the "static" pass - the Q_x scale is then one
+    per-shard amax across all layers of a leaf (matching the serve
+    equivalence reference), and the per-layer gather inside the scan
+    becomes a no-op. Training keeps the per-layer (FSDP-style) gather.
+    """
+    dims_by_path, stacked_by_path = _dims_by_path(layout)
+
+    def gather_leaf(dim: int, stacked: bool, leaf):
+        if dim == SH.REPLICATED:
+            return leaf
+        ax = SH.axis_of(dim, stacked)
+        if dim == SH.EXPERT_MARKER and expert_local:
+            if quant_k is not None and leaf.size >= quant_min_numel:
+                # keep resident experts on the same Q_x wire semantics
+                return C.quantized_gather_shard(leaf, ax, 1, quant_k,
+                                                quant_absolute)
+            return leaf
+        if quant_k is not None and leaf.size * Nm >= quant_min_numel:
+            return C.quantized_gather_shard(leaf, ax, Nm, quant_k,
+                                            quant_absolute)
+        return C.gather_shard(leaf, ax, Nm)
+
+    def gather(subtree, kind: str):
+        if Nm <= 1 and quant_k is None:
+            return subtree
+        if stacked_at_static and kind != "static":
+            return subtree  # already gathered whole in the static pass
+
+        def one(path, leaf):
+            keys = SH._path_keys(path)
+            if kind == "static":
+                if keys and keys[0] in SH._STACKED_KEYS:
+                    if not stacked_at_static:
+                        return leaf  # per-layer gather inside the scan
+                    return gather_leaf(dims_by_path[keys],
+                                       stacked_by_path[keys], leaf)
+                full = keys
+            else:
+                full = (kind,) + keys
+            return gather_leaf(dims_by_path[full], False, leaf)
+
+        return jax.tree_util.tree_map_with_path(one, subtree)
+
+    return gather
+
+
+def _batch_geometry(batch, Nm: int, worker_axes, n_workers: int,
+                    shardable: bool):
+    """Static decisions: shard batch over workers / sequence over model."""
+    if "tokens" in batch:
+        B, S = batch["tokens"].shape
+    else:
+        B, S = batch["embeds"].shape[:2]
+    Wb = worker_axes if (shardable and worker_axes
+                         and B % n_workers == 0) else ()
+    cp = Nm > 1 and S % Nm == 0
+    if "audio" in batch and batch["audio"].shape[1] % Nm != 0:
+        cp = False
+    return Wb, cp
+
+
+def _batch_specs(batch, Wb, cp):
+    b0 = Wb if Wb else None
+    sa = MODEL_AXIS if cp else None
+    specs = {}
+    for k, v in batch.items():
+        ent = [None] * v.ndim
+        ent[0] = b0
+        if v.ndim >= 2:
+            ent[1] = sa
+        specs[k] = P(*ent)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    worker_axes, wsizes, n_workers = SH.worker_info(mesh, tc.worker_axes)
+    Nm = int(ms.get(MODEL_AXIS, 1))
+    model_in_mesh = MODEL_AXIS in ms
+
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    layout = SH.build_layout(pshapes, Nm)
+    metas = _leaf_meta(layout, n_workers)
+    qcfg = QAdamConfig(alpha=tc.alpha, beta=tc.beta, theta=tc.theta,
+                       eps=tc.eps, schedule=tc.schedule)
+    use_fused = (tc.fused_kernels if tc.fused_kernels is not None
+                 else jax.default_backend() == "tpu")
+
+    treedef = jax.tree_util.tree_structure(layout._leaves)
+    metas_flat = treedef.flatten_up_to(metas)
+    chunk_sharded = tc.mode == "dp_adam"  # moments chunked vs full-shard
+    state_spec = P(*worker_axes, MODEL_AXIS, None) if model_in_mesh \
+        else P(*worker_axes, None, None)
+
+    def _state_x(meta):  # per-leaf trailing dim of m/v/e
+        return meta.c if chunk_sharded else meta.numel
+
+    # ---------------- init ----------------
+    def init_state(key):
+        params = model.init(key)
+        p_flat = treedef.flatten_up_to(params)
+        sh = NamedSharding(mesh, state_spec)
+        master, zs = [], []
+        for p, meta in zip(p_flat, metas_flat):
+            rows = [SH.flatten_pad(
+                SH.shard_of(p, meta.dim, meta.stacked, Nm, mi)
+                .reshape(-1).astype(jnp.float32), n_workers)
+                for mi in range(Nm)]
+            arr = jnp.stack(rows, axis=1)            # (n_workers, Nm, c)
+            master.append(jax.device_put(
+                arr.reshape(wsizes + (Nm, meta.c)), sh))
+            # m/v/e exist for every mode even where unused (terngrad
+            # reads none, ef_sgd skips v): the chunked state layout is a
+            # fixed contract with repro.launch.dryrun's analytic state
+            # reconstruction and with checkpoint round-trips.
+            zs.append(jax.device_put(
+                jnp.zeros(wsizes + (Nm, _state_x(meta)), jnp.float32), sh))
+        mtree = jax.tree_util.tree_unflatten(treedef, master)
+        ztree = jax.tree_util.tree_unflatten(treedef, zs)
+        zero = lambda: jax.tree.map(jnp.copy, ztree)
+        return {"master": mtree, "m": zero(), "v": zero(), "e": zero(),
+                "count": jax.device_put(jnp.zeros((), jnp.int32),
+                                        NamedSharding(mesh, P()))}
+
+    # ---------------- per-leaf channels ----------------
+    def worker_mean(rows):
+        """Mean over worker rows via pairwise (tree) summation: with n a
+        power of two and identical rows (the paper's identical-worker
+        equivalence), the result is bit-exact - a sequential reduce
+        (((x+x)+x)+x) is not, and its ulp bias flips quantizer codes."""
+        def psum_rows(x):
+            k = x.shape[0]
+            if k == 1:
+                return x[0]
+            h = k // 2
+            return psum_rows(x[:h]) + psum_rows(x[h:])
+        return psum_rows(rows) / rows.shape[0]
+
+    def chunks_to_shard(chunk, meta):
+        """Weight-broadcast channel: my master chunk -> full f32 shard."""
+        quantized = (tc.weight_k is not None
+                     and meta.full_numel >= tc.weight_q_min_numel)
+        if quantized:
+            scale = jnp.float32(0.5) if tc.weight_absolute \
+                else C.amax_scale(chunk)
+            codes = C.uniform_wire_codes(chunk, scale, tc.weight_k)
+            codes_rows = C.broadcast_packed(codes, worker_axes)
+            scales = C.gather_rows(scale, worker_axes)       # (n_workers,)
+            rows = KREF.uniform_dequantize(codes_rows, scales[:, None],
+                                           tc.weight_k)
+        else:
+            rows = C.gather_rows(chunk, worker_axes)
+        return SH.unflatten_chunked(rows, meta.shp)
+
+    def adam_delta(g, m, v, e, a_t, th_t):
+        """Moments + Delta_t + e_t; fused Pallas pass on TPU."""
+        from repro.kernels.quantize import BLOCK_ROWS, LANES
+        n = g.shape[0]
+        tile = BLOCK_ROWS * LANES
+        if use_fused and n >= tile:
+            pad = (-n) % tile
+            pad2 = lambda x: jnp.pad(x, (0, pad)).reshape(-1, LANES)
+            from repro.kernels.adam_ef import adam_moments_pallas
+            hp = jnp.stack([a_t, jnp.float32(tc.beta), th_t,
+                            jnp.float32(tc.eps)])
+            m2, v2, de2, _ = adam_moments_pallas(
+                pad2(g), pad2(m), pad2(v), pad2(e), hp,
+                interpret=jax.default_backend() != "tpu")
+            unpad = lambda x: x.reshape(-1)[:n]
+            return unpad(m2), unpad(v2), unpad(de2)
+        return KREF.adam_ef_moments(g, m, v, e, alpha_t=a_t, beta=tc.beta,
+                                    theta_t=th_t, eps=tc.eps)
+
+    def upd_qadam(g, m, v, e, chunk, meta, a_t, th_t, key):
+        m2, v2, de = adam_delta(g, m, v, e, a_t, th_t)
+        if tc.grad_k is None:
+            rows = SH.flatten_pad(de, n_workers)
+            recv = C.exchange_rows(rows, worker_axes, wsizes)
+            e2 = jnp.zeros_like(e)
+        else:
+            scale = C.amax_scale(de)
+            codes = KREF.log_quantize(de, scale, tc.grad_k)
+            deq = KREF.log_dequantize(codes, scale, tc.grad_k)
+            e2 = (de - deq) if tc.error_feedback else jnp.zeros_like(e)
+            codes_rows, _ = C.exchange_packed(
+                codes, C.wire_bits_for_log(tc.grad_k), n_workers,
+                worker_axes, wsizes)
+            scales = C.gather_rows(scale, worker_axes)
+            recv = KREF.log_dequantize(codes_rows, scales[:, None],
+                                       tc.grad_k)
+        return chunk - worker_mean(recv), m2, v2, e2
+
+    def upd_dp_adam(g, m, v, e, chunk, meta, a_t, th_t, key):
+        rows = SH.flatten_pad(g, n_workers)
+        if worker_axes:
+            rows = jax.lax.psum(rows, worker_axes)
+        w = C.worker_index(worker_axes, wsizes)
+        gc = jax.lax.dynamic_index_in_dim(rows, w, 0, keepdims=False)
+        v2 = th_t * v + (1.0 - th_t) * gc * gc
+        m2 = tc.beta * m + (1.0 - tc.beta) * gc
+        upd = a_t * m2 / jnp.sqrt(v2 + tc.eps)
+        return chunk - upd, m2, v2, e
+
+    def upd_terngrad(g, m, v, e, chunk, meta, a_t, th_t, key):
+        scale = C.amax_scale(g)
+        p = jnp.abs(g) / scale
+        b = jax.random.bernoulli(key, p).astype(jnp.int8)
+        codes = jnp.sign(g).astype(jnp.int8) * b
+        codes_rows, _ = C.exchange_packed(codes, 2, n_workers,
+                                          worker_axes, wsizes)
+        scales = C.gather_rows(scale, worker_axes)
+        recv = codes_rows.astype(jnp.float32) * scales[:, None]
+        return chunk - a_t * worker_mean(recv), m, v, e
+
+    def upd_ef_sgd(g, m, v, e, chunk, meta, a_t, th_t, key, block=256):
+        m2 = tc.beta * m + g
+        de = a_t * m2 + e
+        n = de.shape[0]
+        nb = -(-n // block)
+        dpad = jnp.pad(de, (0, nb * block - n)).reshape(nb, block)
+        scale_b = jnp.mean(jnp.abs(dpad), axis=1)            # (nb,)
+        codes2d = jnp.sign(dpad).astype(jnp.int8)
+        deq_own = (codes2d.astype(jnp.float32)
+                   * scale_b[:, None]).reshape(-1)[:n]
+        e2 = de - deq_own
+        codes_rows, _ = C.exchange_packed(codes2d.reshape(-1)[:n], 2,
+                                          n_workers, worker_axes, wsizes)
+        scales = C.gather_rows(scale_b, worker_axes)         # (nw, nb)
+        elem = jnp.repeat(scales, block, axis=1)             # (nw, nb*block)
+        c = meta.c
+        total = n_workers * c
+        if elem.shape[1] < total:
+            elem = jnp.pad(elem, ((0, 0), (0, total - elem.shape[1])))
+        w = C.worker_index(worker_axes, wsizes)
+        scale_cols = jax.lax.dynamic_slice(
+            elem, (jnp.int32(0), w * c), (n_workers, c))
+        recv = codes_rows.astype(jnp.float32) * scale_cols
+        return chunk - worker_mean(recv), m2, v, e2
+
+    updaters = {"qadam": upd_qadam, "dp_adam": upd_dp_adam,
+                "terngrad": upd_terngrad, "ef_sgd": upd_ef_sgd}
+    if tc.mode not in updaters:
+        raise ValueError(f"unknown mode {tc.mode!r}")
+    updater = updaters[tc.mode]
+
+    # ---------------- the sharded step ----------------
+    def _impl(state, batch, cp: bool):
+        masters = [x.reshape(m.c) for x, m in
+                   zip(treedef.flatten_up_to(state["master"]), metas_flat)]
+        ms_ = [x.reshape(_state_x(m)) for x, m in
+               zip(treedef.flatten_up_to(state["m"]), metas_flat)]
+        vs_ = [x.reshape(_state_x(m)) for x, m in
+               zip(treedef.flatten_up_to(state["v"]), metas_flat)]
+        es_ = [x.reshape(_state_x(m)) for x, m in
+               zip(treedef.flatten_up_to(state["e"]), metas_flat)]
+        t = state["count"] + 1
+        a_t = _alpha_t(qcfg, t)
+        th_t = _theta_t(qcfg, t)
+
+        # 1. weight broadcast: chunks -> Q_x(x_t) shards
+        xs = [chunks_to_shard(ch, m) for ch, m in zip(masters, metas_flat)]
+        # fence the forward/backward off from the channel/update code so
+        # XLA compiles it like a standalone value_and_grad: its float
+        # rounding then matches the single-machine reference path instead
+        # of shifting with unrelated fusion decisions.
+        xs = jax.lax.optimization_barrier(xs)
+        x_tree = jax.tree_util.tree_unflatten(treedef, xs)
+
+        # 2. forward/backward at Q_x(x_t)
+        ctx = ShardCtx(
+            cp_axis=MODEL_AXIS if cp else None,
+            cp_size=Nm if cp else 1, dp_axes=worker_axes,
+            param_gather=_make_param_gather(
+                layout, Nm, expert_local=cp,
+                quant_k=tc.model_gather_quant, quant_absolute=False,
+                quant_min_numel=2 ** 14))
+        maxes = (MODEL_AXIS,) if model_in_mesh and Nm > 1 else ()
+        all_axes = worker_axes + maxes
+
+        def lfn(pt):
+            s, nt = model.loss(pt, batch, ctx)
+            if tc.mode == "dp_adam":
+                # local sum / global count; the weight-gather transpose
+                # already sums model-axis contributions, the worker-axis
+                # average happens on chunk rows in upd_dp_adam.
+                gden = jax.lax.psum(nt, all_axes) if all_axes else nt
+                return s / gden, (s, nt)
+            # per-worker mean loss (Algorithm 2). psum's transpose is psum,
+            # so a psum'd objective over-counts cotangents by the axis
+            # size - divide it back out (value is unused, only grads).
+            sw = jax.lax.psum(s, maxes) if maxes else s
+            nw_ = jax.lax.psum(nt, maxes) if maxes else nt
+            return sw / nw_ / (Nm if maxes else 1), (s, nt)
+
+        grads, (s_loc, n_loc) = jax.grad(lfn, has_aux=True)(x_tree)
+        grads = jax.lax.optimization_barrier(grads)
+        loss = (jax.lax.psum(s_loc, all_axes) /
+                jax.lax.psum(n_loc, all_axes)) if all_axes \
+            else s_loc / n_loc
+
+        gs = []
+        for g, meta in zip(treedef.flatten_up_to(grads), metas_flat):
+            g = g.reshape(-1).astype(jnp.float32)
+            if Nm > 1 and meta.dim == SH.REPLICATED:
+                # replicated leaves skip the gather, so their grads miss
+                # the gather-transpose psum over the model axis
+                g = jax.lax.psum(g, MODEL_AXIS)
+            gs.append(g)
+
+        # 3+4. per-worker update + quantized exchange
+        base = jax.random.fold_in(jax.random.PRNGKey(tc.seed), t)
+        widx = C.worker_index(worker_axes, wsizes)
+        new_m, new_mm, new_vv, new_ee = [], [], [], []
+        for i, meta in enumerate(metas_flat):
+            key = jax.random.fold_in(jax.random.fold_in(base, i), widx)
+            nc, nm, nv, ne = updater(gs[i], ms_[i], vs_[i], es_[i],
+                                     masters[i], meta, a_t, th_t, key)
+            lead = (1,) * (len(worker_axes) + 1)
+            new_m.append(nc.reshape(lead + (meta.c,)))
+            new_mm.append(nm.reshape(lead + (_state_x(meta),)))
+            new_vv.append(nv.reshape(lead + (_state_x(meta),)))
+            new_ee.append(ne.reshape(lead + (_state_x(meta),)))
+
+        unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+        new_state = {"master": unf(new_m), "m": unf(new_mm),
+                     "v": unf(new_vv), "e": unf(new_ee), "count": t}
+        return new_state, {"loss": loss}
+
+    def step_fn(state, batch):
+        Wb, cp = _batch_geometry(batch, Nm, worker_axes, n_workers,
+                                 tc.batch_dim_shardable)
+        sspec = {"master": jax.tree.map(lambda _: state_spec,
+                                        layout._leaves),
+                 "count": P()}
+        for k in ("m", "v", "e"):
+            sspec[k] = jax.tree.map(lambda _: state_spec, layout._leaves)
+        bspec = _batch_specs(batch, Wb, cp)
+        fn = shard_map(functools.partial(_impl, cp=cp), mesh=mesh,
+                       in_specs=(sspec, bspec),
+                       out_specs=(sspec, {"loss": P()}),
+                       check_rep=False)
+        return fn(state, batch)
+
+    return StepArtifacts(init_state=init_state, step_fn=step_fn,
+                         layout=layout, n_workers=n_workers,
+                         worker_axes=worker_axes, mesh=mesh, config=tc)
+
+
+# ---------------------------------------------------------------------------
+# serve step
+# ---------------------------------------------------------------------------
+
+def _cache_specs_for(cfg, b0):
+    specs = {}
+    if cfg.arch_type != "ssm":
+        specs["k"] = P(None, b0, MODEL_AXIS, None, None)
+        specs["v"] = P(None, b0, MODEL_AXIS, None, None)
+    if cfg.arch_type in ("ssm", "hybrid"):
+        specs["ssm"] = P(None, b0, None, None, None)
+        specs["conv"] = P(None, b0, None, None)
+    if cfg.arch_type == "encdec":
+        specs["ck"] = P(None, b0, MODEL_AXIS, None, None)
+        specs["cv"] = P(None, b0, MODEL_AXIS, None, None)
+    return specs
+
+
+def make_serve_step(model, mesh, sc: ServeConfig, kind: str = "decode"):
+    """Sharded serving step.
+
+    Returns ``(step, param_specs, (input_specs, cache_specs))``. Params
+    stay model-axis sharded per the layout; the KV cache is sequence-
+    sharded over the model axis and batch-sharded over the worker axes;
+    the weight gather optionally ships int8 Q_x codes (``sc.weight_k``).
+    """
+    cfg = model.cfg
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    worker_axes, wsizes, n_workers = SH.worker_info(mesh, sc.worker_axes)
+    Nm = int(ms.get(MODEL_AXIS, 1))
+
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    layout = SH.build_layout(pshapes, Nm)
+    param_specs = layout.param_specs(MODEL_AXIS)
+    b0 = worker_axes if (sc.batch_dim_shardable and worker_axes) else None
+    input_specs = {"token": P(b0, None), "embeds": P(b0, None, None)}
+    cache_specs = _cache_specs_for(cfg, b0)
+
+    ctx = ShardCtx(
+        cp_axis=MODEL_AXIS if Nm > 1 else None,
+        cp_size=Nm if Nm > 1 else 1, dp_axes=worker_axes,
+        param_gather=_make_param_gather(
+            layout, Nm, expert_local=Nm > 1,
+            quant_k=sc.weight_k, quant_absolute=sc.weight_absolute,
+            stacked_at_static=True))
+
+    if kind == "decode":
+        def step(params, inputs, cache, pos):
+            ispec = {k: input_specs["token" if k == "token" else "embeds"]
+                     for k in inputs}
+            cspec = {k: cache_specs[k] for k in cache}
+            fn = shard_map(
+                lambda p, i, c, q: model.decode_step(p, i, c, q, ctx),
+                mesh=mesh,
+                in_specs=(param_specs, ispec, cspec, P()),
+                out_specs=(P(b0, None), cspec), check_rep=False)
+            return fn(params, inputs, cache, pos)
+        return step, param_specs, (input_specs, cache_specs)
+
+    if kind == "prefill":
+        if cfg.arch_type == "encdec":
+            raise NotImplementedError(
+                "enc-dec prefill goes through prefill_encoder + decode")
+        pf_cache = {k: v for k, v in cache_specs.items()
+                    if k in ("k", "v", "ssm", "conv")}
+
+        def step(params, batch):
+            Wb, cp = _batch_geometry(batch, Nm, worker_axes, n_workers,
+                                     sc.batch_dim_shardable)
+            if "tokens" in batch:
+                S = batch["tokens"].shape[1]
+            else:
+                S = batch["embeds"].shape[1]
+            S_loc = S // Nm if cp else S
+            lctx = ctx if cp else dataclasses.replace(
+                ctx, cp_axis=None, cp_size=1,
+                param_gather=_make_param_gather(
+                    layout, Nm, expert_local=False, quant_k=sc.weight_k,
+                    quant_absolute=sc.weight_absolute,
+                    stacked_at_static=True))
+            bspec = _batch_specs(batch, Wb, cp)
+            out_logits = P(Wb if Wb else None, MODEL_AXIS if cp else None,
+                           None)
+            fn = shard_map(
+                lambda p, b: model.prefill(p, b, max_seq_local=S_loc,
+                                           ctx=lctx),
+                mesh=mesh, in_specs=(param_specs, bspec),
+                out_specs=(out_logits, pf_cache), check_rep=False)
+            return fn(params, batch)
+        return step, param_specs, (input_specs, pf_cache)
+
+    raise ValueError(f"unknown serve kind {kind!r}")

@@ -269,6 +269,15 @@ def apply_model_overrides(cfg, overrides: Optional[dict]):
     return dataclasses.replace(cfg, **top)
 
 
+def _cost_analysis(compiled) -> Dict:
+    """compiled.cost_analysis() returns [dict] on jax<=0.4.x and a plain
+    dict on newer releases; normalize to a dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def build_and_compile(arch: str, shape_name: str, multi_pod: bool,
                       mesh_override=None, smoke: bool = False,
                       train_overrides: Optional[dict] = None,
@@ -316,7 +325,7 @@ def build_and_compile(arch: str, shape_name: str, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.time()
 
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     ma = compiled.memory_analysis()
 
     flops = float(ca.get("flops", 0.0))
@@ -335,7 +344,7 @@ def build_and_compile(arch: str, shape_name: str, multi_pod: bool,
                             batch_shardable, train_overrides)
             coll = parse_collectives(lw.as_text())
             cp = lw.compile()
-            cal = cp.cost_analysis() or {}
+            cal = _cost_analysis(cp)
             pts.append((float(cal.get("flops", 0.0)),
                         float(cal.get("bytes accessed", 0.0)),
                         coll["total"], coll))

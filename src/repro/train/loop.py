@@ -25,16 +25,26 @@ class LoopConfig:
 
 
 def comm_bytes_per_step(art: StepArtifacts, tc: TrainConfig) -> Dict[str, float]:
-    """Analytic per-device wire bytes of the two quantized channels
-    (the paper's 'Comm' column; HLO-verified in benchmarks/roofline)."""
+    """Per-device *code* payload bytes of the two quantized worker
+    channels (the paper's 'Comm' column). Sums, over parameter leaves,
+    the packed uint8 payload each device touches per step - the same
+    arithmetic the wire in ``repro.dist.collectives`` performs, so tests
+    can assert the two agree byte-for-byte
+    (``tests/test_comm_accounting.py``). The f32 scale side-channels
+    (one scalar per leaf per worker; per-256-block for ef_sgd, ~6% of
+    its 2-bit payload) are excluded."""
+    from repro.dist import collectives as C
     from repro.dist.step import _leaf_meta
     metas = _leaf_meta(art.layout, art.n_workers)
-    shard_numel = sum(int(np.prod(m.shp)) for m in jax.tree.leaves(
-        metas, is_leaf=lambda x: type(x).__name__ == "LeafMeta"))
-    grad_bits = 8 if tc.grad_k is not None else 32
-    weight_bits = 8 if tc.weight_k is not None else 16
-    a2a = shard_numel * grad_bits / 8          # channel 1 out ~= in
-    bcast = shard_numel * weight_bits / 8      # channel 2 in
+    leaves = jax.tree.leaves(
+        metas, is_leaf=lambda x: type(x).__name__ == "LeafMeta")
+    shard_numel = sum(int(np.prod(m.shp)) for m in leaves)
+    a2a = sum(C.update_exchange_nbytes(m.c, art.n_workers, tc.grad_k,
+                                       getattr(tc, "mode", "qadam"))
+              for m in leaves)
+    bcast = sum(C.weight_broadcast_nbytes(
+        m.c, art.n_workers, m.full_numel, tc.weight_k,
+        tc.weight_q_min_numel) for m in leaves)
     return {"update_exchange_bytes": a2a, "weight_broadcast_bytes": bcast,
             "total_bytes": a2a + bcast, "shard_params": shard_numel}
 

@@ -1,0 +1,104 @@
+"""In-process (single device) checks of the repro.dist train step.
+
+The acceptance bar for the dist subsystem: with one worker and no model
+sharding, `make_train_step` must reproduce the single-machine Algorithm 1
+(`core.qadam`) trajectory. Both sides are compiled as one program each -
+eager-vs-jit runs of identical graphs differ by ~1e-8 in gradients, which
+flips quantizer codes on grid boundaries; compiled-vs-compiled isolates
+the algorithm from the compilation mode (see tests/dist_scripts)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.qadam import QAdamConfig, qadam, apply_updates
+from repro.data.pipeline import batch_for_model
+from repro.dist import sharding as SH
+from repro.dist.step import make_train_step, TrainConfig, _leaf_meta
+from repro.models.model import Model
+
+N_STEPS = 24
+
+
+def _unchunk(state, layout, metas, treedef):
+    out = []
+    for leaf, meta in zip(treedef.flatten_up_to(state["master"]),
+                          treedef.flatten_up_to(metas)):
+        out.append(SH.unflatten_chunked(
+            jnp.asarray(leaf).reshape(1, -1), meta.shp))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class TestSingleWorkerEquivalence:
+    def test_matches_algorithm1_over_24_steps(self):
+        cfg = get_config("yi-6b", smoke=True)
+        model = Model(cfg)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        tc = TrainConfig(alpha=1e-2, beta=0.9, theta=0.9, schedule="sqrt",
+                         grad_k=4, weight_k=7, weight_absolute=True,
+                         worker_axes=("data",))
+        art = make_train_step(model, mesh, tc)
+        assert art.n_workers == 1
+        state = art.init_state(jax.random.PRNGKey(0))
+        batch = next(batch_for_model(cfg, 32, 2, seed=5))
+        step = jax.jit(art.step_fn)
+        losses = []
+        for _ in range(N_STEPS):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+
+        params = model.init(jax.random.PRNGKey(0))
+        opt = qadam(QAdamConfig(alpha=1e-2, beta=0.9, theta=0.9,
+                                schedule="sqrt", grad_q="log:4",
+                                weight_q="uniform:7",
+                                weight_q_min_numel=2 ** 14))
+        ostate = opt.init(params)
+
+        def lfn(p):
+            ls, nt = model.loss(p, batch)
+            return ls / nt, ls / nt
+
+        @jax.jit
+        def ref_step(params, ostate):
+            fp = opt.forward_params(params, ostate)
+            (lmean, _), grads = jax.value_and_grad(
+                lfn, has_aux=True)(fp)
+            upd, ostate = opt.update(grads, ostate, params)
+            return apply_updates(params, upd), ostate, lmean
+
+        ref_losses = []
+        for _ in range(N_STEPS):
+            params, ostate, lmean = ref_step(params, ostate)
+            ref_losses.append(float(lmean))
+
+        np.testing.assert_allclose(losses, ref_losses, rtol=1e-4,
+                                   atol=1e-6)
+        metas = _leaf_meta(art.layout, art.n_workers)
+        treedef = jax.tree_util.tree_structure(art.layout._leaves)
+        rec = _unchunk(state, art.layout, metas, treedef)
+        err = max(jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(np.max(np.abs(np.asarray(a)
+                                             - np.asarray(b)))),
+            rec, params)))
+        assert err <= 1e-5, err
+
+    def test_state_layout_matches_dryrun_contract(self):
+        """The state pytree must be exactly what repro.launch.dryrun
+        reconstructs from layout + metas (chunk shapes, dp_adam chunked
+        moments vs qadam full-shard moments)."""
+        cfg = get_config("yi-6b", smoke=True)
+        model = Model(cfg)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        for mode, xdim in (("qadam", "numel"), ("dp_adam", "c")):
+            tc = TrainConfig(mode=mode, worker_axes=("data",))
+            art = make_train_step(model, mesh, tc)
+            state = art.init_state(jax.random.PRNGKey(0))
+            metas = _leaf_meta(art.layout, art.n_workers)
+            treedef = jax.tree_util.tree_structure(art.layout._leaves)
+            for m_leaf, meta in zip(treedef.flatten_up_to(state["m"]),
+                                    treedef.flatten_up_to(metas)):
+                assert m_leaf.shape == (1, 1, getattr(meta, xdim)), mode
+            for ms_leaf, meta in zip(
+                    treedef.flatten_up_to(state["master"]),
+                    treedef.flatten_up_to(metas)):
+                assert ms_leaf.shape == (1, 1, meta.c)

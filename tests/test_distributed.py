@@ -9,6 +9,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 SCRIPTS = os.path.join(os.path.dirname(__file__), "dist_scripts")
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

@@ -1,0 +1,111 @@
+"""Wire-format tests: bit-packing round-trips and the guarantee that the
+distributed channels ship *packed uint8* payloads of exactly the
+advertised size."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.packing import pack_codes, unpack_codes, packed_nbytes
+from repro.dist import collectives as C
+from repro.dist import sharding as SH
+
+
+def _codes(numel, bits, seed=0):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    return jnp.asarray(rng.integers(lo, hi + 1, size=(numel,)), jnp.int8)
+
+
+class TestPackRoundtrip:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("numel", [1, 3, 7, 64, 129, 1000])
+    def test_roundtrip(self, bits, numel):
+        """unpack(pack(c, b), b, n) == c, including non-divisible numel
+        (the pad codes must not leak back)."""
+        c = _codes(numel, bits, seed=numel * bits)
+        p = pack_codes(c, bits)
+        assert p.dtype == jnp.uint8
+        assert p.shape == (packed_nbytes(numel, bits),)
+        back = unpack_codes(p, bits, numel)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(c))
+
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    def test_row_packing_payload_size(self, bits):
+        """Per-worker-row packing: payload is (n_workers,
+        packed_nbytes(c, bits)) uint8 - the exact array the all_to_all
+        moves."""
+        n_workers, numel = 4, 1003
+        c = SH.chunk_size(numel, n_workers)
+        rows = SH.flatten_pad(_codes(numel, bits), n_workers)
+        packed = C.pack_rows(rows, bits)
+        assert packed.dtype == jnp.uint8
+        assert packed.shape == (n_workers, packed_nbytes(c, bits))
+        back = C.unpack_rows(packed, bits, c)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(rows))
+
+    def test_log_wire_bits(self):
+        assert C.wire_bits_for_log(0) == 2
+        assert C.wire_bits_for_log(4) == 4
+        assert C.wire_bits_for_log(6) == 4
+        assert C.wire_bits_for_log(7) == 8
+
+    @pytest.mark.parametrize("grad_k,bits", [(4, 4), (6, 4), (7, 8)])
+    def test_accounting_matches_packed_nbytes(self, grad_k, bits):
+        n_workers, numel = 8, 5000
+        c = SH.chunk_size(numel, n_workers)
+        assert C.update_exchange_nbytes(c, n_workers, grad_k) == \
+            n_workers * packed_nbytes(c, bits)
+        assert C.update_exchange_nbytes(c, n_workers, None) == \
+            n_workers * c * 4
+        assert C.weight_broadcast_nbytes(c, n_workers, numel, 7) == \
+            n_workers * packed_nbytes(c, 8)
+
+
+class TestChannelsShipPackedUint8:
+    """Drive the actual collective channels under shard_map and assert the
+    wire arrays are packed uint8 of the advertised size."""
+
+    def _mesh(self):
+        return jax.make_mesh((1,), ("data",))
+
+    @pytest.mark.parametrize("k_g", [4, 6])
+    def test_update_exchange(self, k_g):
+        mesh = self._mesh()
+        numel, n_workers = 777, 1
+        bits = C.wire_bits_for_log(k_g)
+        codes = _codes(numel, bits, seed=k_g)
+
+        def f(cd):
+            rows, payload = C.exchange_packed(cd, bits, n_workers,
+                                              ("data",), (1,))
+            return rows, payload
+
+        rows, payload = jax.jit(shard_map(
+            f, mesh=mesh, in_specs=P(None), out_specs=(P(), P()),
+            check_rep=False))(codes)
+        c = SH.chunk_size(numel, n_workers)
+        assert payload.dtype == jnp.uint8
+        assert payload.shape == (n_workers, packed_nbytes(c, bits))
+        assert payload.nbytes == C.update_exchange_nbytes(c, n_workers, k_g)
+        np.testing.assert_array_equal(
+            np.asarray(rows).reshape(-1)[:numel], np.asarray(codes))
+
+    def test_weight_broadcast(self):
+        mesh = self._mesh()
+        chunk = jnp.asarray(
+            np.random.default_rng(3).normal(size=(513,)).astype(np.float32)
+            * 0.05)
+
+        def f(x):
+            codes = C.uniform_wire_codes(x, jnp.float32(0.5), 7)
+            return C.broadcast_packed(codes, ("data",)), codes
+
+        rows, codes = jax.jit(shard_map(
+            f, mesh=mesh, in_specs=P(None), out_specs=(P(), P()),
+            check_rep=False))(chunk)
+        assert rows.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(rows[0]),
+                                      np.asarray(codes))
