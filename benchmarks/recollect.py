@@ -1,11 +1,20 @@
 import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+import sys as _sys
+if "--bench" not in _sys.argv:  # bench timing wants the real device count
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
 
 """Re-derive collective bytes for existing dryrun JSONL records using the
 StableHLO parser (original dtypes), without recompiling: collective totals
 come from the unrolled L=1/L=2 LOWERINGS only (entry + L*body fit).
 
   PYTHONPATH=src python -m benchmarks.recollect results/dryrun_single.jsonl
+
+Or collect a benchmark baseline (runs benches from ``benchmarks.run`` and
+writes a committed JSON snapshot so the perf trajectory is queryable):
+
+  PYTHONPATH=src python -m benchmarks.recollect --bench kernels,comm_cost \\
+      --out BENCH_pr2.json
 """
 import dataclasses
 import json
@@ -14,7 +23,42 @@ import sys
 import numpy as np
 
 
+def collect_bench(names, out_path):
+    """Run the named benches and snapshot their rows as JSON."""
+    import platform
+    import jax
+    from benchmarks import run as bench_run
+
+    rows = []
+
+    def emit(name, us, derived):
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    for n in names:
+        bench_run.BENCHES[n](emit)
+    snap = {"benches": names,
+            "backend": jax.default_backend(),
+            "device": jax.devices()[0].device_kind,
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "rows": rows}
+    with open(out_path, "w") as f:
+        json.dump(snap, f, indent=1)
+    print(f"wrote {len(rows)} rows -> {out_path}")
+
+
 def main():
+    if "--bench" in sys.argv:
+        import argparse
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--bench", required=True,
+                        help="comma list of bench names")
+        ap.add_argument("--out", default="BENCH_snapshot.json")
+        args = ap.parse_args()
+        collect_bench(args.bench.split(","), args.out)
+        return
     path = sys.argv[1]
     rows = [json.loads(l) for l in open(path)]
 

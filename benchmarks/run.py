@@ -61,6 +61,59 @@ def bench_kernels(emit):
             lambda g: ops.adam_ef_step(g, m, m, m, 1e-3, 0.99, 0.9, 1e-5,
                                        6)[2], x)
         emit(f"kernel_adam_ef_{numel}", us, f"{numel}el")
+    bench_opt_step(emit)
+
+
+def _time_chain(fn, p, s, k_steps, reps=5, warmup=2):
+    """Time fn(p, s) -> (p, s) with the state *chained* through calls, so
+    buffer donation is exercised for real (each call consumes the
+    previous call's output). Returns us per optimizer step."""
+    import jax
+    for r in range(warmup + reps):
+        if r == warmup:
+            jax.block_until_ready(p)
+            t0 = time.perf_counter()
+        p, s = fn(p, s)
+    jax.block_until_ready(p)
+    return (time.perf_counter() - t0) / (reps * k_steps) * 1e6
+
+
+def bench_opt_step(emit, k_steps=16):
+    """Single-machine qadam() through the engine: the per-step jax.jit
+    loop vs the lax.scan-chunked, buffer-donating multi-step. Reports
+    us/step for each; the scan path amortizes Python dispatch + jit-cache
+    lookup + per-step host sync, so it must come out faster."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.qadam import QAdamConfig, qadam, apply_updates
+    from repro.opt.multistep import make_chunked_update
+
+    rng = np.random.default_rng(1)
+    for numel in (1 << 14, 1 << 18):
+        params = {"w": jnp.asarray(rng.normal(size=(numel,), scale=0.1)
+                                   .astype(np.float32))}
+        gstack = jnp.asarray(rng.normal(size=(k_steps, numel))
+                             .astype(np.float32))
+        opt = qadam(QAdamConfig(alpha=1e-3, grad_q="log:6"))
+        state0 = opt.init(params)
+
+        @jax.jit
+        def one_step(p, s, g):
+            upd, s2 = opt.update({"w": g}, s, p)
+            return apply_updates(p, upd), s2
+
+        def loop_k(p, s):
+            for i in range(k_steps):
+                p, s = one_step(p, s, gstack[i])
+            return p, s
+
+        us = _time_chain(loop_k, params, state0, k_steps)
+        emit(f"opt_qadam_loop{k_steps}_{numel}", us, f"{numel}el_per_step")
+
+        chunk = make_chunked_update(opt, donate=True)
+        us = _time_chain(lambda p, s: chunk(p, s, {"w": gstack}),
+                         jax.tree.map(jnp.copy, params), state0, k_steps)
+        emit(f"opt_qadam_scan{k_steps}_{numel}", us, f"{numel}el_per_step")
 
 
 def bench_comm_cost(emit):

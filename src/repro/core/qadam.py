@@ -21,7 +21,9 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantizers import Quantizer, IdentityQuantizer, get_quantizer
+from repro.core.quantizers import (Quantizer, IdentityQuantizer,
+                                   LogGradQuantizer, get_quantizer)
+from repro.opt import engine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +40,9 @@ class QAdamConfig:
     # clipped by the absolute grid; the paper quantizes weight matrices).
     # 0 = quantize everything (fully faithful Algorithm 1).
     weight_q_min_numel: int = 0
+    # engine backend for the leaf update: "jnp" | "pallas" | None = auto
+    # (Pallas on TPU for tile-sized leaves). Both emit identical codes.
+    backend: Optional[str] = None
 
     def grad_quantizer(self) -> Quantizer:
         return get_quantizer(self.grad_q)
@@ -117,9 +122,17 @@ def qadam(cfg: QAdamConfig, seed: int = 0) -> Optimizer:
 
         def leaf(g, m, v, e, k):
             g = g.astype(jnp.float32)
-            v_new = th_t * v + (1.0 - th_t) * g * g
-            m_new = cfg.beta * m + (1.0 - cfg.beta) * g
-            delta_full = a_t * m_new / jnp.sqrt(v_new + cfg.eps) + e
+            if isinstance(gq, LogGradQuantizer):
+                # the paper's Q_g: the engine's fused update core
+                # (two-pass Pallas on TPU, jnp elsewhere - identical codes)
+                delta_q, m_new, v_new, e_new = engine.adam_ef_update(
+                    g, m, v, e, a_t, cfg.beta, th_t, cfg.eps,
+                    k_g=gq.k_g, error_feedback=cfg.error_feedback,
+                    backend=cfg.backend)
+                return -delta_q, m_new, v_new, e_new
+            m_new, v_new, delta_full = engine.adam_ef_moments(
+                g, m, v, e, a_t, cfg.beta, th_t, cfg.eps,
+                backend=cfg.backend)
             if isinstance(gq, IdentityQuantizer):
                 delta_q = delta_full
             else:

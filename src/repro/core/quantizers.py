@@ -18,8 +18,9 @@ Every quantizer is exposed as a `Quantizer` with
   decode(qt) -> dequantized float array
   __call__   -> decode(encode(x))  (the mathematical operator Q(.))
 
-All are pure-jnp reference implementations; the Pallas kernels in
-`repro.kernels` implement the hot paths and are tested against these.
+The grid arithmetic itself lives once in ``repro.opt.grids`` (the same
+functions the Pallas kernel bodies call); this module wraps it in the
+QTensor wire objects and the spec-string registry.
 """
 from __future__ import annotations
 
@@ -30,6 +31,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.opt import grids
 
 
 @jax.tree_util.register_pytree_node_class
@@ -83,43 +86,18 @@ def log_bits(k_g: int) -> int:
 def log_encode(g: jax.Array, k_g: int) -> QTensor:
     """Nearest-in-linear-space log-grid quantization, per-tensor amax scale.
 
-    Code layout: 0 encodes the value 0; code c in [1, k_g+1] encodes magnitude
-    2^{-(k_g+1-c)}... we store (exp_idx+1) with a sign bit, i.e.
-      code = sign_bit << (bits-1) | (k_g - e + 1)   where value = +/- 2^{-e}.
+    Code layout (``grids.log_quantize``): 0 encodes the value 0; signed
+    code c with |c| in [1, k_g+1] encodes magnitude 2^{-(k_g+1-|c|)}.
     """
     g = g.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(g))
-    scale = jnp.where(amax > 0, amax, 1.0).astype(jnp.float32)
-    y = jnp.abs(g) / scale  # in [0, 1]
-    # nearest level in *linear* space for grid {0} U {2^-e, e=0..k_g}:
-    # boundaries between 2^-(e+1) and 2^-e sit at 1.5*2^-(e+1); below
-    # 2^-k_g/2 the nearest level is 0.
-    # e_real = -log2(y); nearest exponent: compare y against midpoints.
-    safe_y = jnp.where(y > 0, y, 1.0)
-    e_float = -jnp.log2(safe_y)
-    e_lo = jnp.floor(e_float)  # y <= 2^-e_lo, y >= 2^-(e_lo+1)
-    # midpoint in linear space between 2^-e_lo and 2^-(e_lo+1):
-    mid = 1.5 * jnp.exp2(-(e_lo + 1.0))
-    e_near = jnp.where(y >= mid, e_lo, e_lo + 1.0)
-    e_near = jnp.clip(e_near, 0.0, float(k_g))
-    # zero threshold: halfway to the smallest level
-    is_zero = (y < jnp.exp2(-float(k_g)) * 0.5) | (g == 0.0)
-    mag_code = (float(k_g) + 1.0 - e_near)  # in [1, k_g+1]
-    mag_code = jnp.where(is_zero, 0.0, mag_code)
-    sign_bit = (g < 0) & ~is_zero
-    bits = log_bits(k_g)
-    codes = mag_code.astype(jnp.int8)
-    codes = jnp.where(sign_bit, -codes, codes)  # signed int8 code, 0 == 0.0
-    return QTensor(codes=codes, scale=scale, kind="log", bits=bits, shape=tuple(g.shape))
+    scale = grids.amax_scale(g)
+    codes = grids.log_quantize(g, scale, k_g)
+    return QTensor(codes=codes, scale=scale, kind="log", bits=log_bits(k_g),
+                   shape=tuple(g.shape))
 
 
 def log_decode(qt: QTensor, k_g: int) -> jax.Array:
-    c = qt.codes.astype(jnp.float32)
-    mag_code = jnp.abs(c)
-    e = (float(k_g) + 1.0) - mag_code  # exponent; mag_code==0 -> e=k_g+1 junk
-    val = jnp.exp2(-e)
-    val = jnp.where(mag_code == 0, 0.0, val)
-    return jnp.sign(c) * val * qt.scale
+    return grids.log_dequantize(qt.codes, qt.scale, k_g)
 
 
 # ---------------------------------------------------------------------------
@@ -132,21 +110,14 @@ def uniform_encode(x: jax.Array, k_x: int, absolute: bool = True) -> QTensor:
     additive bound). `absolute=False` scales the grid by amax (robust mode
     for big-model configs)."""
     x = x.astype(jnp.float32)
-    if absolute:
-        scale = jnp.float32(0.5)
-    else:
-        amax = jnp.max(jnp.abs(x))
-        scale = jnp.where(amax > 0, amax, 1.0).astype(jnp.float32)
-    n = 2 ** k_x  # levels per side -> codes in [-n, n]
-    y = jnp.clip(x / scale, -1.0, 1.0)
-    codes = jnp.round(y * n).astype(jnp.int8 if k_x <= 6 else jnp.int32)
+    scale = jnp.float32(0.5) if absolute else grids.amax_scale(x)
+    codes = grids.uniform_quantize(x, scale, k_x)  # int8, int16 for k_x > 6
     return QTensor(codes=codes, scale=scale, kind="uniform", bits=k_x + 1,
                    shape=tuple(x.shape))
 
 
 def uniform_decode(qt: QTensor, k_x: int) -> jax.Array:
-    n = 2 ** k_x
-    return qt.codes.astype(jnp.float32) / n * qt.scale
+    return grids.uniform_dequantize(qt.codes, qt.scale, k_x)
 
 
 # ---------------------------------------------------------------------------
@@ -155,17 +126,16 @@ def uniform_decode(qt: QTensor, k_x: int) -> jax.Array:
 
 def ternary_encode(g: jax.Array, key: jax.Array) -> QTensor:
     g = g.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(g))
-    scale = jnp.where(amax > 0, amax, 1.0).astype(jnp.float32)
-    p = jnp.abs(g) / scale
-    b = jax.random.bernoulli(key, p).astype(jnp.int8)
-    codes = jnp.sign(g).astype(jnp.int8) * b
+    scale = grids.amax_scale(g)
+    # pre-drawn uniforms == jax.random.bernoulli(key, |g|/scale) draws
+    u = jax.random.uniform(key, g.shape)
+    codes = grids.ternary_quantize(g, u, scale)
     return QTensor(codes=codes, scale=scale, kind="ternary", bits=2,
                    shape=tuple(g.shape))
 
 
 def ternary_decode(qt: QTensor) -> jax.Array:
-    return qt.codes.astype(jnp.float32) * qt.scale
+    return grids.ternary_dequantize(qt.codes, qt.scale)
 
 
 # ---------------------------------------------------------------------------
@@ -174,17 +144,15 @@ def ternary_decode(qt: QTensor) -> jax.Array:
 
 def blockwise_encode(g: jax.Array, block: int = 256) -> QTensor:
     g32 = g.astype(jnp.float32).reshape(-1)
-    numel = g32.shape[0]
-    pad = (-numel) % block
+    pad = (-g32.shape[0]) % block
     gp = jnp.pad(g32, (0, pad)).reshape(-1, block)
-    scale = jnp.mean(jnp.abs(gp), axis=1)  # per-block mean |g|
-    codes = jnp.sign(gp).astype(jnp.int8)
+    codes, scale = grids.blockwise_quantize(gp)
     return QTensor(codes=codes, scale=scale, kind="blockwise", bits=1,
                    shape=tuple(g.shape))
 
 
 def blockwise_decode(qt: QTensor) -> jax.Array:
-    vals = qt.codes.astype(jnp.float32) * qt.scale[:, None]
+    vals = grids.blockwise_dequantize(qt.codes, qt.scale)
     numel = int(np.prod(qt.shape))
     return vals.reshape(-1)[:numel].reshape(qt.shape)
 

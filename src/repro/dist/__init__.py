@@ -3,6 +3,8 @@ and the parameter-server train/serve steps.
 
   sharding     - parameter layout: model-axis shard dims + worker chunking
   collectives  - the quantized wire (packed uint8 exchange / broadcast)
-  step         - make_train_step / make_serve_step on top of the above
+  modes        - per-mode optimizer plugins (qadam/dp_adam/terngrad/ef_sgd)
+  step         - make_train_step: the mode-independent worker-step template
+  serve        - make_serve_step: the sharded serving step
 """
-from repro.dist import sharding, collectives, step  # noqa: F401
+from repro.dist import sharding, collectives, modes, step, serve  # noqa: F401

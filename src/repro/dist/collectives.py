@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core.packing import pack_codes, unpack_codes, packed_nbytes
 from repro.dist.sharding import chunk_size, flatten_pad
-from repro.kernels import ref as KREF
+from repro.opt import grids
 
 
 # ---------------------------------------------------------------------------
@@ -61,43 +61,26 @@ def unpack_rows(packed_rows: jax.Array, bits: int, c: int) -> jax.Array:
     return jax.vmap(lambda r: unpack_codes(r, bits, c))(packed_rows)
 
 
-def amax_scale(x: jax.Array) -> jax.Array:
-    """Per-tensor amax scale with the quantizers' zero-guard. Every
-    channel must use this exact formulation - the bit-equivalence tests
-    depend on the scales matching across channels."""
-    amax = jnp.max(jnp.abs(x))
-    return jnp.where(amax > 0, amax, 1.0).astype(jnp.float32)
+amax_scale = grids.amax_scale  # shared zero-guarded scale (one definition)
 
 
 def uniform_wire_codes(x: jax.Array, scale, k_x: int) -> jax.Array:
     """Q_x codes clipped into int8 wire range. Only k_x=7 can clip (codes
     reach +/-128 when |x| rides the grid edge); the paper's weights live
     well inside [-0.5, 0.5], so the clip is a no-op in practice."""
-    codes = KREF.uniform_quantize(x, scale, k_x)
+    codes = grids.uniform_quantize(x, scale, k_x)
     if k_x >= 7:
         codes = jnp.clip(codes, -127, 127)
     return codes.astype(jnp.int8)
 
 
 # ---------------------------------------------------------------------------
-# byte accounting (single source of truth for train.loop + tests).
-# Counts packed *code* payloads only; the f32 scale side-channels (one
-# scalar per leaf per worker, per-256-block for ef_sgd) are excluded.
+# byte accounting. Counts packed *code* payloads only; the f32 scale
+# side-channels (one scalar per leaf per worker, per-256-block for
+# ef_sgd) are excluded. The per-mode update-exchange wire math lives on
+# each ``repro.dist.modes`` ModeSpec (``wire_nbytes``); only the
+# mode-independent weight-broadcast channel is accounted here.
 # ---------------------------------------------------------------------------
-
-def update_exchange_nbytes(c: int, n_workers: int, grad_k: Optional[int],
-                           mode: str = "qadam") -> int:
-    """Per-device bytes of the update-exchange payload for one leaf, by
-    optimizer mode: qadam ships log-grid codes packed to
-    wire_bits_for_log(grad_k) (f32 rows when grad_k is None), the
-    terngrad/ef_sgd baselines ship 2-bit codes, and dp_adam all-reduces
-    f32 gradient rows (no quantized wire)."""
-    if mode in ("terngrad", "ef_sgd"):
-        return n_workers * packed_nbytes(c, 2)
-    if mode == "dp_adam" or grad_k is None:
-        return n_workers * c * 4
-    return n_workers * packed_nbytes(c, wire_bits_for_log(grad_k))
-
 
 def weight_broadcast_nbytes(c: int, n_workers: int, full_numel: int,
                             weight_k: Optional[int],
@@ -193,12 +176,12 @@ def quantized_gather_shard(leaf: jax.Array, ax: int, n_shards: int,
     scale = jnp.float32(0.5) if absolute else amax_scale(leaf32)
     codes = uniform_wire_codes(leaf32, scale, k_x)
     if n_shards <= 1:
-        return KREF.uniform_dequantize(codes, scale, k_x)
+        return grids.uniform_dequantize(codes, scale, k_x)
     seg = jax.lax.all_gather(codes, axis_name, axis=0,
                              tiled=False)          # (n_shards, *shard)
     scales = jax.lax.all_gather(scale, axis_name)  # (n_shards,)
     bshape = (n_shards,) + (1,) * leaf.ndim
-    deq = KREF.uniform_dequantize(seg, scales.reshape(bshape), k_x)
+    deq = grids.uniform_dequantize(seg, scales.reshape(bshape), k_x)
     out = jnp.moveaxis(deq, 0, ax)                 # (..., n_shards, loc, ...)
     shape = list(leaf.shape)
     shape[ax] = shape[ax] * n_shards

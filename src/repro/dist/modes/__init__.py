@@ -1,0 +1,18 @@
+"""Per-mode distributed optimizer plugins.
+
+``repro.dist.step`` owns the worker-step template (weight broadcast ->
+fwd/bwd -> engine update -> update exchange); each module here owns one
+mode's per-leaf math + wire accounting. Adding a mode = one new module
+exporting a ``SPEC`` (see ``base.ModeSpec``) + a registry entry below.
+"""
+from repro.dist.modes.base import ModeSpec, WorkerCtx, worker_mean  # noqa: F401
+from repro.dist.modes import qadam, dp_adam, terngrad, ef_sgd
+
+MODES = {m.SPEC.name: m.SPEC for m in (qadam, dp_adam, terngrad, ef_sgd)}
+
+
+def get_mode(name: str) -> ModeSpec:
+    if name not in MODES:
+        raise ValueError(f"unknown mode {name!r}; "
+                         f"available: {sorted(MODES)}")
+    return MODES[name]

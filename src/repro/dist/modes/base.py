@@ -1,0 +1,52 @@
+"""Shared pieces of the per-mode distributed updaters.
+
+A mode is a ~50-line plugin: it owns the per-leaf optimizer math (via the
+``repro.opt`` engine) and its update-exchange wire format, while
+``repro.dist.step`` owns the mode-independent worker-step template
+(weight broadcast -> fwd/bwd -> engine update -> update exchange).
+
+Updater contract: ``updater(g, m, v, e, chunk, meta, a_t, th_t, key)``
+with the flat per-shard gradient/moments, this worker's master chunk and
+its LeafMeta, the scheduled scalars, and a per-(leaf, worker, step) PRNG
+key; returns ``(new_chunk, m', v', e')``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerCtx:
+    """Static worker-axis geometry + engine backend for one train step."""
+    worker_axes: Tuple[str, ...]
+    wsizes: Tuple[int, ...]
+    n_workers: int
+    backend: Optional[str] = None   # engine backend; None = auto
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeSpec:
+    """One optimizer mode: updater factory + wire accounting + state
+    layout. ``wire_nbytes(c, n_workers, grad_k)`` is the per-device,
+    per-leaf update-exchange payload (packed codes only, scale
+    side-channels excluded) - the single source of truth behind
+    ``train.loop.comm_bytes_per_step``."""
+    name: str
+    chunk_sharded_moments: bool
+    make_updater: Callable          # (tc, ctx: WorkerCtx) -> updater
+    wire_nbytes: Callable           # (c, n_workers, grad_k) -> int
+
+
+def worker_mean(rows):
+    """Mean over worker rows via pairwise (tree) summation: with n a
+    power of two and identical rows (the paper's identical-worker
+    equivalence), the result is bit-exact - a sequential reduce
+    (((x+x)+x)+x) is not, and its ulp bias flips quantizer codes."""
+    def psum_rows(x):
+        k = x.shape[0]
+        if k == 1:
+            return x[0]
+        h = k // 2
+        return psum_rows(x[:h]) + psum_rows(x[h:])
+    return psum_rows(rows) / rows.shape[0]

@@ -1,0 +1,36 @@
+"""fp32 data-parallel Adam baseline: gradients all-reduced over the
+worker axes, moments chunk-sharded (ZeRO-style), no quantized wire."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import collectives as C
+from repro.dist import sharding as SH
+from repro.dist.modes.base import ModeSpec, WorkerCtx
+from repro.opt import engine
+
+
+def make_updater(tc, ctx: WorkerCtx):
+    def upd(g, m, v, e, chunk, meta, a_t, th_t, key):
+        rows = SH.flatten_pad(g, ctx.n_workers)
+        if ctx.worker_axes:
+            rows = jax.lax.psum(rows, ctx.worker_axes)
+        w = C.worker_index(ctx.worker_axes, ctx.wsizes)
+        gc = jax.lax.dynamic_index_in_dim(rows, w, 0, keepdims=False)
+        # the engine's moment pass with a zero EF residual: de is exactly
+        # alpha_t * m' / sqrt(v' + eps)
+        m2, v2, de = engine.adam_ef_moments(
+            gc, m, v, jnp.zeros_like(m), a_t, tc.beta, th_t, tc.eps,
+            backend=ctx.backend)
+        return chunk - de, m2, v2, e
+    return upd
+
+
+def wire_nbytes(c: int, n_workers: int, grad_k=None) -> int:
+    """All-reduced f32 gradient rows - no quantized wire."""
+    return n_workers * c * 4
+
+
+SPEC = ModeSpec(name="dp_adam", chunk_sharded_moments=True,
+                make_updater=make_updater, wire_nbytes=wire_nbytes)

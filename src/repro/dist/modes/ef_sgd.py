@@ -1,0 +1,48 @@
+"""Blockwise-EF momentum SGD baseline (Zheng et al. '19): sign codes with
+per-256-block mean-|.| scales, error feedback on the residual."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import packed_nbytes
+from repro.dist import collectives as C
+from repro.dist.modes.base import ModeSpec, WorkerCtx, worker_mean
+from repro.opt import engine, grids
+
+BLOCK = 256
+
+
+def make_updater(tc, ctx: WorkerCtx):
+    def upd(g, m, v, e, chunk, meta, a_t, th_t, key):
+        m2 = tc.beta * m + g
+        de = a_t * m2 + e
+        n = de.shape[0]
+        codes2d, scale_b = engine.quantize_blockwise(de, BLOCK,
+                                                     backend=ctx.backend)
+        deq_own = grids.blockwise_dequantize(codes2d,
+                                             scale_b).reshape(-1)[:n]
+        e2 = de - deq_own
+        codes_rows, _ = C.exchange_packed(codes2d.reshape(-1)[:n], 2,
+                                          ctx.n_workers, ctx.worker_axes,
+                                          ctx.wsizes)
+        scales = C.gather_rows(scale_b, ctx.worker_axes)   # (nw, nb)
+        elem = jnp.repeat(scales, BLOCK, axis=1)           # (nw, nb*BLOCK)
+        c = meta.c
+        total = ctx.n_workers * c
+        if elem.shape[1] < total:
+            elem = jnp.pad(elem, ((0, 0), (0, total - elem.shape[1])))
+        w = C.worker_index(ctx.worker_axes, ctx.wsizes)
+        scale_cols = jax.lax.dynamic_slice(
+            elem, (jnp.int32(0), w * c), (ctx.n_workers, c))
+        recv = codes_rows.astype(jnp.float32) * scale_cols
+        return chunk - worker_mean(recv), m2, v, e2
+    return upd
+
+
+def wire_nbytes(c: int, n_workers: int, grad_k=None) -> int:
+    return n_workers * packed_nbytes(c, 2)
+
+
+SPEC = ModeSpec(name="ef_sgd", chunk_sharded_moments=False,
+                make_updater=make_updater, wire_nbytes=wire_nbytes)

@@ -1,0 +1,27 @@
+"""TernGrad baseline (Wen et al. '17): unbiased stochastic ternary SGD,
+2-bit codes on the wire, no error feedback."""
+from __future__ import annotations
+
+from repro.core.packing import packed_nbytes
+from repro.dist import collectives as C
+from repro.dist.modes.base import ModeSpec, WorkerCtx, worker_mean
+from repro.opt import engine, grids
+
+
+def make_updater(tc, ctx: WorkerCtx):
+    def upd(g, m, v, e, chunk, meta, a_t, th_t, key):
+        codes, scale = engine.quantize_ternary(g, key, backend=ctx.backend)
+        codes_rows, _ = C.exchange_packed(codes, 2, ctx.n_workers,
+                                          ctx.worker_axes, ctx.wsizes)
+        scales = C.gather_rows(scale, ctx.worker_axes)
+        recv = grids.ternary_dequantize(codes_rows, scales[:, None])
+        return chunk - a_t * worker_mean(recv), m, v, e
+    return upd
+
+
+def wire_nbytes(c: int, n_workers: int, grad_k=None) -> int:
+    return n_workers * packed_nbytes(c, 2)
+
+
+SPEC = ModeSpec(name="terngrad", chunk_sharded_moments=False,
+                make_updater=make_updater, wire_nbytes=wire_nbytes)

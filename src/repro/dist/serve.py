@@ -1,0 +1,108 @@
+"""Sharded serving step (moved out of the train-step module).
+
+Params stay model-axis sharded per the layout; the KV cache is sequence-
+sharded over the model axis and batch-sharded over the worker axes; the
+weight gather optionally ships int8 Q_x codes (``ServeConfig.weight_k``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as SH
+from repro.dist.step import (MODEL_AXIS, ServeConfig, _batch_geometry,
+                             _batch_specs, _make_param_gather)
+from repro.models.layers import ShardCtx
+
+
+def _cache_specs_for(cfg, b0):
+    specs = {}
+    if cfg.arch_type != "ssm":
+        specs["k"] = P(None, b0, MODEL_AXIS, None, None)
+        specs["v"] = P(None, b0, MODEL_AXIS, None, None)
+    if cfg.arch_type in ("ssm", "hybrid"):
+        specs["ssm"] = P(None, b0, None, None, None)
+        specs["conv"] = P(None, b0, None, None)
+    if cfg.arch_type == "encdec":
+        specs["ck"] = P(None, b0, MODEL_AXIS, None, None)
+        specs["cv"] = P(None, b0, MODEL_AXIS, None, None)
+    return specs
+
+
+def make_serve_step(model, mesh, sc: ServeConfig, kind: str = "decode"):
+    """Sharded serving step.
+
+    Returns ``(step, param_specs, (input_specs, cache_specs))``. Params
+    stay model-axis sharded per the layout; the KV cache is sequence-
+    sharded over the model axis and batch-sharded over the worker axes;
+    the weight gather optionally ships int8 Q_x codes (``sc.weight_k``).
+    """
+    cfg = model.cfg
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    worker_axes, wsizes, n_workers = SH.worker_info(mesh, sc.worker_axes)
+    Nm = int(ms.get(MODEL_AXIS, 1))
+
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    layout = SH.build_layout(pshapes, Nm)
+    param_specs = layout.param_specs(MODEL_AXIS)
+    b0 = worker_axes if (sc.batch_dim_shardable and worker_axes) else None
+    input_specs = {"token": P(b0, None), "embeds": P(b0, None, None)}
+    cache_specs = _cache_specs_for(cfg, b0)
+
+    ctx = ShardCtx(
+        cp_axis=MODEL_AXIS if Nm > 1 else None,
+        cp_size=Nm if Nm > 1 else 1, dp_axes=worker_axes,
+        param_gather=_make_param_gather(
+            layout, Nm, expert_local=Nm > 1,
+            quant_k=sc.weight_k, quant_absolute=sc.weight_absolute,
+            stacked_at_static=True))
+
+    if kind == "decode":
+        def step(params, inputs, cache, pos):
+            ispec = {k: input_specs["token" if k == "token" else "embeds"]
+                     for k in inputs}
+            cspec = {k: cache_specs[k] for k in cache}
+            fn = shard_map(
+                lambda p, i, c, q: model.decode_step(p, i, c, q, ctx),
+                mesh=mesh,
+                in_specs=(param_specs, ispec, cspec, P()),
+                out_specs=(P(b0, None), cspec), check_rep=False)
+            return fn(params, inputs, cache, pos)
+        return step, param_specs, (input_specs, cache_specs)
+
+    if kind == "prefill":
+        if cfg.arch_type == "encdec":
+            raise NotImplementedError(
+                "enc-dec prefill goes through prefill_encoder + decode")
+        pf_cache = {k: v for k, v in cache_specs.items()
+                    if k in ("k", "v", "ssm", "conv")}
+
+        def step(params, batch):
+            Wb, cp = _batch_geometry(batch, Nm, worker_axes, n_workers,
+                                     sc.batch_dim_shardable)
+            if "tokens" in batch:
+                S = batch["tokens"].shape[1]
+            else:
+                S = batch["embeds"].shape[1]
+            S_loc = S // Nm if cp else S
+            lctx = ctx if cp else dataclasses.replace(
+                ctx, cp_axis=None, cp_size=1,
+                param_gather=_make_param_gather(
+                    layout, Nm, expert_local=False, quant_k=sc.weight_k,
+                    quant_absolute=sc.weight_absolute,
+                    stacked_at_static=True))
+            bspec = _batch_specs(batch, Wb, cp)
+            out_logits = P(Wb if Wb else None, MODEL_AXIS if cp else None,
+                           None)
+            fn = shard_map(
+                lambda p, b: model.prefill(p, b, max_seq_local=S_loc,
+                                           ctx=lctx),
+                mesh=mesh, in_specs=(param_specs, bspec),
+                out_specs=(out_logits, pf_cache), check_rep=False)
+            return fn(params, batch)
+        return step, param_specs, (input_specs, pf_cache)
+
+    raise ValueError(f"unknown serve kind {kind!r}")

@@ -1,5 +1,23 @@
-"""Distributed QAdam-EF step (Algorithms 2+3): quantized parameter server
-over the mesh's worker axes, context/model parallelism over its model axis.
+"""Distributed QAdam-EF train step (Algorithms 2+3): quantized parameter
+server over the mesh's worker axes, context/model parallelism over its
+model axis.
+
+This module owns the mode-independent worker-step TEMPLATE:
+
+  1. weight broadcast: every server quantizes its chunk with Q_x, packed
+     8-bit codes are all-gathered over the worker axes, each worker
+     reassembles Q_x(x_t) for its model shard (small leaves ride f32).
+  2. forward/backward at Q_x(x_t) (Assumption 3), sequence sharded over
+     the model axis, per-layer FSDP weight gather; each worker gets the
+     gradient of *its own* mean loss.
+  3. per-worker engine update (``repro.opt.engine``; fused Pallas on TPU).
+  4. update exchange: each mode's wire (packed codes all-to-all for the
+     quantized modes) so each server receives all workers' updates for
+     its chunk; it averages the dequantized deltas into its master chunk.
+
+Steps 3-4 are the per-mode plugins in ``repro.dist.modes`` ("qadam" - the
+paper, "dp_adam", "terngrad", "ef_sgd"); the serve step lives in
+``repro.dist.serve``.
 
 State layout (matches ``repro.launch.dryrun`` and the equivalence tests):
 every leaf of the train state is *chunked* - shape
@@ -12,24 +30,6 @@ every leaf of the train state is *chunked* - shape
     different gradients, so each keeps moments for the *whole* shard
     (X = shard numel); in ``dp_adam`` mode gradients are averaged first
     and the moments are chunk-sharded like ``master`` (ZeRO-style).
-
-Per step (mode="qadam"):
-  1. weight broadcast: every server quantizes its chunk with Q_x, packed
-     8-bit codes are all-gathered over the worker axes, each worker
-     reassembles Q_x(x_t) for its model shard (small leaves ride f32).
-  2. forward/backward at Q_x(x_t) (Assumption 3), sequence sharded over
-     the model axis, per-layer FSDP weight gather; each worker gets the
-     gradient of *its own* mean loss.
-  3. fused Adam+EF update (``repro.kernels.adam_ef`` on TPU, the jnp
-     oracle elsewhere): Delta_t + e_t, per-shard amax scale, log-grid
-     codes, new residual e_{t+1}.
-  4. update exchange: packed codes all-to-all so each server receives all
-     workers' codes for its chunk; it averages the dequantized deltas and
-     applies them to its master chunk.
-
-Modes: "qadam" (the paper), "dp_adam" (fp32 data-parallel Adam baseline,
-partition-invariant), "terngrad", "ef_sgd" (the paper's comparison
-baselines as distributed optimizers).
 """
 from __future__ import annotations
 
@@ -46,8 +46,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.qadam import QAdamConfig, _alpha_t, _theta_t
 from repro.dist import sharding as SH
 from repro.dist import collectives as C
-from repro.kernels import ref as KREF
+from repro.dist.modes import WorkerCtx, get_mode
 from repro.models.layers import ShardCtx
+from repro.opt import grids
 
 MODEL_AXIS = "model"
 
@@ -68,12 +69,19 @@ class TrainConfig:
     weight_absolute: bool = True        # paper's absolute [-0.5,0.5] grid
     weight_q_min_numel: int = 2 ** 14   # small leaves skip Q_x (biases/norms)
     error_feedback: bool = True
-    mode: str = "qadam"                 # qadam | dp_adam | terngrad | ef_sgd
+    mode: str = "qadam"                 # any repro.dist.modes name
     worker_axes: Tuple[str, ...] = ("pod", "data")
     batch_dim_shardable: bool = True
     model_gather_quant: Optional[int] = None  # int8 FSDP gather bits
     fused_kernels: Optional[bool] = None      # None = auto (TPU only)
     seed: int = 0
+
+    @property
+    def engine_backend(self) -> Optional[str]:
+        """repro.opt.engine backend for the update core."""
+        if self.fused_kernels is None:
+            return None
+        return "pallas" if self.fused_kernels else "jnp"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -229,12 +237,14 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
     metas = _leaf_meta(layout, n_workers)
     qcfg = QAdamConfig(alpha=tc.alpha, beta=tc.beta, theta=tc.theta,
                        eps=tc.eps, schedule=tc.schedule)
-    use_fused = (tc.fused_kernels if tc.fused_kernels is not None
-                 else jax.default_backend() == "tpu")
+    mode = get_mode(tc.mode)
+    updater = mode.make_updater(tc, WorkerCtx(
+        worker_axes=worker_axes, wsizes=wsizes, n_workers=n_workers,
+        backend=tc.engine_backend))
 
     treedef = jax.tree_util.tree_structure(layout._leaves)
     metas_flat = treedef.flatten_up_to(metas)
-    chunk_sharded = tc.mode == "dp_adam"  # moments chunked vs full-shard
+    chunk_sharded = mode.chunk_sharded_moments  # moments chunked vs full-shard
     state_spec = P(*worker_axes, MODEL_AXIS, None) if model_in_mesh \
         else P(*worker_axes, None, None)
 
@@ -268,126 +278,22 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
                 "count": jax.device_put(jnp.zeros((), jnp.int32),
                                         NamedSharding(mesh, P()))}
 
-    # ---------------- per-leaf channels ----------------
-    def worker_mean(rows):
-        """Mean over worker rows via pairwise (tree) summation: with n a
-        power of two and identical rows (the paper's identical-worker
-        equivalence), the result is bit-exact - a sequential reduce
-        (((x+x)+x)+x) is not, and its ulp bias flips quantizer codes."""
-        def psum_rows(x):
-            k = x.shape[0]
-            if k == 1:
-                return x[0]
-            h = k // 2
-            return psum_rows(x[:h]) + psum_rows(x[h:])
-        return psum_rows(rows) / rows.shape[0]
-
+    # ---------------- weight-broadcast channel ----------------
     def chunks_to_shard(chunk, meta):
-        """Weight-broadcast channel: my master chunk -> full f32 shard."""
+        """My master chunk -> full f32 shard (Q_x wire when quantized)."""
         quantized = (tc.weight_k is not None
                      and meta.full_numel >= tc.weight_q_min_numel)
         if quantized:
             scale = jnp.float32(0.5) if tc.weight_absolute \
-                else C.amax_scale(chunk)
+                else grids.amax_scale(chunk)
             codes = C.uniform_wire_codes(chunk, scale, tc.weight_k)
             codes_rows = C.broadcast_packed(codes, worker_axes)
             scales = C.gather_rows(scale, worker_axes)       # (n_workers,)
-            rows = KREF.uniform_dequantize(codes_rows, scales[:, None],
-                                           tc.weight_k)
+            rows = grids.uniform_dequantize(codes_rows, scales[:, None],
+                                            tc.weight_k)
         else:
             rows = C.gather_rows(chunk, worker_axes)
         return SH.unflatten_chunked(rows, meta.shp)
-
-    def adam_delta(g, m, v, e, a_t, th_t):
-        """Moments + Delta_t + e_t; fused Pallas pass on TPU."""
-        from repro.kernels.quantize import BLOCK_ROWS, LANES
-        n = g.shape[0]
-        tile = BLOCK_ROWS * LANES
-        if use_fused and n >= tile:
-            pad = (-n) % tile
-            pad2 = lambda x: jnp.pad(x, (0, pad)).reshape(-1, LANES)
-            from repro.kernels.adam_ef import adam_moments_pallas
-            hp = jnp.stack([a_t, jnp.float32(tc.beta), th_t,
-                            jnp.float32(tc.eps)])
-            m2, v2, de2, _ = adam_moments_pallas(
-                pad2(g), pad2(m), pad2(v), pad2(e), hp,
-                interpret=jax.default_backend() != "tpu")
-            unpad = lambda x: x.reshape(-1)[:n]
-            return unpad(m2), unpad(v2), unpad(de2)
-        return KREF.adam_ef_moments(g, m, v, e, alpha_t=a_t, beta=tc.beta,
-                                    theta_t=th_t, eps=tc.eps)
-
-    def upd_qadam(g, m, v, e, chunk, meta, a_t, th_t, key):
-        m2, v2, de = adam_delta(g, m, v, e, a_t, th_t)
-        if tc.grad_k is None:
-            rows = SH.flatten_pad(de, n_workers)
-            recv = C.exchange_rows(rows, worker_axes, wsizes)
-            e2 = jnp.zeros_like(e)
-        else:
-            scale = C.amax_scale(de)
-            codes = KREF.log_quantize(de, scale, tc.grad_k)
-            deq = KREF.log_dequantize(codes, scale, tc.grad_k)
-            e2 = (de - deq) if tc.error_feedback else jnp.zeros_like(e)
-            codes_rows, _ = C.exchange_packed(
-                codes, C.wire_bits_for_log(tc.grad_k), n_workers,
-                worker_axes, wsizes)
-            scales = C.gather_rows(scale, worker_axes)
-            recv = KREF.log_dequantize(codes_rows, scales[:, None],
-                                       tc.grad_k)
-        return chunk - worker_mean(recv), m2, v2, e2
-
-    def upd_dp_adam(g, m, v, e, chunk, meta, a_t, th_t, key):
-        rows = SH.flatten_pad(g, n_workers)
-        if worker_axes:
-            rows = jax.lax.psum(rows, worker_axes)
-        w = C.worker_index(worker_axes, wsizes)
-        gc = jax.lax.dynamic_index_in_dim(rows, w, 0, keepdims=False)
-        v2 = th_t * v + (1.0 - th_t) * gc * gc
-        m2 = tc.beta * m + (1.0 - tc.beta) * gc
-        upd = a_t * m2 / jnp.sqrt(v2 + tc.eps)
-        return chunk - upd, m2, v2, e
-
-    def upd_terngrad(g, m, v, e, chunk, meta, a_t, th_t, key):
-        scale = C.amax_scale(g)
-        p = jnp.abs(g) / scale
-        b = jax.random.bernoulli(key, p).astype(jnp.int8)
-        codes = jnp.sign(g).astype(jnp.int8) * b
-        codes_rows, _ = C.exchange_packed(codes, 2, n_workers,
-                                          worker_axes, wsizes)
-        scales = C.gather_rows(scale, worker_axes)
-        recv = codes_rows.astype(jnp.float32) * scales[:, None]
-        return chunk - a_t * worker_mean(recv), m, v, e
-
-    def upd_ef_sgd(g, m, v, e, chunk, meta, a_t, th_t, key, block=256):
-        m2 = tc.beta * m + g
-        de = a_t * m2 + e
-        n = de.shape[0]
-        nb = -(-n // block)
-        dpad = jnp.pad(de, (0, nb * block - n)).reshape(nb, block)
-        scale_b = jnp.mean(jnp.abs(dpad), axis=1)            # (nb,)
-        codes2d = jnp.sign(dpad).astype(jnp.int8)
-        deq_own = (codes2d.astype(jnp.float32)
-                   * scale_b[:, None]).reshape(-1)[:n]
-        e2 = de - deq_own
-        codes_rows, _ = C.exchange_packed(codes2d.reshape(-1)[:n], 2,
-                                          n_workers, worker_axes, wsizes)
-        scales = C.gather_rows(scale_b, worker_axes)         # (nw, nb)
-        elem = jnp.repeat(scales, block, axis=1)             # (nw, nb*block)
-        c = meta.c
-        total = n_workers * c
-        if elem.shape[1] < total:
-            elem = jnp.pad(elem, ((0, 0), (0, total - elem.shape[1])))
-        w = C.worker_index(worker_axes, wsizes)
-        scale_cols = jax.lax.dynamic_slice(
-            elem, (jnp.int32(0), w * c), (n_workers, c))
-        recv = codes_rows.astype(jnp.float32) * scale_cols
-        return chunk - worker_mean(recv), m2, v, e2
-
-    updaters = {"qadam": upd_qadam, "dp_adam": upd_dp_adam,
-                "terngrad": upd_terngrad, "ef_sgd": upd_ef_sgd}
-    if tc.mode not in updaters:
-        raise ValueError(f"unknown mode {tc.mode!r}")
-    updater = updaters[tc.mode]
 
     # ---------------- the sharded step ----------------
     def _impl(state, batch, cp: bool):
@@ -428,7 +334,7 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
             if tc.mode == "dp_adam":
                 # local sum / global count; the weight-gather transpose
                 # already sums model-axis contributions, the worker-axis
-                # average happens on chunk rows in upd_dp_adam.
+                # average happens on chunk rows in the dp_adam updater.
                 gden = jax.lax.psum(nt, all_axes) if all_axes else nt
                 return s / gden, (s, nt)
             # per-worker mean loss (Algorithm 2). psum's transpose is psum,
@@ -453,7 +359,7 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
                 g = jax.lax.psum(g, MODEL_AXIS)
             gs.append(g)
 
-        # 3+4. per-worker update + quantized exchange
+        # 3+4. per-worker engine update + per-mode quantized exchange
         base = jax.random.fold_in(jax.random.PRNGKey(tc.seed), t)
         widx = C.worker_index(worker_axes, wsizes)
         new_m, new_mm, new_vv, new_ee = [], [], [], []
@@ -492,95 +398,9 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
                          worker_axes=worker_axes, mesh=mesh, config=tc)
 
 
-# ---------------------------------------------------------------------------
-# serve step
-# ---------------------------------------------------------------------------
-
-def _cache_specs_for(cfg, b0):
-    specs = {}
-    if cfg.arch_type != "ssm":
-        specs["k"] = P(None, b0, MODEL_AXIS, None, None)
-        specs["v"] = P(None, b0, MODEL_AXIS, None, None)
-    if cfg.arch_type in ("ssm", "hybrid"):
-        specs["ssm"] = P(None, b0, None, None, None)
-        specs["conv"] = P(None, b0, None, None)
-    if cfg.arch_type == "encdec":
-        specs["ck"] = P(None, b0, MODEL_AXIS, None, None)
-        specs["cv"] = P(None, b0, MODEL_AXIS, None, None)
-    return specs
-
-
-def make_serve_step(model, mesh, sc: ServeConfig, kind: str = "decode"):
-    """Sharded serving step.
-
-    Returns ``(step, param_specs, (input_specs, cache_specs))``. Params
-    stay model-axis sharded per the layout; the KV cache is sequence-
-    sharded over the model axis and batch-sharded over the worker axes;
-    the weight gather optionally ships int8 Q_x codes (``sc.weight_k``).
-    """
-    cfg = model.cfg
-    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
-    worker_axes, wsizes, n_workers = SH.worker_info(mesh, sc.worker_axes)
-    Nm = int(ms.get(MODEL_AXIS, 1))
-
-    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    layout = SH.build_layout(pshapes, Nm)
-    param_specs = layout.param_specs(MODEL_AXIS)
-    b0 = worker_axes if (sc.batch_dim_shardable and worker_axes) else None
-    input_specs = {"token": P(b0, None), "embeds": P(b0, None, None)}
-    cache_specs = _cache_specs_for(cfg, b0)
-
-    ctx = ShardCtx(
-        cp_axis=MODEL_AXIS if Nm > 1 else None,
-        cp_size=Nm if Nm > 1 else 1, dp_axes=worker_axes,
-        param_gather=_make_param_gather(
-            layout, Nm, expert_local=Nm > 1,
-            quant_k=sc.weight_k, quant_absolute=sc.weight_absolute,
-            stacked_at_static=True))
-
-    if kind == "decode":
-        def step(params, inputs, cache, pos):
-            ispec = {k: input_specs["token" if k == "token" else "embeds"]
-                     for k in inputs}
-            cspec = {k: cache_specs[k] for k in cache}
-            fn = shard_map(
-                lambda p, i, c, q: model.decode_step(p, i, c, q, ctx),
-                mesh=mesh,
-                in_specs=(param_specs, ispec, cspec, P()),
-                out_specs=(P(b0, None), cspec), check_rep=False)
-            return fn(params, inputs, cache, pos)
-        return step, param_specs, (input_specs, cache_specs)
-
-    if kind == "prefill":
-        if cfg.arch_type == "encdec":
-            raise NotImplementedError(
-                "enc-dec prefill goes through prefill_encoder + decode")
-        pf_cache = {k: v for k, v in cache_specs.items()
-                    if k in ("k", "v", "ssm", "conv")}
-
-        def step(params, batch):
-            Wb, cp = _batch_geometry(batch, Nm, worker_axes, n_workers,
-                                     sc.batch_dim_shardable)
-            if "tokens" in batch:
-                S = batch["tokens"].shape[1]
-            else:
-                S = batch["embeds"].shape[1]
-            S_loc = S // Nm if cp else S
-            lctx = ctx if cp else dataclasses.replace(
-                ctx, cp_axis=None, cp_size=1,
-                param_gather=_make_param_gather(
-                    layout, Nm, expert_local=False, quant_k=sc.weight_k,
-                    quant_absolute=sc.weight_absolute,
-                    stacked_at_static=True))
-            bspec = _batch_specs(batch, Wb, cp)
-            out_logits = P(Wb if Wb else None, MODEL_AXIS if cp else None,
-                           None)
-            fn = shard_map(
-                lambda p, b: model.prefill(p, b, max_seq_local=S_loc,
-                                           ctx=lctx),
-                mesh=mesh, in_specs=(param_specs, bspec),
-                out_specs=(out_logits, pf_cache), check_rep=False)
-            return fn(params, batch)
-        return step, param_specs, (input_specs, pf_cache)
-
-    raise ValueError(f"unknown serve kind {kind!r}")
+def __getattr__(name):
+    # compat: the serve step moved to repro.dist.serve
+    if name in ("make_serve_step", "_cache_specs_for"):
+        from repro.dist import serve
+        return getattr(serve, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

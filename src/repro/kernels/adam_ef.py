@@ -11,6 +11,10 @@ Two Pallas passes over the parameter shard:
 
 Scalars (alpha_t, beta, theta_t, eps) arrive as a (4,) f32 operand broadcast
 to every grid step (index_map pins block 0), which keeps them in SMEM on TPU.
+
+Both kernel bodies call the canonical math in ``repro.opt.grids`` on their
+VMEM tiles, so the fused path is bit-identical to the jnp backend by
+construction (asserted by ``tests/test_opt_engine.py``).
 """
 from __future__ import annotations
 
@@ -21,22 +25,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.quantize import BLOCK_ROWS, LANES
+from repro.opt import grids
 
 
 def _moments_kernel(g_ref, m_ref, v_ref, e_ref, hp_ref,
                     m_out, v_out, de_out, amax_out):
-    g = g_ref[...].astype(jnp.float32)
-    m = m_ref[...]
-    v = v_ref[...]
-    e = e_ref[...]
-    alpha_t, beta, theta_t, eps = hp_ref[0], hp_ref[1], hp_ref[2], hp_ref[3]
-    v_new = theta_t * v + (1.0 - theta_t) * g * g
-    m_new = beta * m + (1.0 - beta) * g
-    de = alpha_t * m_new * jax.lax.rsqrt(v_new + eps) + e
+    m_new, v_new, de = grids.adam_ef_moments(
+        g_ref[...], m_ref[...], v_ref[...], e_ref[...],
+        alpha_t=hp_ref[0], beta=hp_ref[1], theta_t=hp_ref[2], eps=hp_ref[3])
     m_out[...] = m_new
     v_out[...] = v_new
     de_out[...] = de
-    amax_out[0] = jnp.max(jnp.abs(de))
+    amax_out[0] = grids.block_amax(de)
 
 
 def adam_moments_pallas(g2d, m2d, v2d, e2d, hp, *, interpret: bool):
@@ -62,22 +62,9 @@ def adam_moments_pallas(g2d, m2d, v2d, e2d, hp, *, interpret: bool):
 
 
 def _ef_quantize_kernel(de_ref, scale_ref, codes_ref, e_out, *, k_g: int):
-    de = de_ref[...]
-    s = jnp.maximum(scale_ref[0], 1e-30)
-    y = jnp.abs(de) / s
-    safe_y = jnp.where(y > 0, y, 1.0)
-    e_lo = jnp.floor(-jnp.log2(safe_y))
-    mid = 1.5 * jnp.exp2(-(e_lo + 1.0))
-    e_near = jnp.where(y >= mid, e_lo, e_lo + 1.0)
-    e_near = jnp.clip(e_near, 0.0, float(k_g))
-    is_zero = (y < jnp.exp2(-float(k_g)) * 0.5) | (de == 0.0)
-    mag = jnp.where(is_zero, 0.0, float(k_g) + 1.0 - e_near)
-    codes = jnp.where(de < 0, -mag, mag)
-    # dequantize in-register for the EF residual
-    deq_mag = jnp.where(mag == 0, 0.0, jnp.exp2(mag - (float(k_g) + 1.0)))
-    deq = jnp.sign(codes) * deq_mag * scale_ref[0]
-    codes_ref[...] = codes.astype(jnp.int8)
-    e_out[...] = de - deq
+    codes, e_new = grids.adam_ef_quantize(de_ref[...], scale_ref[0], k_g)
+    codes_ref[...] = codes
+    e_out[...] = e_new
 
 
 def ef_quantize_pallas(de2d, scale, k_g: int, *, interpret: bool):

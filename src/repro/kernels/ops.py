@@ -1,118 +1,48 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Backward-compatible wrappers around the optimizer engine.
 
-Handles layout: arbitrary-shape tensors are flattened and zero-padded to the
-kernels' (R, 128) tile layout (R a multiple of BLOCK_ROWS), then restored.
-On non-TPU backends the kernels run in interpret mode (correctness path);
-`use_pallas=False` falls back to the pure-jnp oracle in ref.py.
+The real implementation lives in ``repro.opt.engine`` (backend-dispatched:
+``backend="jnp" | "pallas" | None`` for auto). These adapters keep the
+historical ``use_pallas: bool`` surface that the kernel tests and
+benchmarks drive; new code should import ``repro.opt.engine`` directly.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.kernels import ref
-from repro.kernels import quantize as qk
-from repro.kernels import adam_ef as ak
-
-_TILE = qk.BLOCK_ROWS * qk.LANES
+from repro.opt import engine
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _bk(use_pallas: bool) -> str:
+    return "pallas" if use_pallas else "jnp"
 
 
-def _to_tiles(x: jax.Array) -> Tuple[jax.Array, int]:
-    flat = x.reshape(-1)
-    numel = flat.shape[0]
-    pad = (-numel) % _TILE
-    flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, qk.LANES), numel
-
-
-def _from_tiles(x2d: jax.Array, numel: int, shape) -> jax.Array:
-    return x2d.reshape(-1)[:numel].reshape(shape)
-
-
-@functools.partial(jax.jit, static_argnames=("k_g", "use_pallas"))
 def quantize_log(x: jax.Array, k_g: int = 6, use_pallas: bool = True):
-    """Paper's Q_g encode: per-tensor amax scale + log-grid int8 codes."""
-    if not use_pallas:
-        scale = jnp.maximum(ref.block_amax(x), 1e-30)
-        return ref.log_quantize(x, scale, k_g), scale
-    x2d, numel = _to_tiles(x.astype(jnp.float32))
-    scale = jnp.maximum(qk.amax_pallas(x2d, interpret=_interpret()), 1e-30)
-    codes2d = qk.log_quantize_pallas(x2d, scale, k_g, interpret=_interpret())
-    return _from_tiles(codes2d, numel, x.shape), scale
+    return engine.quantize_log(x, k_g, backend=_bk(use_pallas))
 
 
-@functools.partial(jax.jit, static_argnames=("k_g", "use_pallas", "out_dtype"))
 def dequantize_log(codes: jax.Array, scale: jax.Array, k_g: int = 6,
                    use_pallas: bool = True, out_dtype=jnp.float32):
-    if not use_pallas:
-        return ref.log_dequantize(codes, scale, k_g).astype(out_dtype)
-    c2d, numel = _to_tiles(codes)
-    out = qk.log_dequantize_pallas(c2d, scale, k_g, out_dtype=out_dtype,
-                                   interpret=_interpret())
-    return _from_tiles(out, numel, codes.shape)
+    return engine.dequantize_log(codes, scale, k_g, backend=_bk(use_pallas),
+                                 out_dtype=out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("k_x", "absolute", "use_pallas"))
 def quantize_uniform(x: jax.Array, k_x: int = 7, absolute: bool = True,
                      use_pallas: bool = True):
-    """Paper's Q_x encode (absolute grid over [-0.5, 0.5] by default)."""
-    if absolute:
-        scale = jnp.float32(0.5)
-    else:
-        x2d0, _ = _to_tiles(x.astype(jnp.float32))
-        scale = jnp.maximum(
-            qk.amax_pallas(x2d0, interpret=_interpret()) if use_pallas
-            else ref.block_amax(x), 1e-30)
-    if not use_pallas:
-        return ref.uniform_quantize(x, scale, k_x), scale
-    x2d, numel = _to_tiles(x.astype(jnp.float32))
-    codes2d = qk.uniform_quantize_pallas(x2d, scale, k_x,
-                                         interpret=_interpret())
-    return _from_tiles(codes2d, numel, x.shape), scale
+    return engine.quantize_uniform(x, k_x, absolute=absolute,
+                                   backend=_bk(use_pallas))
 
 
-@functools.partial(jax.jit, static_argnames=("k_x", "use_pallas", "out_dtype"))
 def dequantize_uniform(codes: jax.Array, scale: jax.Array, k_x: int = 7,
                        use_pallas: bool = True, out_dtype=jnp.float32):
-    if not use_pallas:
-        return ref.uniform_dequantize(codes, scale, k_x).astype(out_dtype)
-    c2d, numel = _to_tiles(codes)
-    out = qk.uniform_dequantize_pallas(c2d, scale, k_x, out_dtype=out_dtype,
-                                       interpret=_interpret())
-    return _from_tiles(out, numel, codes.shape)
+    return engine.dequantize_uniform(codes, scale, k_x,
+                                     backend=_bk(use_pallas),
+                                     out_dtype=out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("k_g", "use_pallas"))
 def adam_ef_step(g, m, v, e, alpha_t, beta, theta_t, eps,
                  k_g: int = 6, use_pallas: bool = True):
     """Fused worker inner loop of Algorithm 3: returns
     (m', v', codes, scale, e')."""
-    if not use_pallas:
-        m_n, v_n, de = ref.adam_ef_moments(
-            g, m, v, e, alpha_t=alpha_t, beta=beta, theta_t=theta_t, eps=eps)
-        scale = jnp.maximum(ref.block_amax(de), 1e-30)
-        codes, e_n = ref.adam_ef_quantize(de, scale, k_g)
-        return m_n, v_n, codes, scale, e_n
-    shape = g.shape
-    g2d, numel = _to_tiles(g.astype(jnp.float32))
-    m2d, _ = _to_tiles(m)
-    v2d, _ = _to_tiles(v)
-    e2d, _ = _to_tiles(e)
-    hp = jnp.stack([jnp.float32(alpha_t), jnp.float32(beta),
-                    jnp.float32(theta_t), jnp.float32(eps)])
-    m_n2, v_n2, de2, amax = ak.adam_moments_pallas(
-        g2d, m2d, v2d, e2d, hp, interpret=_interpret())
-    scale = jnp.maximum(amax, 1e-30)
-    codes2, e_n2 = ak.ef_quantize_pallas(de2, scale, k_g,
-                                         interpret=_interpret())
-    return (_from_tiles(m_n2, numel, shape), _from_tiles(v_n2, numel, shape),
-            _from_tiles(codes2, numel, shape), scale,
-            _from_tiles(e_n2, numel, shape))
+    return engine.adam_ef_step(g, m, v, e, alpha_t, beta, theta_t, eps,
+                               k_g=k_g, backend=_bk(use_pallas))

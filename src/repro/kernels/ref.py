@@ -1,73 +1,18 @@
-"""Pure-jnp oracles for the Pallas kernels.
+"""Thin re-exports of the canonical grid/update math.
 
-These are *the* semantics; kernels must match them to within float tolerance.
-They mirror repro.core.quantizers but operate on the flat 2D-tiled layout the
-kernels use and expose the scale as an explicit argument (the kernels are the
-second pass of a two-pass scheme: pass 1 block-amax, pass 2 quantize).
+Historically this module held the pure-jnp oracles the Pallas kernels were
+tested against. That math now lives once in ``repro.opt.grids`` (and the
+kernel bodies call it directly), so this module is just the old import
+surface.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-
-def block_amax(x: jax.Array) -> jax.Array:
-    """Per-call global amax (oracle for the amax pass)."""
-    return jnp.max(jnp.abs(x.astype(jnp.float32)))
-
-
-def log_quantize(x: jax.Array, scale: jax.Array, k_g: int) -> jax.Array:
-    """Log-grid codes given a scale. Matches quantizers.log_encode."""
-    x = x.astype(jnp.float32)
-    s = jnp.maximum(scale, 1e-30)
-    y = jnp.abs(x) / s
-    safe_y = jnp.where(y > 0, y, 1.0)
-    e_float = -jnp.log2(safe_y)
-    e_lo = jnp.floor(e_float)
-    mid = 1.5 * jnp.exp2(-(e_lo + 1.0))
-    e_near = jnp.where(y >= mid, e_lo, e_lo + 1.0)
-    e_near = jnp.clip(e_near, 0.0, float(k_g))
-    is_zero = (y < jnp.exp2(-float(k_g)) * 0.5) | (x == 0.0)
-    mag = jnp.where(is_zero, 0.0, float(k_g) + 1.0 - e_near)
-    return jnp.where(x < 0, -mag, mag).astype(jnp.int8)
-
-
-def log_dequantize(codes: jax.Array, scale: jax.Array, k_g: int) -> jax.Array:
-    c = codes.astype(jnp.float32)
-    mag = jnp.abs(c)
-    val = jnp.exp2(mag - (float(k_g) + 1.0))
-    val = jnp.where(mag == 0, 0.0, val)
-    return jnp.sign(c) * val * scale
-
-
-def uniform_quantize(x: jax.Array, scale: jax.Array, k_x: int) -> jax.Array:
-    n = float(2 ** k_x)
-    y = jnp.clip(x.astype(jnp.float32) / jnp.maximum(scale, 1e-30), -1.0, 1.0)
-    # codes live in [-2^k, 2^k]: int8 only holds k_x <= 6
-    dt = jnp.int8 if k_x <= 6 else jnp.int16
-    return jnp.round(y * n).astype(dt)
-
-
-def uniform_dequantize(codes: jax.Array, scale: jax.Array, k_x: int) -> jax.Array:
-    n = float(2 ** k_x)
-    return codes.astype(jnp.float32) / n * scale
-
-
-def adam_ef_moments(g, m, v, e, *, alpha_t, beta, theta_t, eps):
-    """Pass-1 oracle: moment updates + the full-precision Delta_t + e_t.
-
-    Returns (m_new, v_new, delta_plus_e). Algorithm 1 lines 3-5 pre-quantize.
-    """
-    g = g.astype(jnp.float32)
-    v_new = theta_t * v + (1.0 - theta_t) * g * g
-    m_new = beta * m + (1.0 - beta) * g
-    delta_plus_e = alpha_t * m_new / jnp.sqrt(v_new + eps) + e
-    return m_new, v_new, delta_plus_e
-
-
-def adam_ef_quantize(delta_plus_e, scale, k_g):
-    """Pass-2 oracle: codes + residual (Algorithm 1 lines 5-6)."""
-    codes = log_quantize(delta_plus_e, scale, k_g)
-    deq = log_dequantize(codes, scale, k_g)
-    e_new = delta_plus_e - deq
-    return codes, e_new
+from repro.opt.grids import (  # noqa: F401
+    adam_ef_moments,
+    adam_ef_quantize,
+    block_amax,
+    log_dequantize,
+    log_quantize,
+    uniform_dequantize,
+    uniform_quantize,
+)

@@ -184,8 +184,9 @@ def _lower_one(cfg, kind, mesh, gbatch, seq, enc_seq, W, batch_shardable,
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.models.model import Model
-    from repro.dist.step import (make_train_step, make_serve_step,
-                                 TrainConfig, ServeConfig, _leaf_meta)
+    from repro.dist.serve import make_serve_step
+    from repro.dist.step import (make_train_step, TrainConfig, ServeConfig,
+                                 _leaf_meta)
 
     model = Model(cfg)
     ms = dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -39,7 +39,10 @@ def main():
     ap.add_argument("--model-gather-quant", type=int, default=0,
                     help="int8 FSDP gather bits (beyond-paper), 0=off")
     ap.add_argument("--no-ef", action="store_true")
-    ap.add_argument("--mode", default="qadam", choices=["qadam", "dp_adam"])
+    ap.add_argument("--mode", default="qadam",
+                    choices=["qadam", "dp_adam", "terngrad", "ef_sgd"])
+    ap.add_argument("--scan-chunk", type=int, default=1,
+                    help=">1: lax.scan this many steps per compiled call")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -77,7 +80,8 @@ def main():
     batches = batch_for_model(cfg, args.seq, args.global_batch,
                               seed=args.seed)
     lc = LoopConfig(steps=args.steps, log_every=args.log_every,
-                    ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+                    ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+                    scan_chunk=args.scan_chunk)
     state, history = train(art, tc, batches, lc,
                            key=jax.random.PRNGKey(args.seed))
     if args.history_out:

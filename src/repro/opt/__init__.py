@@ -1,0 +1,11 @@
+"""One optimizer engine for the paper's update core.
+
+  grids     - canonical jnp definition of the Adam+EF leaf math and the
+              log / uniform / ternary / blockwise quantizer grids
+  engine    - backend dispatch ("jnp" | "pallas" | None=auto) around the
+              grids; consumed by repro.core.qadam and repro.dist.modes
+  multistep - lax.scan-chunked, buffer-donating training drivers that
+              amortize per-step Python dispatch
+"""
+from repro.opt import grids, engine  # noqa: F401
+from repro.opt.engine import resolve_backend  # noqa: F401

@@ -1,0 +1,258 @@
+"""The backend-dispatched optimizer update engine.
+
+One implementation of the paper's update core (moments -> Delta+e -> Q_g
+-> residual) and the four quantizer grids, behind a ``backend`` switch:
+
+  * ``backend="jnp"``    - pure-jnp path (the canonical ``repro.opt.grids``
+    math under plain XLA fusion);
+  * ``backend="pallas"`` - the fused Pallas kernels (interpret mode off
+    TPU), whose bodies call the *same* ``grids`` functions, so codes,
+    scales, and EF residuals are bit-identical to the jnp backend;
+  * ``backend=None``     - auto: Pallas on TPU for tensors at least one
+    (BLOCK_ROWS x LANES) tile, jnp everywhere else.
+
+Both the single-machine optimizer (``repro.core.qadam``) and the
+distributed per-mode updaters (``repro.dist.modes``) consume this module;
+``repro.kernels.ops`` re-exports the public entry points for
+backward compatibility.
+
+Layout handling: arbitrary-shape tensors are flattened and zero-padded to
+the kernels' (R, 128) tile layout (R a multiple of BLOCK_ROWS), then
+restored.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.opt import grids
+from repro.kernels import quantize as qk
+from repro.kernels import adam_ef as ak
+
+TILE = qk.BLOCK_ROWS * qk.LANES
+
+BACKENDS = ("jnp", "pallas")
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def resolve_backend(backend: Optional[str], numel: Optional[int] = None) -> str:
+    """Auto: Pallas on TPU when the tensor fills at least one tile
+    (padding overhead dominates below that), jnp otherwise. An explicit
+    ``backend=`` always wins - "pallas" off TPU runs in interpret mode."""
+    if backend is not None:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"expected one of {BACKENDS}")
+        return backend
+    if jax.default_backend() == "tpu" and (numel is None or numel >= TILE):
+        return "pallas"
+    return "jnp"
+
+
+def _to_tiles(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    numel = flat.shape[0]
+    pad = (-numel) % TILE
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, qk.LANES), numel
+
+
+def _from_tiles(x2d: jax.Array, numel: int, shape) -> jax.Array:
+    return x2d.reshape(-1)[:numel].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# log grid (Q_g)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k_g", "backend"))
+def quantize_log(x: jax.Array, k_g: int = 6,
+                 backend: Optional[str] = None):
+    """Paper's Q_g encode: per-tensor amax scale + log-grid int8 codes."""
+    if resolve_backend(backend, x.size) == "jnp":
+        scale = jnp.maximum(grids.block_amax(x), 1e-30)
+        return grids.log_quantize(x, scale, k_g), scale
+    x2d, numel = _to_tiles(x.astype(jnp.float32))
+    scale = jnp.maximum(qk.amax_pallas(x2d, interpret=_interpret()), 1e-30)
+    codes2d = qk.log_quantize_pallas(x2d, scale, k_g, interpret=_interpret())
+    return _from_tiles(codes2d, numel, x.shape), scale
+
+
+@functools.partial(jax.jit, static_argnames=("k_g", "backend", "out_dtype"))
+def dequantize_log(codes: jax.Array, scale: jax.Array, k_g: int = 6,
+                   backend: Optional[str] = None, out_dtype=jnp.float32):
+    if resolve_backend(backend, codes.size) == "jnp":
+        return grids.log_dequantize(codes, scale, k_g).astype(out_dtype)
+    c2d, numel = _to_tiles(codes)
+    out = qk.log_dequantize_pallas(c2d, scale, k_g, out_dtype=out_dtype,
+                                   interpret=_interpret())
+    return _from_tiles(out, numel, codes.shape)
+
+
+# ---------------------------------------------------------------------------
+# uniform grid (Q_x)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k_x", "absolute", "backend"))
+def quantize_uniform(x: jax.Array, k_x: int = 7, absolute: bool = True,
+                     backend: Optional[str] = None):
+    """Paper's Q_x encode (absolute grid over [-0.5, 0.5] by default).
+    Codes are int8 for k_x <= 6, int16 above (codes reach +/- 2^k_x)."""
+    bk = resolve_backend(backend, x.size)
+    if absolute:
+        scale = jnp.float32(0.5)
+    elif bk == "jnp":
+        scale = jnp.maximum(grids.block_amax(x), 1e-30)
+    else:
+        x2d0, _ = _to_tiles(x.astype(jnp.float32))
+        scale = jnp.maximum(qk.amax_pallas(x2d0, interpret=_interpret()),
+                            1e-30)
+    if bk == "jnp":
+        return grids.uniform_quantize(x, scale, k_x), scale
+    x2d, numel = _to_tiles(x.astype(jnp.float32))
+    codes2d = qk.uniform_quantize_pallas(x2d, scale, k_x,
+                                         interpret=_interpret())
+    return _from_tiles(codes2d, numel, x.shape), scale
+
+
+@functools.partial(jax.jit, static_argnames=("k_x", "backend", "out_dtype"))
+def dequantize_uniform(codes: jax.Array, scale: jax.Array, k_x: int = 7,
+                       backend: Optional[str] = None, out_dtype=jnp.float32):
+    if resolve_backend(backend, codes.size) == "jnp":
+        return grids.uniform_dequantize(codes, scale, k_x).astype(out_dtype)
+    c2d, numel = _to_tiles(codes)
+    out = qk.uniform_dequantize_pallas(c2d, scale, k_x, out_dtype=out_dtype,
+                                       interpret=_interpret())
+    return _from_tiles(out, numel, codes.shape)
+
+
+# ---------------------------------------------------------------------------
+# ternary grid (TernGrad)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def quantize_ternary(x: jax.Array, key: jax.Array,
+                     backend: Optional[str] = None):
+    """Unbiased stochastic ternary codes + amax scale. The uniforms are
+    drawn here (one stream for both backends), matching
+    ``jax.random.bernoulli(key, |x|/scale)`` draw-for-draw."""
+    x = x.astype(jnp.float32)
+    scale = grids.amax_scale(x)
+    u = jax.random.uniform(key, x.shape)
+    if resolve_backend(backend, x.size) == "jnp":
+        return grids.ternary_quantize(x, u, scale), scale
+    x2d, numel = _to_tiles(x)
+    u2d, _ = _to_tiles(u)
+    codes2d = qk.ternary_quantize_pallas(x2d, u2d, scale,
+                                         interpret=_interpret())
+    return _from_tiles(codes2d, numel, x.shape), scale
+
+
+# ---------------------------------------------------------------------------
+# blockwise sign grid (Zheng et al. '19)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block", "backend"))
+def quantize_blockwise(x: jax.Array, block: int = 256,
+                       backend: Optional[str] = None):
+    """Sign codes + per-block mean-|.| scales over flat blocks of ``block``
+    elements (zero-padded tail). Returns ((nb, block) int8, (nb,) f32)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    numel = flat.shape[0]
+    nb = -(-numel // block)
+    x2d = jnp.pad(flat, (0, nb * block - numel)).reshape(nb, block)
+    if resolve_backend(backend, numel) == "jnp":
+        return grids.blockwise_quantize(x2d)
+    rpad = (-nb) % qk.BLOCKWISE_ROWS
+    x2dp = jnp.pad(x2d, ((0, rpad), (0, 0)))
+    codes, scales = qk.blockwise_quantize_pallas(x2dp,
+                                                 interpret=_interpret())
+    return codes[:nb], scales[:nb]
+
+
+# ---------------------------------------------------------------------------
+# Adam+EF update core (Algorithm 1/3 lines 3-6)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def adam_ef_moments(g, m, v, e, alpha_t, beta, theta_t, eps,
+                    backend: Optional[str] = None):
+    """Pass A: moment updates + full-precision Delta_t + e_t.
+    Returns (m', v', delta_plus_e)."""
+    if resolve_backend(backend, g.size) == "jnp":
+        return grids.adam_ef_moments(g, m, v, e, alpha_t=alpha_t, beta=beta,
+                                     theta_t=theta_t, eps=eps)
+    shape = g.shape
+    g2d, numel = _to_tiles(g.astype(jnp.float32))
+    m2d, _ = _to_tiles(m)
+    v2d, _ = _to_tiles(v)
+    e2d, _ = _to_tiles(e)
+    hp = jnp.stack([jnp.float32(alpha_t), jnp.float32(beta),
+                    jnp.float32(theta_t), jnp.float32(eps)])
+    m2, v2, de2, _ = ak.adam_moments_pallas(g2d, m2d, v2d, e2d, hp,
+                                            interpret=_interpret())
+    return (_from_tiles(m2, numel, shape), _from_tiles(v2, numel, shape),
+            _from_tiles(de2, numel, shape))
+
+
+@functools.partial(jax.jit, static_argnames=("k_g", "backend"))
+def ef_quantize(de, scale, k_g: int, backend: Optional[str] = None):
+    """Pass B: log-grid codes + new EF residual e' = de - deq(codes)."""
+    if resolve_backend(backend, de.size) == "jnp":
+        return grids.adam_ef_quantize(de, scale, k_g)
+    de2d, numel = _to_tiles(de)
+    codes2d, e2d = ak.ef_quantize_pallas(de2d, scale, k_g,
+                                         interpret=_interpret())
+    return (_from_tiles(codes2d, numel, de.shape),
+            _from_tiles(e2d, numel, de.shape))
+
+
+@functools.partial(jax.jit, static_argnames=("k_g", "backend"))
+def adam_ef_step(g, m, v, e, alpha_t, beta, theta_t, eps,
+                 k_g: int = 6, backend: Optional[str] = None):
+    """Fused worker inner loop of Algorithm 3: returns
+    (m', v', codes, scale, e')."""
+    bk = resolve_backend(backend, g.size)
+    if bk == "jnp":
+        m_n, v_n, de = grids.adam_ef_moments(
+            g, m, v, e, alpha_t=alpha_t, beta=beta, theta_t=theta_t, eps=eps)
+        scale = grids.amax_scale(de)
+        codes, e_n = grids.adam_ef_quantize(de, scale, k_g)
+        return m_n, v_n, codes, scale, e_n
+    shape = g.shape
+    g2d, numel = _to_tiles(g.astype(jnp.float32))
+    m2d, _ = _to_tiles(m)
+    v2d, _ = _to_tiles(v)
+    e2d, _ = _to_tiles(e)
+    hp = jnp.stack([jnp.float32(alpha_t), jnp.float32(beta),
+                    jnp.float32(theta_t), jnp.float32(eps)])
+    m_n2, v_n2, de2, amax = ak.adam_moments_pallas(
+        g2d, m2d, v2d, e2d, hp, interpret=_interpret())
+    scale = jnp.where(amax > 0, amax, 1.0).astype(jnp.float32)
+    codes2, e_n2 = ak.ef_quantize_pallas(de2, scale, k_g,
+                                         interpret=_interpret())
+    return (_from_tiles(m_n2, numel, shape), _from_tiles(v_n2, numel, shape),
+            _from_tiles(codes2, numel, shape), scale,
+            _from_tiles(e_n2, numel, shape))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_g", "error_feedback", "backend"))
+def adam_ef_update(g, m, v, e, alpha_t, beta, theta_t, eps, k_g: int,
+                   error_feedback: bool = True,
+                   backend: Optional[str] = None):
+    """The complete single-machine Algorithm 1 leaf update: returns the
+    *dequantized* delta Q_g(Delta_t + e_t) plus the new optimizer state
+    (delta_deq, m', v', e')."""
+    m2, v2, codes, scale, e2 = adam_ef_step(
+        g, m, v, e, alpha_t, beta, theta_t, eps, k_g=k_g, backend=backend)
+    deq = dequantize_log(codes, scale, k_g, backend=backend)
+    if not error_feedback:
+        e2 = jnp.zeros_like(e2)
+    return deq, m2, v2, e2

@@ -5,7 +5,7 @@ storage in edge devices") applied to a serving fleet.
 The engine pads a list of prompts into a batch, runs a single prefill to
 build the KV/SSM cache, then steps the decode loop greedily (or with
 temperature sampling). Works single-device or on a mesh via
-repro.dist.step.make_serve_step.
+repro.dist.serve.make_serve_step.
 """
 from __future__ import annotations
 

@@ -3,6 +3,7 @@ checkpointing, and communication accounting together."""
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Dict, Iterator, Optional
 
@@ -10,7 +11,9 @@ import jax
 import numpy as np
 
 from repro.checkpoint import store
-from repro.dist.step import StepArtifacts, TrainConfig
+from repro.dist import collectives as C
+from repro.dist.modes import get_mode
+from repro.dist.step import StepArtifacts, TrainConfig, _leaf_meta
 from repro.models.config import ModelConfig
 
 
@@ -22,25 +25,27 @@ class LoopConfig:
     ckpt_dir: Optional[str] = None
     eval_every: int = 0
     eval_fn: Optional[Callable] = None
+    # >1: lax.scan this many steps per compiled call (one Python dispatch
+    # per chunk, state buffers donated). ckpt/eval/log cadences must be
+    # multiples of the chunk.
+    scan_chunk: int = 1
 
 
 def comm_bytes_per_step(art: StepArtifacts, tc: TrainConfig) -> Dict[str, float]:
     """Per-device *code* payload bytes of the two quantized worker
     channels (the paper's 'Comm' column). Sums, over parameter leaves,
-    the packed uint8 payload each device touches per step - the same
-    arithmetic the wire in ``repro.dist.collectives`` performs, so tests
-    can assert the two agree byte-for-byte
-    (``tests/test_comm_accounting.py``). The f32 scale side-channels
-    (one scalar per leaf per worker; per-256-block for ef_sgd, ~6% of
-    its 2-bit payload) are excluded."""
-    from repro.dist import collectives as C
-    from repro.dist.step import _leaf_meta
+    the packed uint8 payload each device touches per step - the mode's
+    own ``wire_nbytes`` plus the weight-broadcast arithmetic the wire in
+    ``repro.dist.collectives`` performs, so tests can assert the figures
+    agree byte-for-byte (``tests/test_comm_accounting.py``). The f32
+    scale side-channels (one scalar per leaf per worker; per-256-block
+    for ef_sgd, ~6% of its 2-bit payload) are excluded."""
+    mode = get_mode(tc.mode)
     metas = _leaf_meta(art.layout, art.n_workers)
     leaves = jax.tree.leaves(
         metas, is_leaf=lambda x: type(x).__name__ == "LeafMeta")
     shard_numel = sum(int(np.prod(m.shp)) for m in leaves)
-    a2a = sum(C.update_exchange_nbytes(m.c, art.n_workers, tc.grad_k,
-                                       getattr(tc, "mode", "qadam"))
+    a2a = sum(mode.wire_nbytes(m.c, art.n_workers, tc.grad_k)
               for m in leaves)
     bcast = sum(C.weight_broadcast_nbytes(
         m.c, art.n_workers, m.full_numel, tc.weight_k,
@@ -49,24 +54,47 @@ def comm_bytes_per_step(art: StepArtifacts, tc: TrainConfig) -> Dict[str, float]
             "total_bytes": a2a + bcast, "shard_params": shard_numel}
 
 
+def _make_chunk_step(step_fn):
+    """One compiled program scanning the stacked batch pytree's leading
+    axis, donating the state buffers (in-place double-buffer-free update
+    on device)."""
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def chunk_step(state, batches):
+        def body(s, b):
+            s2, metrics = step_fn(s, b)
+            return s2, metrics["loss"]
+        return jax.lax.scan(body, state, batches)
+    return chunk_step
+
+
 def train(art: StepArtifacts, tc: TrainConfig, batches: Iterator,
           lc: LoopConfig, key=None, state=None, log=print):
     key = key if key is not None else jax.random.PRNGKey(0)
     if state is None:
         state = art.init_state(key)
-    step = jax.jit(art.step_fn)
+    from repro.opt.multistep import stack_batches
+    chunk = max(1, lc.scan_chunk)
+    if chunk > 1:
+        step = _make_chunk_step(art.step_fn)
+    else:
+        step = jax.jit(art.step_fn, donate_argnums=(0,))
     history = []
     t0 = time.time()
-    for i in range(lc.steps):
-        batch = next(batches)
-        state, metrics = step(state, batch)
-        if (i + 1) % lc.log_every == 0 or i == 0:
-            loss = float(metrics["loss"])
+    for i0 in range(0, lc.steps, chunk):
+        k = min(chunk, lc.steps - i0)  # tail chunk stays within budget
+        if chunk > 1:
+            stacked = stack_batches([next(batches) for _ in range(k)])
+            state, losses = step(state, stacked)
+            i, loss_now = i0 + k - 1, float(losses[-1])
+        else:
+            state, metrics = step(state, next(batches))
+            i, loss_now = i0, float(metrics["loss"])
+        if (i + 1) % lc.log_every < k or i0 == 0:
             dt = time.time() - t0
-            log(f"step {i + 1:5d}  loss {loss:.4f}  "
+            log(f"step {i + 1:5d}  loss {loss_now:.4f}  "
                 f"({dt / (i + 1):.2f}s/step)")
-            history.append({"step": i + 1, "loss": loss})
-            if not np.isfinite(loss):
+            history.append({"step": i + 1, "loss": loss_now})
+            if not np.isfinite(loss_now):
                 raise FloatingPointError(f"loss diverged at step {i + 1}")
         if lc.ckpt_every and (i + 1) % lc.ckpt_every == 0 and lc.ckpt_dir:
             store.save(lc.ckpt_dir, state, step=i + 1)

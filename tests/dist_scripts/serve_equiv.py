@@ -17,7 +17,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 sys.path.insert(0, os.path.dirname(__file__))
 from common import tiny_config
 
-from repro.dist.step import make_serve_step, ServeConfig
+from repro.dist.serve import make_serve_step
+from repro.dist.step import ServeConfig
 from repro.dist import sharding as SH, collectives as C
 from repro.models.model import Model
 from repro.models.layers import ShardCtx

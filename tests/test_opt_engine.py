@@ -1,0 +1,210 @@
+"""Backend parity for the repro.opt engine: for every optimizer mode's
+update core and every quantizer grid, the pallas backend must emit codes,
+scales, and EF residuals BIT-IDENTICAL to the jnp backend (the kernels'
+bodies call the same ``repro.opt.grids`` functions, so this is a contract,
+not a tolerance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.opt import engine, grids
+
+SHAPES = [(7,), (1000,), (33, 77), (256, 128), (32768,), (40000,)]
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale)
+                       .astype(np.float32))
+
+
+def _both(fn):
+    return fn(backend="jnp"), fn(backend="pallas")
+
+
+def _assert_bitwise(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                  err_msg=msg)
+
+
+class TestLogGridParity:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("k_g", [1, 4, 6])
+    def test_encode(self, shape, k_g):
+        x = _rand(shape, seed=k_g + len(shape))
+        (cj, sj), (cp, sp) = _both(
+            lambda backend: engine.quantize_log(x, k_g, backend=backend))
+        _assert_bitwise(cj, cp, "codes")
+        _assert_bitwise(sj, sp, "scale")
+
+    @pytest.mark.parametrize("k_g", [1, 6])
+    def test_decode(self, k_g):
+        x = _rand((5000,), seed=k_g)
+        codes, scale = engine.quantize_log(x, k_g, backend="jnp")
+        dj, dp = _both(lambda backend: engine.dequantize_log(
+            codes, scale, k_g, backend=backend))
+        _assert_bitwise(dj, dp)
+
+
+class TestUniformGridParity:
+    @pytest.mark.parametrize("shape", SHAPES[:4])
+    @pytest.mark.parametrize("k_x", [3, 6, 7])
+    @pytest.mark.parametrize("absolute", [True, False])
+    def test_encode(self, shape, k_x, absolute):
+        x = _rand(shape, seed=k_x, scale=0.3)
+        (cj, sj), (cp, sp) = _both(lambda backend: engine.quantize_uniform(
+            x, k_x, absolute=absolute, backend=backend))
+        assert cj.dtype == cp.dtype == grids.uniform_code_dtype(k_x)
+        _assert_bitwise(cj, cp, "codes")
+        _assert_bitwise(sj, sp, "scale")
+
+    def test_k7_int16_roundtrip(self):
+        """k_x > 6 codes overflow int8; both backends must carry int16 and
+        reproduce amax exactly (code +/- 2^k_x) - previously untested."""
+        x = jnp.asarray([0.5, -0.5, 0.25, 0.0, 0.4999], jnp.float32)
+        for backend in ("jnp", "pallas"):
+            codes, scale = engine.quantize_uniform(x, 7, absolute=True,
+                                                   backend=backend)
+            assert codes.dtype == jnp.int16
+            assert int(jnp.max(jnp.abs(codes))) == 128, backend
+            deq = engine.dequantize_uniform(codes, scale, 7,
+                                            backend=backend)
+            np.testing.assert_allclose(np.asarray(deq)[:3],
+                                       [0.5, -0.5, 0.25], atol=1e-7)
+
+
+class TestTernaryGridParity:
+    @pytest.mark.parametrize("shape", SHAPES[:5])
+    def test_encode(self, shape):
+        """Same key => same stochastic draws on both backends."""
+        x = _rand(shape, seed=11)
+        key = jax.random.PRNGKey(len(shape))
+        (cj, sj), (cp, sp) = _both(lambda backend: engine.quantize_ternary(
+            x, key, backend=backend))
+        _assert_bitwise(cj, cp, "codes")
+        _assert_bitwise(sj, sp, "scale")
+        assert set(np.unique(np.asarray(cj))) <= {-1, 0, 1}
+
+
+class TestBlockwiseGridParity:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("block", [64, 256])
+    def test_encode(self, shape, block):
+        x = _rand(shape, seed=block)
+        (cj, sj), (cp, sp) = _both(lambda backend: engine.quantize_blockwise(
+            x, block, backend=backend))
+        _assert_bitwise(cj, cp, "codes")
+        _assert_bitwise(sj, sp, "scales")
+        # tail block scale includes the zero padding (canonical semantics)
+        numel = int(np.prod(shape))
+        assert cj.shape == (-(-numel // block), block)
+
+
+class TestModeUpdateParity:
+    """The per-mode update cores (what repro.dist.modes and
+    repro.core.qadam actually call), jnp vs pallas."""
+
+    @pytest.mark.parametrize("shape", [(100,), (256, 128), (5, 333),
+                                       (40000,)])
+    @pytest.mark.parametrize("k_g", [1, 4, 6])
+    def test_qadam_fused_step(self, shape, k_g):
+        seed = abs(hash((shape, k_g))) % 1000
+        g = _rand(shape, seed=seed)
+        m = _rand(shape, seed=seed + 1, scale=0.1)
+        v = jnp.abs(_rand(shape, seed=seed + 2, scale=0.01))
+        e = _rand(shape, seed=seed + 3, scale=1e-3)
+        oj, op = _both(lambda backend: engine.adam_ef_step(
+            g, m, v, e, 1e-3, 0.99, 0.9, 1e-5, k_g=k_g, backend=backend))
+        for name, a, b in zip(["m", "v", "codes", "scale", "e"], oj, op):
+            _assert_bitwise(a, b, name)
+
+    def test_qadam_single_machine_update(self):
+        g = _rand((4096,), seed=5)
+        m = jnp.zeros_like(g)
+        oj, op = _both(lambda backend: engine.adam_ef_update(
+            g, m, m, m, 1e-2, 0.99, 0.5, 1e-5, k_g=4, backend=backend))
+        for name, a, b in zip(["delta", "m", "v", "e"], oj, op):
+            _assert_bitwise(a, b, name)
+
+    def test_qadam_no_error_feedback(self):
+        g = _rand((1000,), seed=6)
+        z = jnp.zeros_like(g)
+        for backend in ("jnp", "pallas"):
+            _, _, _, e2 = engine.adam_ef_update(
+                g, z, z, z, 1e-2, 0.99, 0.5, 1e-5, k_g=4,
+                error_feedback=False, backend=backend)
+            assert float(jnp.max(jnp.abs(e2))) == 0.0
+
+    def test_dp_adam_moments(self):
+        """dp_adam routes through adam_ef_moments with a zero residual."""
+        g = _rand((2048,), seed=7)
+        m = _rand((2048,), seed=8, scale=0.1)
+        v = jnp.abs(_rand((2048,), seed=9, scale=0.01))
+        z = jnp.zeros_like(g)
+        oj, op = _both(lambda backend: engine.adam_ef_moments(
+            g, m, v, z, 1e-3, 0.99, 0.9, 1e-5, backend=backend))
+        for name, a, b in zip(["m", "v", "de"], oj, op):
+            _assert_bitwise(a, b, name)
+
+    def test_ef_sgd_blockwise(self):
+        """ef_sgd's wire: blockwise sign codes of Delta+e."""
+        de = _rand((5000,), seed=10, scale=1e-2)
+        (cj, sj), (cp, sp) = _both(lambda backend: engine.quantize_blockwise(
+            de, 256, backend=backend))
+        _assert_bitwise(cj, cp)
+        _assert_bitwise(sj, sp)
+        # EF residual derived from the canonical dequantize is identical
+        ej = de - grids.blockwise_dequantize(cj, sj).reshape(-1)[:5000]
+        ep = de - grids.blockwise_dequantize(cp, sp).reshape(-1)[:5000]
+        _assert_bitwise(ej, ep)
+
+    def test_terngrad_update(self):
+        g = _rand((3000,), seed=12)
+        key = jax.random.PRNGKey(42)
+        (cj, sj), (cp, sp) = _both(lambda backend: engine.quantize_ternary(
+            g, key, backend=backend))
+        _assert_bitwise(cj, cp)
+        _assert_bitwise(grids.ternary_dequantize(cj, sj),
+                        grids.ternary_dequantize(cp, sp))
+
+
+class TestSingleMachineEngineRouting:
+    def test_qadam_backends_trajectories_identical(self):
+        """Acceptance: the single-machine qadam() optimizer produces
+        bit-identical parameters under backend='jnp' and 'pallas'."""
+        from repro.core.qadam import QAdamConfig, qadam, apply_updates
+        rng = np.random.default_rng(3)
+        params0 = {"w": jnp.asarray(rng.normal(size=(64, 32), scale=0.1)
+                                    .astype(np.float32)),
+                   "b": jnp.asarray(rng.normal(size=(32,), scale=0.1)
+                                    .astype(np.float32))}
+        grads = [{"w": jnp.asarray(rng.normal(size=(64, 32))
+                                   .astype(np.float32)),
+                  "b": jnp.asarray(rng.normal(size=(32,))
+                                   .astype(np.float32))}
+                 for _ in range(5)]
+        finals = {}
+        for backend in ("jnp", "pallas"):
+            cfg = QAdamConfig(alpha=1e-2, grad_q="log:4", schedule="sqrt",
+                              backend=backend)
+            opt = qadam(cfg)
+            params, state = params0, opt.init(params0)
+            for g in grads:
+                upd, state = opt.update(g, state, params)
+                params = apply_updates(params, upd)
+            finals[backend] = (params, state)
+        for leaf in ("w", "b"):
+            _assert_bitwise(finals["jnp"][0][leaf],
+                            finals["pallas"][0][leaf], leaf)
+            _assert_bitwise(finals["jnp"][1].e[leaf],
+                            finals["pallas"][1].e[leaf], f"e[{leaf}]")
+
+    def test_resolve_backend(self):
+        assert engine.resolve_backend("jnp") == "jnp"
+        assert engine.resolve_backend("pallas", 1) == "pallas"
+        with pytest.raises(ValueError):
+            engine.resolve_backend("cuda")
+        # auto off-TPU is jnp (this CI runs on CPU)
+        if jax.default_backend() != "tpu":
+            assert engine.resolve_backend(None, 10 ** 9) == "jnp"

@@ -11,6 +11,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.packing import pack_codes, unpack_codes, packed_nbytes
 from repro.dist import collectives as C
 from repro.dist import sharding as SH
+from repro.dist.modes import get_mode
 
 
 def _codes(numel, bits, seed=0):
@@ -56,9 +57,10 @@ class TestPackRoundtrip:
     def test_accounting_matches_packed_nbytes(self, grad_k, bits):
         n_workers, numel = 8, 5000
         c = SH.chunk_size(numel, n_workers)
-        assert C.update_exchange_nbytes(c, n_workers, grad_k) == \
+        qadam = get_mode("qadam")
+        assert qadam.wire_nbytes(c, n_workers, grad_k) == \
             n_workers * packed_nbytes(c, bits)
-        assert C.update_exchange_nbytes(c, n_workers, None) == \
+        assert qadam.wire_nbytes(c, n_workers, None) == \
             n_workers * c * 4
         assert C.weight_broadcast_nbytes(c, n_workers, numel, 7) == \
             n_workers * packed_nbytes(c, 8)
@@ -89,7 +91,8 @@ class TestChannelsShipPackedUint8:
         c = SH.chunk_size(numel, n_workers)
         assert payload.dtype == jnp.uint8
         assert payload.shape == (n_workers, packed_nbytes(c, bits))
-        assert payload.nbytes == C.update_exchange_nbytes(c, n_workers, k_g)
+        assert payload.nbytes == get_mode("qadam").wire_nbytes(c, n_workers,
+                                                               k_g)
         np.testing.assert_array_equal(
             np.asarray(rows).reshape(-1)[:numel], np.asarray(codes))
 
