@@ -116,6 +116,47 @@ def bench_opt_step(emit, k_steps=16):
         emit(f"opt_qadam_scan{k_steps}_{numel}", us, f"{numel}el_per_step")
 
 
+def bench_serve(emit, requests=8, slots=4, prompt_len=16, max_new=32):
+    """ServeSession decode throughput (tok/s), fp32- vs code-resident
+    weights, plus the measured residency ratio. Smoke-scale on CPU: the
+    numbers track the serving hot path (one fused jit step per token,
+    no per-token host sync), not TPU perf."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.model import Model
+    from repro.serve import (Request, ServeSession, params_nbytes,
+                             quantize_params)
+
+    cfg = get_config("yi-6b", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams = quantize_params(params, k_x=6, min_numel=2 ** 10)
+    rng = np.random.default_rng(0)
+
+    def run(p, tag):
+        sess = ServeSession(model, p, slots=slots, max_seq=128, seed=0)
+        # compile warmup: same prompt length as the timed requests, so the
+        # per-length prefill executable is cached before the clock starts
+        h = sess.submit(Request(prompt=list(range(1, prompt_len + 1)),
+                                max_new_tokens=4))
+        sess.drain()
+        reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,
+                                                 size=prompt_len)),
+                        max_new_tokens=max_new) for _ in range(requests)]
+        t0 = time.perf_counter()
+        hs = [sess.submit(r) for r in reqs]
+        res = sess.drain()
+        dt = time.perf_counter() - t0
+        toks = sum(len(res[h].tokens) for h in hs)
+        emit(f"serve_session_{tag}", dt / toks * 1e6,
+             f"{toks / dt:.1f}tok_s_{requests}req_{slots}slots")
+
+    run(params, "fp32")
+    run(qparams, "qx6")
+    emit("serve_resident_ratio", 0.0,
+         f"{params_nbytes(qparams) / params_nbytes(params):.3f}x_fp32_measured")
+
+
 def bench_comm_cost(emit):
     """Wire bytes for ResNet-101-sized (162.9MB fp32) and VGG16-sized
     (512.3MB) models at the paper's quantization levels - reproduces the
@@ -233,18 +274,35 @@ def bench_roofline(emit):
 BENCHES = {
     "kernels": bench_kernels,
     "comm_cost": bench_comm_cost,
+    "serve": bench_serve,
     "table2_cifar100_analogue": bench_table2,
     "table3_cifar10_analogue": bench_table3,
     "fig34_convergence": bench_fig34,
     "roofline": bench_roofline,
 }
 
+# named suites: coarse groups for CI jobs / snapshot baselines
+SUITES = {
+    "serve": ["serve"],
+    "kernels": ["kernels", "comm_cost"],
+    "paper": ["table2_cifar100_analogue", "table3_cifar10_analogue",
+              "fig34_convergence", "comm_cost"],
+    "all": list(BENCHES),
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma list of benches")
+    ap.add_argument("--suite", default=None, choices=sorted(SUITES),
+                    help="named bench group (overrides --only)")
     args, _ = ap.parse_known_args()
-    names = args.only.split(",") if args.only else list(BENCHES)
+    if args.suite:
+        names = SUITES[args.suite]
+    elif args.only:
+        names = args.only.split(",")
+    else:
+        names = list(BENCHES)
 
     print("name,us_per_call,derived")
 

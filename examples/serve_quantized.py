@@ -1,9 +1,11 @@
-"""Serving with quantized-resident weights: the paper's weight-quantization
-motivation ("storage on edge devices") as a serving engine demo.
+"""Serving with code-resident quantized weights: the paper's
+weight-quantization motivation ("storage on edge devices") as a
+continuous-batching serving demo.
 
-Loads a smoke-scale LM, serves a batch of requests twice - fp32-resident
-and Q_x-resident - and checks the outputs stay consistent while the model
-footprint drops ~4x.
+Loads a smoke-scale LM, serves the same requests fp32-resident and
+Q_x-code-resident through a ServeSession, asserts the *measured* device
+bytes drop ~4x (int8 codes + per-layer scales - not a printed
+theoretical "/4"), and checks greedy outputs stay consistent.
 
   PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -14,35 +16,48 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.model import Model
-from repro.serve.engine import Engine, Request
+from repro.serve import Request, ServeSession, params_nbytes, quantize_params
 
 
 def main():
-    cfg = get_config("gemma2-2b", smoke=True)
+    cfg = get_config("yi-6b", smoke=True)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    nbytes = sum(int(np.prod(p.shape)) * 4 for p in jax.tree.leaves(params))
-    print(f"{cfg.name} (smoke): fp32 model {nbytes / 1e6:.1f}MB; "
-          f"int-coded (k_x=6) ~{nbytes / 4 / 1e6:.1f}MB on device")
+    qparams = quantize_params(params, k_x=6, min_numel=2 ** 10)
+
+    fp_bytes = params_nbytes(params)
+    q_bytes = params_nbytes(qparams)
+    print(f"{cfg.name} (smoke): fp32 model {fp_bytes / 1e6:.1f}MB; "
+          f"resident int codes {q_bytes / 1e6:.1f}MB "
+          f"({q_bytes / fp_bytes:.2f}x of fp32, measured on the arrays)")
+    assert q_bytes <= 0.30 * fp_bytes, (
+        f"quantized residency regressed: {q_bytes} vs {fp_bytes} fp32")
 
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size, size=12)),
                     max_new_tokens=12) for _ in range(4)]
 
     outs = {}
-    for tag, quantized in (("fp32", False), ("Qx-int", True)):
-        eng = Engine(model, params, max_seq=64, quantized=quantized)
+    for tag, p in (("fp32", params), ("Qx-int", qparams)):
+        sess = ServeSession(model, p, slots=4, max_seq=64)
         t0 = time.time()
-        res = eng.generate(reqs)
-        outs[tag] = [r.tokens for r in res]
-        print(f"{tag:7s}: {sum(len(r.tokens) for r in res)} tokens "
-              f"in {time.time() - t0:.2f}s; req0 -> {res[0].tokens[:8]}")
+        handles = [sess.submit(r) for r in reqs]
+        res = sess.drain()
+        outs[tag] = [res[h].tokens for h in handles]
+        print(f"{tag:7s}: {sum(len(t) for t in outs[tag])} tokens "
+              f"in {time.time() - t0:.2f}s; req0 -> {outs[tag][0][:8]}")
 
     agree = np.mean([
         np.mean(np.asarray(a[:6]) == np.asarray(b[:6]))
         for a, b in zip(outs["fp32"], outs["Qx-int"])])
-    print(f"greedy agreement over first 6 tokens: {agree * 100:.0f}% "
+    first = np.mean([a[0] == b[0]
+                     for a, b in zip(outs["fp32"], outs["Qx-int"])])
+    print(f"greedy agreement over first 6 tokens: {agree * 100:.0f}%; "
+          f"first tokens: {first * 100:.0f}% "
           f"(quantization perturbs logits mildly - Table 2's 'WQuan' row)")
+    # k_x=6 on random smoke weights drifts after a few tokens; the gate is
+    # first-token agreement (with margin), not the full-sequence figure
+    assert first >= 0.75, "quantized serving diverged from fp32 immediately"
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -62,13 +63,17 @@ def make_serve_step(model, mesh, sc: ServeConfig, kind: str = "decode"):
 
     if kind == "decode":
         def step(params, inputs, cache, pos):
+            pos = jnp.asarray(pos)
             ispec = {k: input_specs["token" if k == "token" else "embeds"]
                      for k in inputs}
             cspec = {k: cache_specs[k] for k in cache}
+            # pos: scalar (batch-synchronous) or (B,) per-slot positions
+            # (ServeSession continuous batching) - sharded with the batch
+            pspec = P() if pos.ndim == 0 else P(b0)
             fn = shard_map(
                 lambda p, i, c, q: model.decode_step(p, i, c, q, ctx),
                 mesh=mesh,
-                in_specs=(param_specs, ispec, cspec, P()),
+                in_specs=(param_specs, ispec, cspec, pspec),
                 out_specs=(P(b0, None), cspec), check_rep=False)
             return fn(params, inputs, cache, pos)
         return step, param_specs, (input_specs, cache_specs)

@@ -1,8 +1,11 @@
-"""Serving launcher: batched generation with (optional) quantized-resident
-weights (Q_x model-size reduction, paper Tables 2-3 'Size' column).
+"""Serving launcher: continuous-batching ServeSession with (optionally)
+code-resident Q_x weights (the paper's 'Size' column, held as int codes).
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-      --requests 4 --max-new 16 --quantized
+      --requests 8 --slots 4 --max-new 16 --quantized
+
+Submitting more requests than slots exercises the scheduler: queued
+requests claim slots mid-flight as earlier ones finish.
 """
 from __future__ import annotations
 
@@ -14,12 +17,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--quantized", action="store_true",
-                    help="int-coded resident weights (k_x=6)")
+                    help="code-resident Q_x weights (int8 codes + scales)")
+    ap.add_argument("--k-x", type=int, default=6)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -28,19 +33,26 @@ def main():
     import numpy as np
     from repro.configs import get_config
     from repro.models.model import Model
-    from repro.serve.engine import Engine, Request
+    from repro.serve import (Request, ServeSession, params_nbytes,
+                             quantize_params)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.arch_type == "encdec" or cfg.input_mode != "tokens":
         raise SystemExit("serve CLI demo supports token-input decoder LMs")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    nbytes = sum(int(np.prod(l.shape)) * 4 for l in jax.tree.leaves(params))
-    print(f"arch={args.arch} params={nbytes/1e6:.1f}MB fp32"
-          + (" (serving int-coded, ~/4)" if args.quantized else ""))
+    fp_bytes = params_nbytes(params)
+    if args.quantized:
+        params = quantize_params(params, k_x=args.k_x)
+        q_bytes = params_nbytes(params)
+        print(f"arch={args.arch} params={fp_bytes / 1e6:.1f}MB fp32 -> "
+              f"{q_bytes / 1e6:.1f}MB resident codes "
+              f"({q_bytes / fp_bytes:.2f}x, measured)")
+    else:
+        print(f"arch={args.arch} params={fp_bytes / 1e6:.1f}MB fp32")
 
-    eng = Engine(model, params, max_seq=args.max_seq,
-                 quantized=args.quantized)
+    session = ServeSession(model, params, slots=args.slots,
+                           max_seq=args.max_seq, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,
                                              size=args.prompt_len)),
@@ -48,13 +60,17 @@ def main():
                     temperature=args.temperature)
             for _ in range(args.requests)]
     t0 = time.time()
-    results = eng.generate(reqs)
+    handles = [session.submit(r) for r in reqs]
+    results = session.drain()
     dt = time.time() - t0
-    total_new = sum(len(r.tokens) for r in results)
-    print(f"generated {total_new} tokens in {dt:.2f}s "
-          f"({total_new / dt:.1f} tok/s batched)")
-    for i, r in enumerate(results):
-        print(f"  req{i}: {r.tokens[:12]}{'...' if len(r.tokens) > 12 else ''}")
+    total_new = sum(len(results[h].tokens) for h in handles)
+    print(f"generated {total_new} tokens over {args.requests} requests on "
+          f"{args.slots} slots in {dt:.2f}s ({total_new / dt:.1f} tok/s); "
+          f"stats={session.stats}")
+    for i, h in enumerate(handles):
+        r = results[h]
+        print(f"  req{i}: {r.tokens[:12]}{'...' if len(r.tokens) > 12 else ''}"
+              f" [{r.finish_reason}]")
 
 
 if __name__ == "__main__":

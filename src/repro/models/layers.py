@@ -82,16 +82,21 @@ def apply_norm(x, p, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def rope(x, positions, theta):
-    """x: (..., S, H, hd); positions: (S,) int32 global positions.
-    theta may be a traced per-layer scalar (gemma3 mixes 10k/1M bases)."""
+    """x: (..., S, H, hd); positions: (S,) int32 global positions, or (B, S)
+    per-row positions (continuous-batching decode, where every slot sits at
+    its own depth). theta may be a traced per-layer scalar (gemma3 mixes
+    10k/1M bases)."""
     hd = x.shape[-1]
     half = hd // 2
     theta = jnp.asarray(theta, jnp.float32)
+    positions = jnp.asarray(positions)
     inv_freq = jnp.exp(-jnp.log(theta) * 2.0
                        * jnp.arange(half, dtype=jnp.float32) / hd)
-    ang = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]  # (S, half)
-    cos = jnp.cos(ang)[None, :, None, :]
-    sin = jnp.sin(ang)[None, :, None, :]
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    if positions.ndim == 1:
+        cos, sin = cos[None], sin[None]                        # (1, S, 1, half)
     xf = x.astype(jnp.float32)
     x1, x2 = xf[..., :half], xf[..., half:]
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
@@ -99,11 +104,11 @@ def rope(x, positions, theta):
 
 
 def sinusoidal_positions(S, d, offset=0):
-    # offset may be traced (decode position)
-    pos = (jnp.asarray(offset, jnp.float32)
-           + jnp.arange(S, dtype=jnp.float32))[:, None]
-    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
-    ang = pos / jnp.power(10000.0, 2 * i / d)
+    # offset may be traced (decode position), scalar or (B,) per-slot
+    off = jnp.asarray(offset, jnp.float32)
+    pos = off[..., None] + jnp.arange(S, dtype=jnp.float32)   # (..., S)
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos[..., None] / jnp.power(10000.0, 2 * i / d)      # (..., S, d/2)
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
 
 
@@ -159,8 +164,9 @@ def decode_attention(q, k_cache, v_cache, *, total_len, window=0,
     """Single-token decode against a sequence-sharded KV cache.
 
     q: (B,1,H,hd); k_cache/v_cache: (B,S_loc,K,hd) covering global positions
-    [cp_index*S_loc, ...). total_len: #valid cache entries (int scalar);
-    q_pos: scalar global position of the query token.
+    [cp_index*S_loc, ...). total_len: #valid cache entries, scalar or (B,)
+    per-slot (continuous batching: each slot has its own depth);
+    q_pos: global position of the query token, scalar or (B,).
 
     Computes flash-style partial softmax per shard and combines across the
     cp axis with (logsumexp, weighted-sum) psums - bytes moved per step are
@@ -175,27 +181,29 @@ def decode_attention(q, k_cache, v_cache, *, total_len, window=0,
     rep = H // K
     pos0 = ctx.cp_index() * S_loc
     kv_pos = pos0 + jnp.arange(S_loc)
-    valid = kv_pos < total_len
+    tl = jnp.broadcast_to(jnp.asarray(total_len), (B,))
+    qp = jnp.broadcast_to(jnp.asarray(q_pos), (B,))
+    valid = kv_pos[None, :] < tl[:, None]                 # (B, S_loc)
     win = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window, jnp.int32),
                     jnp.int32(2 ** 30))
-    valid &= kv_pos > q_pos - win
+    valid &= kv_pos[None, :] > qp[:, None] - win
     if meta_kv is not None:
         mk, mv = meta_kv
         M = mk.shape[1]
         k_cache = jnp.concatenate([mk.astype(k_cache.dtype), k_cache], axis=1)
         v_cache = jnp.concatenate([mv.astype(v_cache.dtype), v_cache], axis=1)
-        meta_valid = jnp.broadcast_to(ctx.cp_index() == 0, (M,))
-        valid = jnp.concatenate([meta_valid, valid])
+        meta_valid = jnp.broadcast_to(ctx.cp_index() == 0, (B, M))
+        valid = jnp.concatenate([meta_valid, valid], axis=1)
         S_loc += M
     qr = q.reshape(B, K, rep, hd)
     scores = jnp.einsum("bkrd,bskd->bkrs", qr, k_cache,
                         preferred_element_type=jnp.float32) / np.sqrt(hd)
     scores = _softcap(scores, softcap)
-    scores = jnp.where(valid[None, None, None], scores, -jnp.inf)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
     l_loc = jnp.max(scores, axis=-1)                      # (B,K,rep)
     l_safe = jnp.where(jnp.isfinite(l_loc), l_loc, -1e30)
     p = jnp.exp(scores - l_safe[..., None])
-    p = jnp.where(valid[None, None, None], p, 0.0)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
     denom = jnp.sum(p, axis=-1)                           # (B,K,rep)
     o_un = jnp.einsum("bkrs,bskd->bkrd", p, v_cache.astype(jnp.float32))
     if ctx.sharded:

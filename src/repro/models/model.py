@@ -483,9 +483,14 @@ class Model:
     def decode_step(self, params, inputs, cache, pos,
                     ctx: ShardCtx = ShardCtx()):
         """One-token decode. inputs: {"token": (B,1)} or {"embeds": (B,1,d)}.
-        pos: scalar int32 - global position of this token. The KV cache is
-        sequence-sharded over the cp axis; SSM state is replicated."""
+        pos: int32 global position of this token - scalar (batch-synchronous
+        decode) or (B,) per-slot positions (continuous batching: every slot
+        sits at its own depth, attention masked to its own valid prefix).
+        The KV cache is sequence-sharded over the cp axis; SSM state is
+        replicated."""
         cfg = self.cfg
+        pos = jnp.asarray(pos, jnp.int32)
+        per_slot = pos.ndim == 1
         params = ctx.gather(params, "static")
         if cfg.input_mode == "embeddings":
             x = inputs["embeds"].astype(_dt(cfg))
@@ -495,7 +500,8 @@ class Model:
             x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
         if cfg.arch_type == "encdec":
             B, _, d = x.shape
-            x = x + L.sinusoidal_positions(1, d, offset=pos).astype(x.dtype)[None]
+            se = L.sinusoidal_positions(1, d, offset=pos).astype(x.dtype)
+            x = x + (se if per_slot else se[None])
         B = x.shape[0]
         windows, thetas = self._flags()
         K, hd = cfg.n_kv_heads, cfg.head_dim_
@@ -508,7 +514,7 @@ class Model:
             local_pos_c = jnp.clip(local_pos, 0, S_loc - 1)
         else:
             local_pos_c = pos
-            in_range = jnp.asarray(True)
+            in_range = jnp.broadcast_to(jnp.asarray(True), pos.shape)
 
         def block(carry, scanned):
             x = carry
@@ -541,17 +547,28 @@ class Model:
                 q = L.rmsnorm(q, pa["q_norm"], cfg.norm_eps)
                 k = L.rmsnorm(k, pa["k_norm"], cfg.norm_eps)
             if cfg.arch_type != "encdec":
-                ppos = jnp.asarray(pos)[None]
+                ppos = pos[:, None] if per_slot else pos[None]
                 q = L.rope(q, ppos, theta)
                 k = L.rope(k, ppos, theta)
-            kc = jax.lax.dynamic_update_slice(
-                cache_l["k"], k.astype(cache_l["k"].dtype),
-                (0, local_pos_c, 0, 0))
-            vc = jax.lax.dynamic_update_slice(
-                cache_l["v"], v.astype(cache_l["v"].dtype),
-                (0, local_pos_c, 0, 0))
-            kc = jnp.where(in_range, kc, cache_l["k"])
-            vc = jnp.where(in_range, vc, cache_l["v"])
+            if per_slot:
+                # per-row scatter: slot i appends at its own position
+                rows = jnp.arange(B)
+                kc = cache_l["k"].at[rows, local_pos_c].set(
+                    k[:, 0].astype(cache_l["k"].dtype))
+                vc = cache_l["v"].at[rows, local_pos_c].set(
+                    v[:, 0].astype(cache_l["v"].dtype))
+                keep = in_range[:, None, None, None]
+                kc = jnp.where(keep, kc, cache_l["k"])
+                vc = jnp.where(keep, vc, cache_l["v"])
+            else:
+                kc = jax.lax.dynamic_update_slice(
+                    cache_l["k"], k.astype(cache_l["k"].dtype),
+                    (0, local_pos_c, 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    cache_l["v"], v.astype(cache_l["v"].dtype),
+                    (0, local_pos_c, 0, 0))
+                kc = jnp.where(in_range, kc, cache_l["k"])
+                vc = jnp.where(in_range, vc, cache_l["v"])
             new_cache_l["k"], new_cache_l["v"] = kc, vc
 
             meta_kv = None
@@ -582,8 +599,11 @@ class Model:
 
             if cfg.arch_type == "encdec":
                 hx = L.apply_norm(x, p["ln_x"], cfg)
+                # cross-attention is non-causal over the full encoder cache,
+                # so the (per-slot) query position never enters the mask
+                xq_pos = jnp.max(pos)[None] if per_slot else pos[None]
                 xout = self._attn_sublayer(
-                    p["xattn"], hx, q_pos=jnp.asarray(pos)[None], window=0,
+                    p["xattn"], hx, q_pos=xq_pos, window=0,
                     theta=cfg.rope_theta, ctx=ctx,
                     kv_override=(cache_l["ck"], cache_l["cv"]), causal=False)
                 x = x + xout

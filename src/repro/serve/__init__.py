@@ -1,0 +1,11 @@
+"""Serving: continuous-batching sessions over code-resident quantized
+weights (the paper's Q_x "Size" motivation, applied for real)."""
+from repro.serve.engine import Engine
+from repro.serve.quantized import (QuantizedLeaf, is_quantized,
+                                   make_dequant_gather, params_nbytes,
+                                   quantize_params)
+from repro.serve.session import Request, Result, ServeSession
+
+__all__ = ["Engine", "QuantizedLeaf", "Request", "Result", "ServeSession",
+           "is_quantized", "make_dequant_gather", "params_nbytes",
+           "quantize_params"]

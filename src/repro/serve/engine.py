@@ -1,101 +1,47 @@
-"""Batched serving engine: prefill + decode with (optionally) int8-resident
-quantized weights - the paper's weight-quantization motivation ("limited
-storage in edge devices") applied to a serving fleet.
+"""Back-compat batch API: ``Engine.generate`` as a thin shim over
+:class:`repro.serve.session.ServeSession`.
 
-The engine pads a list of prompts into a batch, runs a single prefill to
-build the KV/SSM cache, then steps the decode loop greedily (or with
-temperature sampling). Works single-device or on a mesh via
-repro.dist.serve.make_serve_step.
+The old Engine padded a fixed batch, ran prefill once, then round-tripped
+every token through the host (one ``int(jnp.argmax(...))`` per request per
+step) - and its "quantized-resident" mode stored fp32 values. New code
+should use ``ServeSession`` directly (continuous batching, jitted
+sampling) with ``quantize_params`` for genuinely code-resident weights;
+``Engine`` just maps one request list onto one session.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.models.model import Model
-from repro.models.layers import ShardCtx
-from repro.core.quantizers import get_quantizer
+from repro.serve.quantized import quantize_params
+from repro.serve.session import Request, Result, ServeSession
 
-
-@dataclasses.dataclass
-class Request:
-    prompt: Sequence[int]
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-
-
-@dataclasses.dataclass
-class Result:
-    tokens: List[int]
-    prompt_len: int
-
-
-def quantize_resident_weights(params, k_x: int = 6):
-    """Store weights as Q_x(x) - model size /4 vs f32 (Table 2 'Size')."""
-    q = get_quantizer(f"uniform_amax:{k_x}")
-
-    def leaf(p):
-        if p.size < 2 ** 14:
-            return p
-        return q(p).astype(p.dtype)
-    return jax.tree.map(leaf, params)
+__all__ = ["Engine", "Request", "Result"]
 
 
 class Engine:
-    def __init__(self, model: Model, params, max_seq: int = 256,
+    """One-shot batch generation (compat shim; see module docstring)."""
+
+    def __init__(self, model, params, max_seq: int = 256,
                  quantized: bool = False, k_x: int = 6):
         self.model = model
         self.cfg = model.cfg
         self.max_seq = max_seq
-        self.params = (quantize_resident_weights(params, k_x)
-                       if quantized else params)
-        self._decode = jax.jit(
-            lambda p, i, c, pos: model.decode_step(p, i, c, pos))
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, max_seq_local=max_seq))
+        self.params = (quantize_params(params, k_x=k_x) if quantized
+                       else params)
+        self._session: Optional[ServeSession] = None
 
     def generate(self, requests: List[Request], key=None) -> List[Result]:
-        cfg = self.cfg
-        B = len(requests)
-        plens = [len(r.prompt) for r in requests]
-        pmax = max(plens)
-        toks = np.zeros((B, pmax), np.int32)
-        mask = np.zeros((B, pmax), np.float32)
-        for i, r in enumerate(requests):
-            toks[i, :plens[i]] = np.asarray(r.prompt, np.int32)
-            mask[i, :plens[i]] = 1.0
-        batch = {"tokens": jnp.asarray(toks),
-                 "targets": jnp.asarray(toks),
-                 "mask": jnp.asarray(mask)}
-
-        logits, cache = self._prefill(self.params, batch)
-        # last valid logit per row
-        last = jnp.asarray([p - 1 for p in plens])
-        cur = jnp.argmax(logits[jnp.arange(B), last], axis=-1)
-
-        outs = [[int(cur[i])] for i in range(B)]
-        key = key if key is not None else jax.random.PRNGKey(0)
-        max_new = max(r.max_new_tokens for r in requests)
-        pos = pmax  # decode appends after the padded prompt region
-        for t in range(max_new - 1):
-            lg, cache = self._decode(self.params, {"token": cur[:, None]},
-                                     cache, jnp.int32(pos + t))
-            nxt = []
-            for i, r in enumerate(requests):
-                if r.temperature > 0:
-                    key, sub = jax.random.split(key)
-                    tok = int(jax.random.categorical(
-                        sub, lg[i] / r.temperature))
-                else:
-                    tok = int(jnp.argmax(lg[i]))
-                nxt.append(tok)
-            cur = jnp.asarray(nxt, jnp.int32)
-            for i in range(B):
-                if len(outs[i]) < requests[i].max_new_tokens:
-                    outs[i].append(int(cur[i]))
-        return [Result(tokens=outs[i], prompt_len=plens[i])
-                for i in range(B)]
+        # one session, grown (and recompiled) only when a larger batch
+        # arrives; smaller batches ride idle slots
+        if self._session is None or self._session.slots < len(requests):
+            self._session = ServeSession(self.model, self.params,
+                                         slots=len(requests),
+                                         max_seq=self.max_seq, seed=0)
+        session = self._session
+        # old-Engine semantics: identical (requests, key) -> identical draws
+        session.reseed(key if key is not None else jax.random.PRNGKey(0))
+        handles = [session.submit(r) for r in requests]
+        results = session.drain()
+        return [results[h] for h in handles]

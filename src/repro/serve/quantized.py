@@ -1,0 +1,180 @@
+"""Code-resident quantized weights for serving.
+
+The paper motivates Q_x by "limited storage in edge devices" (Tables 2-3,
+'Size'). The old ``quantize_resident_weights`` stored ``Q_x(x)`` *values*
+back in fp32 - zero actual memory saved. This module keeps the integer
+codes themselves resident:
+
+  * ``quantize_params(params, k_x)`` replaces every large float leaf with a
+    :class:`QuantizedLeaf` - int8 codes (int16 above k_x=6, 4-bit packed
+    below k_x=3 via ``repro.core.packing``) plus f32 scales. Scan-stacked
+    ``blocks`` leaves get one amax scale *per layer* (shape ``(L,)``), so
+    ``lax.scan`` slices codes and scale together and each layer dequantizes
+    independently.
+  * ``make_dequant_gather()`` is a ``ShardCtx.param_gather`` hook: the model
+    dequantizes each block's leaves *inside* the layer scan, at use - only
+    one layer's fp weights are ever live, the resident footprint is the
+    codes (``params_nbytes`` measures it: ~fp32/4 at k_x<=6).
+
+Quantization itself goes through ``repro.opt.engine`` (Pallas kernels on
+TPU, the same ``repro.opt.grids`` math everywhere else), so resident codes
+match the training/wire codecs bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.collectives import pack_rows, unpack_rows
+from repro.opt import engine, grids
+
+_STACKED_KEYS = ("blocks", "enc_blocks")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedLeaf:
+    """One parameter tensor held as integer codes + scales.
+
+    codes: integer codes with the leaf's logical shape; when ``pack_bits``
+        is set, uint8 with the last dim holding ``pack_bits``-bit fields
+        (``repro.core.packing`` layout, per leading row).
+    scale: f32 scalar (per-tensor) or (L,) per-layer for stacked leaves.
+        ``lax.scan`` slices it alongside the codes.
+    """
+
+    codes: jax.Array
+    scale: jax.Array
+    k_x: int = dataclasses.field(metadata=dict(static=True))
+    shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    dtype: str = dataclasses.field(metadata=dict(static=True))
+    pack_bits: int = dataclasses.field(default=0, metadata=dict(static=True))
+
+    def tree_flatten(self):
+        return ((self.codes, self.scale),
+                (self.k_x, self.shape, self.dtype, self.pack_bits))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scale = children
+        k_x, shape, dtype, pack_bits = aux
+        return cls(codes=codes, scale=scale, k_x=k_x, shape=shape,
+                   dtype=dtype, pack_bits=pack_bits)
+
+    @property
+    def nbytes(self) -> int:
+        """Actual resident bytes (codes + scales)."""
+        return int(self.codes.nbytes) + int(self.scale.nbytes)
+
+    def dequantize(self) -> jax.Array:
+        """Codes -> float tensor (called per-layer inside the model scan,
+        where a stacked leaf's codes/scale arrive sliced to one layer)."""
+        codes = self.codes
+        if self.pack_bits:
+            lead = codes.shape[:-1]
+            flat = codes.reshape((-1, codes.shape[-1]))
+            numel = self.shape[-1]  # logical last-dim length
+            rows = unpack_rows(flat, self.pack_bits, numel)
+            codes = rows.reshape(lead + (numel,))
+        scale = self.scale
+        if scale.ndim:
+            scale = scale.reshape(scale.shape + (1,) * (codes.ndim - scale.ndim))
+        return grids.uniform_dequantize(codes, scale, self.k_x).astype(
+            jnp.dtype(self.dtype))
+
+
+def _is_qleaf(x) -> bool:
+    return isinstance(x, QuantizedLeaf)
+
+
+def _path_head(path) -> Optional[str]:
+    if not path:
+        return None
+    k = path[0]
+    return getattr(k, "key", getattr(k, "name", None))
+
+
+def _quantize_leaf(p: jax.Array, k_x: int, absolute: bool, per_layer: bool,
+                   pack: bool) -> QuantizedLeaf:
+    x = p.astype(jnp.float32)
+    # engine dispatch: fused Pallas amax+quantize tiles on TPU; vmapped
+    # over the layer dim for stacked leaves (one scale per layer)
+    if per_layer:
+        codes, scale = jax.vmap(
+            lambda xl: engine.quantize_uniform(xl, k_x, absolute=absolute))(x)
+    else:
+        codes, scale = engine.quantize_uniform(x, k_x, absolute=absolute)
+    pack_bits = 0
+    if pack and k_x <= 2:
+        # codes live in [-2^k_x, 2^k_x] (+/-4 at k_x=2): 4-bit fields hold
+        # them; two codes per byte along the last dim, per leading row
+        # (the same row-wise layout the dist wire ships).
+        pack_bits = 4
+        lead = codes.shape[:-1]
+        rows = pack_rows(codes.reshape((-1, codes.shape[-1])), pack_bits)
+        codes = rows.reshape(lead + (rows.shape[-1],))
+    return QuantizedLeaf(codes=codes, scale=scale, k_x=k_x,
+                         shape=tuple(p.shape), dtype=jnp.dtype(p.dtype).name,
+                         pack_bits=pack_bits)
+
+
+def quantize_params(params, k_x: int = 6, *, absolute: bool = False,
+                    min_numel: int = 2 ** 14, pack: bool = False):
+    """Replace large float leaves with code-resident :class:`QuantizedLeaf`.
+
+    Stacked ``blocks``/``enc_blocks`` leaves get per-layer scales (finer
+    than a whole-stack amax, and what the per-layer dequant-at-use needs).
+    Leaves smaller than ``min_numel`` (biases, norms) stay float.
+    """
+    def one(path, p):
+        if (not hasattr(p, "dtype")
+                or not jnp.issubdtype(p.dtype, jnp.floating)
+                or p.ndim == 0 or p.size < min_numel):
+            return p
+        per_layer = _path_head(path) in _STACKED_KEYS and p.ndim > 1
+        return _quantize_leaf(p, k_x, absolute, per_layer, pack)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def is_quantized(params) -> bool:
+    return any(_is_qleaf(l) for l in
+               jax.tree.leaves(params, is_leaf=_is_qleaf))
+
+
+def make_dequant_gather(inner=None):
+    """A ``ShardCtx.param_gather`` hook that dequantizes ``QuantizedLeaf``
+    leaves at use. The "static" pass leaves scan-stacked subtrees quantized
+    so ``lax.scan`` carries the codes and each layer dequantizes only its
+    own slice; every other kind dequantizes the (sliced) subtree whole.
+    ``inner``: optional downstream gather to compose with (mesh serving).
+    """
+    def deq(leaf):
+        return leaf.dequantize() if _is_qleaf(leaf) else leaf
+
+    def gather(subtree, kind: str):
+        if kind == "static":
+            def one(path, leaf):
+                if _path_head(path) in _STACKED_KEYS:
+                    return leaf  # dequantized per-layer inside the scan
+                return deq(leaf)
+            out = jax.tree_util.tree_map_with_path(one, subtree,
+                                                   is_leaf=_is_qleaf)
+        else:
+            out = jax.tree.map(deq, subtree, is_leaf=_is_qleaf)
+        return inner(out, kind) if inner is not None else out
+
+    return gather
+
+
+def params_nbytes(params) -> int:
+    """Actual resident bytes of a parameter tree (codes + scales for
+    quantized leaves, array bytes otherwise) - what the example and tests
+    assert against, instead of printing a theoretical "~/4"."""
+    total = 0
+    for leaf in jax.tree.leaves(params, is_leaf=_is_qleaf):
+        total += leaf.nbytes if _is_qleaf(leaf) else int(leaf.nbytes)
+    return total

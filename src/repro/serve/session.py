@@ -1,0 +1,443 @@
+"""Continuous-batching serve sessions over a fixed pool of decode slots.
+
+``ServeSession`` replaces the old batch-synchronous ``Engine.generate``:
+
+  * ``submit(Request) -> handle`` claims a free slot (or queues); new
+    requests join mid-flight as others finish - the batch never drains to
+    restart.
+  * ``step()`` runs ONE jitted decode step over all slots: token embedding,
+    attention against each slot's own cache prefix (per-slot positions -
+    slot i attends exactly its ``pos_i`` written entries, never padding or
+    a previous occupant's rows), and sampling (greedy + per-slot
+    temperature via a temperature vector and per-slot PRNG keys) all inside
+    the compiled step. The host dispatches and moves on: zero per-token
+    device->host transfers.
+  * ``drain()`` runs until every submitted request finished and returns
+    ``{handle: Result}``.
+
+Decode state keeps a fixed shape - (slots,) control vectors + a
+(layers, slots, max_seq, ...) cache - so exactly one compiled decode step
+is reused for the whole session, with the state buffers donated through
+it. Admission runs one batched prefill over the prompt and scatters the
+KV/SSM cache into the claimed slot lane (compiled once per distinct
+prompt length, like the old engine's per-shape prefill); where prefill
+can't apply (mesh ``decode_fn`` sessions, SSD chunk-misaligned prompts)
+the prompt is injected through the decode step one token per dispatch.
+
+The decode callable is pluggable: the default wraps
+``model.decode_step`` locally (dequantizing ``QuantizedParams`` per layer
+at use); pass ``decode_fn=`` from ``repro.dist.serve.make_serve_step`` to
+run the same session over a mesh - single-device and sharded serving are
+one API.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ShardCtx
+from repro.serve.quantized import is_quantized, make_dequant_gather
+
+
+def _raw_key(key: jax.Array) -> jax.Array:
+    """Normalize legacy (2,) uint32 / new-style typed PRNG keys to the raw
+    uint32 data the per-slot key buffer stores."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    key = jnp.asarray(key, jnp.uint32)
+    if key.shape != (2,):
+        raise ValueError("ServeSession needs a threefry PRNG key "
+                         f"(2 uint32 words); got key data {key.shape}")
+    return key
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass
+class Result:
+    tokens: List[int]
+    prompt_len: int
+    handle: int = -1
+    finish_reason: str = "length"       # "length" | "eos" | "cache_full"
+
+
+class ServeSession:
+    """Slot-scheduled continuous-batching session.
+
+    model: repro.models.model.Model (token-input decoder LM).
+    params: the model's parameter tree; may contain ``QuantizedLeaf``
+        leaves from ``quantize_params`` (local decode path only).
+    slots: number of concurrent decode lanes (the fixed batch width).
+    max_seq: per-slot cache length; a request needs
+        ``len(prompt) + max_new_tokens - 1 <= max_seq``.
+    eos_id: optional token id that finishes a request early.
+    decode_fn: optional ``(params, inputs, cache, pos) -> (logits, cache)``
+        override, e.g. from ``dist.serve.make_serve_step(..., "decode")``.
+    sync_interval: while requests are queued AND a slot may have finished
+        early (EOS configured), harvest every N steps. Without an EOS the
+        scheduler knows each slot's earliest possible finish step
+        host-side and harvests only then - O(requests) syncs, never
+        O(tokens); with an empty queue the steady-state loop never syncs.
+    """
+
+    def __init__(self, model, params, *, slots: int = 8, max_seq: int = 256,
+                 eos_id: Optional[int] = None,
+                 decode_fn: Optional[Callable] = None,
+                 base_key: Optional[jax.Array] = None, seed: int = 0,
+                 sync_interval: int = 8):
+        cfg = model.cfg
+        if cfg.input_mode != "tokens" or cfg.arch_type == "encdec":
+            raise ValueError("ServeSession serves token-input decoder LMs")
+        self.model, self.cfg = model, cfg
+        self.slots, self.max_seq, self.eos_id = slots, max_seq, eos_id
+        self.sync_interval = max(1, sync_interval)
+        self.params = params
+        self._local = decode_fn is None
+        self._ctx = (ShardCtx(param_gather=make_dequant_gather())
+                     if is_quantized(params) else ShardCtx())
+        if decode_fn is None:
+            ctx = self._ctx
+            decode_fn = lambda p, i, c, pos: model.decode_step(p, i, c, pos,
+                                                               ctx)
+        elif is_quantized(params):
+            raise ValueError("QuantizedParams require the local decode path;"
+                             " a mesh decode_fn brings its own weight wire")
+        self._decode = decode_fn
+        self._prefill_fns: Dict[int, Callable] = {}  # keyed by prompt len
+        # two step variants: sessions whose admitted requests are all
+        # greedy never pay (or compile) the categorical sampling pass
+        self._step_greedy = jax.jit(self._build_step(sample=False),
+                                    donate_argnums=(1,))
+        self._step_sample = jax.jit(self._build_step(sample=True),
+                                    donate_argnums=(1,))
+        self._admit_fn = jax.jit(self._build_admit(), donate_argnums=(0,))
+        self._state = self._init_state()
+        self._base_key = _raw_key(base_key if base_key is not None
+                                  else jax.random.PRNGKey(seed))
+        self._hot: set = set()          # handles in slots with temp > 0
+        self._slot_handle: List[Optional[int]] = [None] * slots
+        self._slot_done_step = [0] * slots   # earliest possible finish
+        self._pending = collections.deque()
+        self._requests: Dict[int, Request] = {}
+        self._results: Dict[int, Result] = {}
+        self._next_handle = 0
+        self._admit_seq = 0             # admissions since the last reseed
+        self._steps = 0
+        self.stats = {"dispatches": 0, "syncs": 0, "admitted": 0}
+
+    # ------------------------------------------------------------------
+    # device-side state + compiled programs
+    # ------------------------------------------------------------------
+
+    def _init_state(self):
+        B, S = self.slots, self.max_seq
+        cache = self.model.init_cache(B, max_seq_local=S)
+        z = lambda dt: jnp.zeros((B,), dt)
+        return dict(cache=cache, cur=z(jnp.int32), pos=z(jnp.int32),
+                    plen=z(jnp.int32), gen=z(jnp.int32),
+                    max_new=z(jnp.int32), active=z(bool),
+                    temp=z(jnp.float32),
+                    rng=jnp.zeros((B, 2), jnp.uint32),
+                    prompt=jnp.zeros((B, S), jnp.int32),
+                    out=jnp.zeros((B, S), jnp.int32))
+
+    def _build_admit(self):
+        def admit(st, slot, prompt, plen, max_new, temp, key):
+            st = dict(st)
+            st["prompt"] = st["prompt"].at[slot].set(prompt)
+            st["cur"] = st["cur"].at[slot].set(prompt[0])
+            st["pos"] = st["pos"].at[slot].set(0)
+            st["plen"] = st["plen"].at[slot].set(plen)
+            st["gen"] = st["gen"].at[slot].set(0)
+            st["max_new"] = st["max_new"].at[slot].set(max_new)
+            st["active"] = st["active"].at[slot].set(True)
+            st["temp"] = st["temp"].at[slot].set(temp)
+            st["rng"] = st["rng"].at[slot].set(key)
+            # Per-slot positions already mask attention to the new
+            # occupant's own written prefix, but recurrent state (SSM,
+            # conv tail) accumulates - zero the slot's cache lane.
+            st["cache"] = jax.tree.map(lambda c: c.at[:, slot].set(0),
+                                       st["cache"])
+            return st
+        return admit
+
+    def _build_prefill(self, plen: int):
+        """Admission via one batched prefill over the whole prompt: fills
+        the slot's cache lane and emits the first generated token, so the
+        decode loop starts at the generation boundary (len(prompt) fewer
+        dispatches per request than token injection)."""
+        model, S, eos, ctx = self.model, self.max_seq, self.eos_id, self._ctx
+
+        def prefill(params, st, slot, prompt, max_new, temp, key):
+            batch = {"tokens": prompt[None], "targets": prompt[None],
+                     "mask": jnp.ones((1, plen), jnp.float32)}
+            logits, lane = model.prefill(params, batch, max_seq_local=S,
+                                         ctx=ctx)
+            lg = logits[0, plen - 1].astype(jnp.float32)
+            greedy = jnp.argmax(lg).astype(jnp.int32)
+            k_next, k_draw = jax.random.split(key)
+            sampled = jax.random.categorical(
+                k_draw, lg / jnp.maximum(temp, 1e-6)).astype(jnp.int32)
+            hot = temp > 0.0
+            t0 = jnp.where(hot, sampled, greedy)
+            st = dict(st)
+            st["cache"] = {
+                k: st["cache"][k].at[:, slot].set(
+                    lane[k][:, 0].astype(st["cache"][k].dtype))
+                for k in st["cache"]}
+            st["prompt"] = st["prompt"].at[slot].set(
+                jnp.zeros((S,), jnp.int32).at[:plen].set(prompt))
+            st["cur"] = st["cur"].at[slot].set(t0)
+            st["pos"] = st["pos"].at[slot].set(plen)
+            st["plen"] = st["plen"].at[slot].set(plen)
+            st["gen"] = st["gen"].at[slot].set(1)
+            st["out"] = st["out"].at[slot, 0].set(t0)
+            st["max_new"] = st["max_new"].at[slot].set(max_new)
+            done = max_new <= 1
+            if eos is not None:
+                done |= t0 == jnp.int32(eos)
+            st["active"] = st["active"].at[slot].set(~done)
+            st["temp"] = st["temp"].at[slot].set(temp)
+            st["rng"] = st["rng"].at[slot].set(
+                jnp.where(hot, k_next, key))
+            return st
+        return prefill
+
+    def _can_prefill(self, plen: int) -> bool:
+        if not self._local or plen < 2:
+            return False
+        if self.cfg.arch_type in ("ssm", "hybrid"):
+            # the SSD chunked scan needs the sequence to tile its chunk
+            return plen % self.cfg.ssm.chunk == 0
+        return True
+
+    def _build_step(self, sample: bool):
+        decode, eos, S = self._decode, self.eos_id, self.max_seq
+
+        def step(params, st):
+            B = st["cur"].shape[0]
+            active, pos = st["active"], st["pos"]
+            logits, new_cache = decode(params, {"token": st["cur"][:, None]},
+                                       st["cache"], pos)
+
+            def keep(new, old):  # cache leaves are (layers, B, ...)
+                a = active.reshape((1, B) + (1,) * (new.ndim - 2))
+                return jnp.where(a, new, old)
+
+            cache = jax.tree.map(keep, new_cache, st["cache"])
+
+            # sampling lives INSIDE the compiled step: greedy argmax plus
+            # (when any admitted request is hot) per-slot temperature/
+            # categorical on per-slot PRNG streams
+            logits = logits.astype(jnp.float32)
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if sample:
+                keys = jax.vmap(jax.random.split)(st["rng"])  # (B, 2, 2)
+                hot = st["temp"] > 0.0
+                scaled = logits / jnp.maximum(st["temp"], 1e-6)[:, None]
+                sampled = jax.vmap(jax.random.categorical)(
+                    keys[:, 1], scaled).astype(jnp.int32)
+                tok = jnp.where(hot, sampled, greedy)
+                rng = jnp.where(hot[:, None], keys[:, 0], st["rng"])
+            else:
+                tok, rng = greedy, st["rng"]
+
+            nxt = pos + 1
+            in_prompt = nxt < st["plen"]
+            prompt_next = jnp.take_along_axis(
+                st["prompt"], jnp.clip(nxt, 0, S - 1)[:, None], axis=1)[:, 0]
+            emit = active & ~in_prompt                 # tok was generated
+            rows = jnp.arange(B)
+            gidx = jnp.clip(st["gen"], 0, S - 1)
+            out = st["out"].at[rows, gidx].set(
+                jnp.where(emit, tok, st["out"][rows, gidx]))
+            gen = st["gen"] + emit.astype(jnp.int32)
+            done = emit & (gen >= st["max_new"])
+            if eos is not None:
+                done |= emit & (tok == jnp.int32(eos))
+            done |= active & (nxt >= S)                # cache full
+            alive = active & ~done
+            cur = jnp.where(in_prompt, prompt_next, tok)
+            cur = jnp.where(alive, cur, st["cur"])
+            pos = jnp.where(alive, jnp.minimum(nxt, S - 1), pos)
+            return dict(cache=cache, cur=cur, pos=pos, plen=st["plen"],
+                        gen=gen, max_new=st["max_new"], active=alive,
+                        temp=st["temp"], rng=rng, prompt=st["prompt"],
+                        out=out)
+        return step
+
+    # ------------------------------------------------------------------
+    # scheduler API
+    # ------------------------------------------------------------------
+
+    @property
+    def free_slots(self) -> int:
+        return sum(h is None for h in self._slot_handle)
+
+    @property
+    def inflight(self) -> int:
+        return sum(h is not None for h in self._slot_handle)
+
+    @property
+    def queued(self) -> int:
+        return len(self._pending)
+
+    def submit(self, req: Request) -> int:
+        """Queue a request; returns its handle. Claims a free slot
+        immediately when one is available."""
+        plen = len(req.prompt)
+        if plen < 1:
+            raise ValueError("empty prompt")
+        if plen + req.max_new_tokens - 1 > self.max_seq:
+            raise ValueError(
+                f"prompt_len={plen} + max_new={req.max_new_tokens} - 1 "
+                f"exceeds max_seq={self.max_seq}")
+        h = self._next_handle
+        self._next_handle += 1
+        self._requests[h] = req
+        free = [s for s, owner in enumerate(self._slot_handle)
+                if owner is None]
+        if free:
+            self._admit(free[0], h, req)
+        else:
+            self._pending.append(h)
+        return h
+
+    def _admit(self, slot: int, handle: int, req: Request):
+        plen = len(req.prompt)
+        # fold on the admission ordinal since the last (re)seed, not the
+        # lifetime handle: identical (requests, key) sequences after a
+        # reseed() draw identical sampling streams
+        key = jax.random.fold_in(self._base_key, self._admit_seq)
+        self._admit_seq += 1
+        if self._can_prefill(plen):
+            fn = self._prefill_fns.get(plen)
+            if fn is None:
+                fn = jax.jit(self._build_prefill(plen), donate_argnums=(1,))
+                self._prefill_fns[plen] = fn
+            self._state = fn(
+                self.params, self._state, jnp.int32(slot),
+                jnp.asarray(np.asarray(req.prompt, np.int32)),
+                jnp.int32(req.max_new_tokens),
+                jnp.float32(req.temperature), key)
+            remaining = req.max_new_tokens - 1  # first token emitted here
+        else:
+            prompt = np.zeros((self.max_seq,), np.int32)
+            prompt[:plen] = np.asarray(req.prompt, np.int32)
+            self._state = self._admit_fn(
+                self._state, jnp.int32(slot), jnp.asarray(prompt),
+                jnp.int32(plen), jnp.int32(req.max_new_tokens),
+                jnp.float32(req.temperature), key)
+            remaining = plen + req.max_new_tokens - 1
+        self._slot_handle[slot] = handle
+        self._slot_done_step[slot] = self._steps + remaining
+        if req.temperature > 0:
+            self._hot.add(handle)
+        self.stats["admitted"] += 1
+
+    def step(self):
+        """One decode step for every slot (a single device dispatch). While
+        the pending queue is non-empty, finished slots are harvested as
+        soon as one *can* have finished (plus every ``sync_interval`` steps
+        when an EOS may end a request early), so queued requests claim
+        slots mid-flight without a per-token host sync."""
+        fn = self._step_sample if self._hot else self._step_greedy
+        self._state = fn(self.params, self._state)
+        self.stats["dispatches"] += 1
+        self._steps += 1
+        if self._pending:
+            bound = min((self._slot_done_step[s]
+                         for s, h in enumerate(self._slot_handle)
+                         if h is not None), default=0)
+            if self._steps >= bound or (
+                    self.eos_id is not None
+                    and self._steps % self.sync_interval == 0):
+                self.harvest()
+
+    def _sync(self):
+        self.stats["syncs"] += 1
+        keys = ("active", "gen", "plen", "out")
+        return jax.device_get({k: self._state[k] for k in keys})
+
+    def harvest(self) -> List[int]:
+        """Collect finished slots into results, free them, and admit queued
+        requests. Returns the handles that completed on this call."""
+        snap = self._sync()
+        finished = []
+        for s in range(self.slots):
+            h = self._slot_handle[s]
+            if h is None or snap["active"][s]:
+                continue
+            n = int(snap["gen"][s])
+            req = self._requests.pop(h)   # bounded host state: one entry
+            reason = "length"             # per in-flight request only
+            if n < req.max_new_tokens:
+                reason = ("eos" if self.eos_id is not None
+                          and n > 0 and int(snap["out"][s, n - 1]) == self.eos_id
+                          else "cache_full")
+            self._results[h] = Result(
+                tokens=[int(t) for t in snap["out"][s, :n]],
+                prompt_len=int(snap["plen"][s]), handle=h,
+                finish_reason=reason)
+            self._slot_handle[s] = None
+            self._hot.discard(h)
+            finished.append(h)
+        while self._pending and self.free_slots:
+            h = self._pending.popleft()
+            slot = self._slot_handle.index(None)
+            self._admit(slot, h, self._requests[h])
+        return finished
+
+    def drain(self, max_steps: Optional[int] = None) -> Dict[int, Result]:
+        """Step until every submitted request has finished; returns the
+        results not yet delivered as ``{handle: Result}``. Results are
+        handed out once (here or via ``result()``) - the session holds no
+        per-request state afterwards, so long-running sessions stay
+        bounded."""
+        outstanding = self.inflight + self.queued
+        budget = (max_steps if max_steps is not None
+                  else (outstanding + self.slots) * self.max_seq + self.max_seq)
+        while self.inflight or self._pending:
+            if budget <= 0:
+                raise RuntimeError("drain exceeded its step budget")
+            if self._pending:
+                # step() harvests on its own bound-aware cadence
+                burst = 8
+            elif self.eos_id is not None:
+                burst = self.sync_interval  # poll for early finishes
+            else:
+                # no EOS: slots finish exactly at their known bound - step
+                # straight there and harvest once (O(requests) syncs)
+                nxt = min(self._slot_done_step[s]
+                          for s, h in enumerate(self._slot_handle)
+                          if h is not None)
+                burst = max(1, nxt - self._steps)
+            burst = min(burst, budget)
+            for _ in range(burst):
+                self.step()
+            budget -= burst
+            if not self._pending:
+                self.harvest()
+        out, self._results = self._results, {}
+        return out
+
+    def reseed(self, key: jax.Array):
+        """Set the base sampling key for subsequently admitted requests
+        (restarting the per-admission key sequence, so the same requests
+        under the same key reproduce their draws)."""
+        self._base_key = _raw_key(key)
+        self._admit_seq = 0
+
+    def result(self, handle: int) -> Optional[Result]:
+        """Pop a finished request's result (None while still running)."""
+        return self._results.pop(handle, None)

@@ -84,4 +84,39 @@ for t, (a, b) in enumerate(zip(logits_seq, ref_seq)):
                                err_msg=f"t={t}")
 d = max(np.max(np.abs(a - b)) for a, b in zip(logits_seq, ref_seq))
 print("max logits err:", d)
+
+# ---- ServeSession over the SAME mesh step == batch-synchronous loop ----
+# (single API for local and sharded serving: the session drives the
+# shard_map'd decode with per-slot position vectors; greedy tokens must
+# match a scalar-pos batch-synchronous loop over the identical step)
+if cfg.arch_type != "encdec" and cfg.input_mode == "tokens":
+    from repro.serve import ServeSession, Request
+
+    prompts = [list(map(int, row)) for row in np.asarray(toks)]
+    max_new = 5
+    # reference: feed prompts batch-synchronously through the mesh step
+    ref_cache2 = model.init_cache(B, max_seq_local=S_MAX)
+    cur = toks[:, 0:1]
+    ref_tokens = [[] for _ in range(B)]
+    for t in range(toks.shape[1] + max_new - 1):
+        lg, ref_cache2 = jstep(params, {"token": cur}, ref_cache2,
+                               jnp.int32(t))
+        nxt = np.asarray(jnp.argmax(lg, axis=-1), np.int32)
+        if t + 1 < toks.shape[1]:
+            cur = toks[:, t + 1:t + 2]
+        else:
+            for i in range(B):
+                if len(ref_tokens[i]) < max_new:
+                    ref_tokens[i].append(int(nxt[i]))
+            cur = jnp.asarray(nxt[:, None])
+
+    sess = ServeSession(model, params, slots=B, max_seq=S_MAX,
+                        decode_fn=step)
+    hs = [sess.submit(Request(prompt=p, max_new_tokens=max_new))
+          for p in prompts]
+    res = sess.drain()
+    for i, h in enumerate(hs):
+        assert res[h].tokens == ref_tokens[i], (
+            f"mesh session row {i}: {res[h].tokens} != {ref_tokens[i]}")
+    print("mesh ServeSession greedy == batch-synchronous loop")
 print("OK")

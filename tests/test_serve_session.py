@@ -1,0 +1,235 @@
+"""ServeSession: greedy parity vs the batch-synchronous reference,
+continuous-batching invariance, zero per-token host transfers, and truly
+code-resident quantized weights."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import layers as L
+from repro.models.model import Model
+from repro.serve import (Engine, Request, ServeSession, is_quantized,
+                         params_nbytes, quantize_params)
+from repro.serve.quantized import QuantizedLeaf
+
+
+@pytest.fixture(scope="module")
+def yi():
+    cfg = get_config("yi-6b", smoke=True)
+    model = Model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _reference_greedy(model, params, prompts, max_new, max_seq=48):
+    """The old Engine algorithm: one padded prefill + scalar-pos decode
+    loop with host-side argmax (requires equal-length prompts for the
+    padded cache positions to be valid)."""
+    B = len(prompts)
+    plens = [len(p) for p in prompts]
+    pmax = max(plens)
+    assert min(plens) == pmax, "reference is only correct for equal lengths"
+    toks = np.asarray(prompts, np.int32)
+    batch = {"tokens": jnp.asarray(toks), "targets": jnp.asarray(toks),
+             "mask": jnp.ones((B, pmax), jnp.float32)}
+    prefill = jax.jit(lambda p, b: model.prefill(p, b,
+                                                 max_seq_local=max_seq))
+    logits, cache = prefill(params, batch)
+    cur = jnp.argmax(logits[:, pmax - 1], axis=-1).astype(jnp.int32)
+    outs = [[int(cur[i])] for i in range(B)]
+    dec = jax.jit(lambda p, i, c, pos: model.decode_step(p, i, c, pos))
+    for t in range(max_new - 1):
+        lg, cache = dec(params, {"token": cur[:, None]}, cache,
+                        jnp.int32(pmax + t))
+        cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        for i in range(B):
+            outs[i].append(int(cur[i]))
+    return outs
+
+
+class TestGreedyParity:
+    def test_session_matches_reference(self, yi):
+        cfg, model, params = yi
+        prompts = [[5, 6, 7, 8], [9, 10, 11, 12], [3, 14, 15, 16]]
+        ref = _reference_greedy(model, params, prompts, max_new=6)
+        sess = ServeSession(model, params, slots=3, max_seq=48)
+        hs = [sess.submit(Request(prompt=p, max_new_tokens=6))
+              for p in prompts]
+        res = sess.drain()
+        assert [res[h].tokens for h in hs] == ref
+
+    def test_engine_shim_matches_reference(self, yi):
+        cfg, model, params = yi
+        prompts = [[5, 6, 7, 8], [9, 10, 11, 12]]
+        ref = _reference_greedy(model, params, prompts, max_new=5)
+        out = Engine(model, params, max_seq=48).generate(
+            [Request(prompt=p, max_new_tokens=5) for p in prompts])
+        assert [r.tokens for r in out] == ref
+
+    def test_quantized_high_kx_matches_fp32(self, yi):
+        """High-resolution Q_x (k_x=12, int16 codes) leaves greedy decoding
+        unchanged; k_x=6 (the paper's ~4x) keeps >= first-token agreement."""
+        cfg, model, params = yi
+        req = Request(prompt=[3, 4, 5, 6], max_new_tokens=6)
+
+        def run(p):
+            s = ServeSession(model, p, slots=1, max_seq=32)
+            h = s.submit(req)
+            return s.drain()[h].tokens
+
+        full = run(params)
+        assert run(quantize_params(params, k_x=12, min_numel=256)) == full
+        assert run(quantize_params(params, k_x=6, min_numel=256))[0] \
+            == full[0]
+
+
+class TestContinuousBatching:
+    @pytest.mark.parametrize("arch", ["yi-6b", "mamba2-2.7b", "gemma2-2b"])
+    def test_tokens_independent_of_batch_mates(self, arch):
+        """A request's greedy tokens do not depend on what else shares the
+        batch - including a slot freed by EOS/max-new and re-claimed
+        mid-flight by a queued request (the continuous-batching path)."""
+        cfg = get_config(arch, smoke=True)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        alone = ServeSession(model, params, slots=1, max_seq=48)
+        h = alone.submit(Request(prompt=[5, 6, 7], max_new_tokens=6))
+        want = alone.drain()[h].tokens
+
+        sess = ServeSession(model, params, slots=2, max_seq=48)
+        h1 = sess.submit(Request(prompt=[5, 6, 7], max_new_tokens=6))
+        h2 = sess.submit(Request(prompt=list(range(9, 21)),
+                                 max_new_tokens=12))
+        h3 = sess.submit(Request(prompt=[5, 6, 7], max_new_tokens=6))
+        res = sess.drain()
+        assert res[h1].tokens == want          # longer companion alongside
+        assert res[h3].tokens == want          # admitted into a reused slot
+        assert res[h2].prompt_len == 12
+
+    def test_short_prompt_not_polluted_by_padding(self, yi):
+        """The per-slot position fix: a short prompt decoding next to a
+        long one must match the same prompt decoded alone (the old engine
+        attended over stale padded cache slots between prompt end and
+        generation start)."""
+        cfg, model, params = yi
+        alone = ServeSession(model, params, slots=1, max_seq=48)
+        h = alone.submit(Request(prompt=[7, 8], max_new_tokens=5))
+        want = alone.drain()[h].tokens
+        sess = ServeSession(model, params, slots=2, max_seq=48)
+        h1 = sess.submit(Request(prompt=[7, 8], max_new_tokens=5))
+        sess.submit(Request(prompt=list(range(1, 17)), max_new_tokens=5))
+        assert sess.drain()[h1].tokens == want
+
+    def test_eos_frees_slot_early(self, yi):
+        cfg, model, params = yi
+        probe = ServeSession(model, params, slots=1, max_seq=48)
+        h = probe.submit(Request(prompt=[5, 6, 7, 8], max_new_tokens=6))
+        toks = probe.drain()[h].tokens
+        sess = ServeSession(model, params, slots=1, max_seq=48,
+                            eos_id=toks[2])
+        h = sess.submit(Request(prompt=[5, 6, 7, 8], max_new_tokens=6))
+        r = sess.drain()[h]
+        assert r.tokens == toks[:3] and r.finish_reason == "eos"
+
+
+class TestNoPerTokenHostTransfer:
+    def test_steady_state_decode_never_syncs(self, yi, monkeypatch):
+        """Sampling is jitted: with every slot occupied and nothing queued,
+        N decode steps are N dispatches and ZERO device->host transfers."""
+        cfg, model, params = yi
+        sess = ServeSession(model, params, slots=2, max_seq=64)
+        for p in ([5, 6, 7, 8], [9, 10, 11, 12]):
+            sess.submit(Request(prompt=p, max_new_tokens=30))
+
+        gets = {"n": 0}
+        real_get = jax.device_get
+
+        def counting_get(x):
+            gets["n"] += 1
+            return real_get(x)
+
+        monkeypatch.setattr(jax, "device_get", counting_get)
+        dispatches0 = sess.stats["dispatches"]
+        for _ in range(20):
+            sess.step()
+        assert gets["n"] == 0
+        assert sess.stats["dispatches"] - dispatches0 == 20
+        assert sess.stats["syncs"] == 0
+        monkeypatch.undo()
+        res = sess.drain()
+        assert all(len(r.tokens) == 30 for r in res.values())
+        # host reads scale with requests (harvests), not tokens
+        assert sess.stats["syncs"] <= 4
+
+
+class TestQuantizedResidency:
+    def test_device_bytes_quarter_of_fp32(self, yi):
+        """int8 codes + per-layer scales actually hold ~nbytes/4 - measured
+        from the resident arrays, not a printed theoretical '/4'."""
+        cfg, model, params = yi
+        qp = quantize_params(params, k_x=6, min_numel=256)
+        assert is_quantized(qp)
+        fp32 = params_nbytes(params)
+        quant = params_nbytes(qp)
+        assert quant <= 0.30 * fp32
+        for leaf in jax.tree.leaves(
+                qp, is_leaf=lambda l: isinstance(l, QuantizedLeaf)):
+            if isinstance(leaf, QuantizedLeaf):
+                assert leaf.codes.dtype == jnp.int8
+
+    def test_stacked_leaves_get_per_layer_scales(self, yi):
+        cfg, model, params = yi
+        qp = quantize_params(params, k_x=6, min_numel=256)
+        lq = qp["blocks"]["attn"]["q"]
+        assert isinstance(lq, QuantizedLeaf)
+        assert lq.scale.shape == (cfg.n_layers,)
+        np.testing.assert_allclose(
+            np.asarray(lq.dequantize()),
+            np.asarray(params["blocks"]["attn"]["q"]), atol=0.02)
+
+    def test_pack4_roundtrip(self):
+        """k_x<=2 codes pack two-per-byte through repro.core.packing."""
+        rng = np.random.default_rng(0)
+        x = {"w": jnp.asarray(rng.normal(size=(64, 33)).astype(np.float32))}
+        qp = quantize_params(x, k_x=2, min_numel=1, pack=True)
+        qu = quantize_params(x, k_x=2, min_numel=1, pack=False)
+        assert qp["w"].codes.dtype == jnp.uint8
+        assert qp["w"].nbytes < qu["w"].nbytes
+        np.testing.assert_array_equal(np.asarray(qp["w"].dequantize()),
+                                      np.asarray(qu["w"].dequantize()))
+
+    def test_decode_attention_masks_per_slot(self):
+        """Unit check of the satellite fix: rows at different depths mask
+        exactly their own prefix - garbage beyond a row's length is
+        unreachable."""
+        rng = np.random.default_rng(1)
+        B, S, K, hd = 2, 8, 2, 4
+        q = jnp.asarray(rng.normal(size=(B, 1, 2, hd)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+        pk, pv = k.at[0, 3:].set(1e4), v.at[0, 3:].set(1e4)
+        pos = jnp.asarray([2, 6])
+        out = L.decode_attention(q, pk, pv, total_len=pos + 1, q_pos=pos)
+        clean = L.decode_attention(q, k, v, total_len=pos + 1, q_pos=pos)
+        np.testing.assert_array_equal(np.asarray(out[0]),
+                                      np.asarray(clean[0]))
+
+
+class TestScheduler:
+    def test_submit_validates_capacity(self, yi):
+        cfg, model, params = yi
+        sess = ServeSession(model, params, slots=1, max_seq=16)
+        with pytest.raises(ValueError):
+            sess.submit(Request(prompt=list(range(12)), max_new_tokens=8))
+        with pytest.raises(ValueError):
+            sess.submit(Request(prompt=[], max_new_tokens=4))
+
+    def test_queue_overflow_is_served(self, yi):
+        """More requests than slots: all finish, in bounded steps."""
+        cfg, model, params = yi
+        sess = ServeSession(model, params, slots=2, max_seq=32)
+        hs = [sess.submit(Request(prompt=[i + 1, i + 2], max_new_tokens=4))
+              for i in range(5)]
+        res = sess.drain()
+        assert sorted(res) == sorted(hs)
+        assert all(len(res[h].tokens) == 4 for h in hs)

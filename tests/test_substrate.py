@@ -10,7 +10,7 @@ from repro.configs import get_config
 from repro.models.model import Model
 from repro.data import pipeline as dp
 from repro.checkpoint import store
-from repro.serve.engine import Engine, Request, quantize_resident_weights
+from repro.serve.engine import Engine, Request
 
 
 class TestDataPipeline:
