@@ -157,6 +157,72 @@ def bench_serve(emit, requests=8, slots=4, prompt_len=16, max_new=32):
          f"{params_nbytes(qparams) / params_nbytes(params):.3f}x_fp32_measured")
 
 
+def bench_train(emit, steps=24, chunk=8):
+    """TrainSession steps/s vs the legacy blocking per-step loop (which
+    pulled+converted a batch and forced a `float(loss)` host sync every
+    step), plus the session's measured host-sync count. Smoke-scale on
+    CPU: tracks the hot-loop host overhead the session removes, not TPU
+    step time."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.model import Model
+    from repro.launch.mesh import make_local_mesh
+    from repro.dist.step import make_train_step, TrainConfig
+    from repro.train.session import SessionConfig, TrainSession
+    from repro.data.pipeline import batch_for_model
+
+    cfg = get_config("yi-6b", smoke=True)
+    model = Model(cfg)
+    mesh = make_local_mesh(data=1, model=1)
+    tc = TrainConfig(alpha=3e-3, grad_k=6, weight_k=None, worker_axes=())
+    art = make_train_step(model, mesh, tc)
+
+    def batches():
+        return batch_for_model(cfg, 64, 4, seed=0)
+
+    # legacy loop: per-step dispatch, sync batch conversion, per-step
+    # float() host sync
+    step = jax.jit(art.step_fn, donate_argnums=(0,))
+    state = art.init_state(jax.random.PRNGKey(0))
+    it = batches()
+    state, m = step(state, next(it))   # compile
+    float(m["loss"])
+    t0 = time.perf_counter()
+    syncs = 0
+    for _ in range(steps):
+        state, m = step(state, next(it))
+        _ = float(m["loss"])           # the old loop's per-step sync
+        syncs += 1
+    dt = time.perf_counter() - t0
+    emit("train_loop_blocking", dt / steps * 1e6,
+         f"{steps / dt:.1f}steps_s_{syncs}syncs")
+
+    # session: prefetch thread + device loss ring, per-step dispatch
+    sess = TrainSession.from_artifacts(
+        art, batches(), SessionConfig(log_every=0, prefetch=2),
+        log=lambda *_: None)
+    sess.run(2)                        # compile + prime the prefetcher
+    t0 = time.perf_counter()
+    sess.run(steps)
+    dt = time.perf_counter() - t0
+    emit("train_session_step1", dt / steps * 1e6,
+         f"{steps / dt:.1f}steps_s_{sess.stats['syncs']}syncs")
+    sess.close()
+
+    # session: scan-chunked (K steps per dispatch) on top of prefetch
+    sess = TrainSession.from_artifacts(
+        art, batches(), SessionConfig(log_every=0, prefetch=2,
+                                      scan_chunk=chunk),
+        log=lambda *_: None)
+    sess.run(chunk)                    # compile
+    t0 = time.perf_counter()
+    sess.run(steps)
+    dt = time.perf_counter() - t0
+    emit(f"train_session_scan{chunk}", dt / steps * 1e6,
+         f"{steps / dt:.1f}steps_s_{sess.stats['syncs']}syncs")
+    sess.close()
+
+
 def bench_comm_cost(emit):
     """Wire bytes for ResNet-101-sized (162.9MB fp32) and VGG16-sized
     (512.3MB) models at the paper's quantization levels - reproduces the
@@ -275,6 +341,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "comm_cost": bench_comm_cost,
     "serve": bench_serve,
+    "train": bench_train,
     "table2_cifar100_analogue": bench_table2,
     "table3_cifar10_analogue": bench_table3,
     "fig34_convergence": bench_fig34,
@@ -284,6 +351,7 @@ BENCHES = {
 # named suites: coarse groups for CI jobs / snapshot baselines
 SUITES = {
     "serve": ["serve"],
+    "train": ["train"],
     "kernels": ["kernels", "comm_cost"],
     "paper": ["table2_cifar100_analogue", "table3_cifar10_analogue",
               "fig34_convergence", "comm_cost"],

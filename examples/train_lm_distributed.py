@@ -31,7 +31,8 @@ def main():
     from repro.models.config import ModelConfig
     from repro.models.model import Model
     from repro.dist.step import make_train_step, TrainConfig
-    from repro.train.loop import train, LoopConfig, comm_bytes_per_step
+    from repro.train.loop import comm_bytes_per_step
+    from repro.train.session import SessionConfig, TrainSession
     from repro.data.pipeline import batch_for_model
 
     # ~100M params: 8 layers of d=768 GQA + 32k vocab
@@ -55,12 +56,19 @@ def main():
           f"{comm['shard_params'] * 8 / 1e6:.1f}MB)")
 
     batches = batch_for_model(cfg, args.seq, args.global_batch, seed=0)
-    lc = LoopConfig(steps=args.steps, log_every=10)
-    state, history = train(art, tc, batches, lc)
+    # TrainSession: batches prefetched + staged to device on a background
+    # thread, losses device-resident between log boundaries (the stats
+    # line shows dispatches vs host syncs)
+    with TrainSession.from_artifacts(
+            art, batches, SessionConfig(log_every=10)) as sess:
+        history = sess.run(args.steps)
+        stats = dict(sess.stats)
+    print(f"session stats: {stats}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(history, f)
-    first, last = history[0]["loss"], history[-1]["loss"]
+    losses = [h for h in history if "loss" in h]
+    first, last = losses[0]["loss"], losses[-1]["loss"]
     print(f"loss {first:.3f} -> {last:.3f}")
     assert last < first, "training must make progress"
 

@@ -3,16 +3,28 @@
 No orbax offline; this stores any pytree of arrays (train state, serve
 params) with dtype/shape manifest and restores onto a mesh by device_put
 with the original NamedShardings (or host arrays when mesh is None).
+
+Layout: each ``save(path, tree, step=N)`` writes a *step-versioned*
+subdirectory ``path/step_00000N/`` via a temp dir + atomic ``os.replace``
+- a crash mid-save leaves at most a stale ``.tmp-*`` dir and never
+corrupts an existing checkpoint. ``keep`` prunes to the last N steps.
+``latest_step``/``restore`` scan the subdirs (and still understand the
+pre-PR4 flat single-manifest layout). ``extra`` rides in the manifest for
+host-side resume metadata (step counters, data-stream position).
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Optional
+import shutil
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_STEP_PREFIX = "step_"
+_TMP_PREFIX = ".tmp-"
 
 
 def _flatten(tree):
@@ -23,11 +35,48 @@ def _flatten(tree):
     return keys, vals, treedef
 
 
-def save(path: str, tree: Any, step: Optional[int] = None) -> None:
-    os.makedirs(path, exist_ok=True)
+def _step_dirname(step: int) -> str:
+    return f"{_STEP_PREFIX}{step:08d}"
+
+
+def _list_steps(path: str) -> List[int]:
+    """Step numbers of the complete (manifest-bearing) versioned subdirs."""
+    try:
+        names = os.listdir(path)
+    except FileNotFoundError:
+        return []
+    steps = []
+    for n in names:
+        if not n.startswith(_STEP_PREFIX):
+            continue
+        if not os.path.exists(os.path.join(path, n, "manifest.json")):
+            continue  # partial dir (crash before the atomic rename)
+        try:
+            steps.append(int(n[len(_STEP_PREFIX):]))
+        except ValueError:
+            continue
+    return sorted(steps)
+
+
+def _resolve_dir(path: str, step: Optional[int] = None) -> str:
+    """Directory holding the requested (default: latest) checkpoint.
+    Falls back to ``path`` itself for the legacy flat layout."""
+    if step is not None:
+        return os.path.join(path, _step_dirname(step))
+    steps = _list_steps(path)
+    if steps:
+        return os.path.join(path, _step_dirname(steps[-1]))
+    return path
+
+
+def _write_payload(d: str, tree: Any, step: Optional[int],
+                   extra: Optional[Dict]) -> None:
+    os.makedirs(d, exist_ok=True)
     keys, vals, _ = _flatten(tree)
     arrays = {}
     manifest = {"step": step, "leaves": []}
+    if extra:
+        manifest["extra"] = extra
     for i, (k, v) in enumerate(zip(keys, vals)):
         arr = np.asarray(jax.device_get(v))
         shape = list(arr.shape)  # before ascontiguousarray 0d->1d promotion
@@ -38,17 +87,51 @@ def save(path: str, tree: Any, step: Optional[int] = None) -> None:
         manifest["leaves"].append(
             {"key": k, "name": name, "dtype": str(arr.dtype),
              "shape": shape})
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+    np.savez(os.path.join(d, "arrays.npz"), **arrays)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
 
 
-def restore(path: str, like: Any, shardings: Any = None) -> Any:
+def save(path: str, tree: Any, step: Optional[int] = None,
+         keep: Optional[int] = None, extra: Optional[Dict] = None) -> str:
+    """Write one checkpoint; returns the directory written.
+
+    With ``step``, writes ``path/step_XXXXXXXX/`` atomically (temp dir +
+    ``os.replace``) and, with ``keep``, prunes to the newest ``keep``
+    versioned checkpoints. Without ``step``, writes the flat legacy
+    layout directly into ``path`` (serve params snapshots).
+    """
+    if step is None:
+        _write_payload(path, tree, None, extra)
+        return path
+    os.makedirs(path, exist_ok=True)
+    final = os.path.join(path, _step_dirname(step))
+    tmp = os.path.join(path, f"{_TMP_PREFIX}{_step_dirname(step)}.{os.getpid()}")
+    shutil.rmtree(tmp, ignore_errors=True)
+    try:
+        _write_payload(tmp, tree, step, extra)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    if keep is not None and keep > 0:
+        for s in _list_steps(path)[:-keep]:
+            shutil.rmtree(os.path.join(path, _step_dirname(s)),
+                          ignore_errors=True)
+    return final
+
+
+def restore(path: str, like: Any, shardings: Any = None,
+            step: Optional[int] = None) -> Any:
     """`like`: pytree with the target structure. `shardings`: optional
-    matching pytree of jax.sharding.Sharding to place leaves."""
-    with open(os.path.join(path, "manifest.json")) as f:
+    matching pytree of jax.sharding.Sharding to place leaves. `step`:
+    which versioned checkpoint to read (default: the latest; legacy flat
+    layouts restore transparently)."""
+    d = _resolve_dir(path, step)
+    with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    data = np.load(os.path.join(d, "arrays.npz"))
     keys, vals, treedef = _flatten(like)
     by_key = {l["key"]: l for l in manifest["leaves"]}
     out = []
@@ -67,8 +150,21 @@ def restore(path: str, like: Any, shardings: Any = None) -> Any:
 
 
 def latest_step(path: str) -> Optional[int]:
-    try:
+    steps = _list_steps(path)
+    if steps:
+        return steps[-1]
+    try:  # legacy flat layout
         with open(os.path.join(path, "manifest.json")) as f:
             return json.load(f).get("step")
     except FileNotFoundError:
         return None
+
+
+def read_extra(path: str, step: Optional[int] = None) -> Dict:
+    """Host-side resume metadata stored alongside a checkpoint."""
+    d = _resolve_dir(path, step)
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f).get("extra") or {}
+    except FileNotFoundError:
+        return {}

@@ -12,10 +12,16 @@ data with a fixed PRNG stream, sharding-aware and reproducible:
 
 Every batch also carries `targets` (next token) and `mask`, pre-shifted so
 sequence sharding never needs cross-shard target access.
+
+The token/embedding generators yield **host numpy** batches: device
+placement does not belong on the generator's critical path. The
+``TrainSession`` prefetcher stages them to device (sharded ``device_put``)
+on a background thread; jitted consumers also accept numpy directly.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Iterator, Optional
 
 import jax
@@ -41,7 +47,7 @@ def _zipf_probs(vocab: int, a: float) -> np.ndarray:
     return (p / p.sum()).astype(np.float64)
 
 
-def lm_batches(cfg: LMDataConfig) -> Iterator[Dict[str, jnp.ndarray]]:
+def lm_batches(cfg: LMDataConfig) -> Iterator[Dict[str, np.ndarray]]:
     rng = np.random.default_rng(cfg.seed)
     probs = _zipf_probs(cfg.vocab_size, cfg.zipf_a)
     B, S, P = cfg.global_batch, cfg.seq_len, cfg.copy_period
@@ -53,14 +59,14 @@ def lm_batches(cfg: LMDataConfig) -> Iterator[Dict[str, jnp.ndarray]]:
             toks[:, start + half:start + P] = toks[:, start:start + half]
         toks = toks.astype(np.int32)
         yield {
-            "tokens": jnp.asarray(toks[:, :-1]),
-            "targets": jnp.asarray(toks[:, 1:]),
-            "mask": jnp.ones((B, S), jnp.float32),
+            "tokens": np.ascontiguousarray(toks[:, :-1]),
+            "targets": np.ascontiguousarray(toks[:, 1:]),
+            "mask": np.ones((B, S), np.float32),
         }
 
 
 def batch_for_model(mcfg: ModelConfig, seq_len: int, global_batch: int,
-                    seed: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+                    seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
     """Model-aware synthetic batches (handles the stubbed frontends)."""
     base = lm_batches(LMDataConfig(vocab_size=mcfg.vocab_size,
                                    seq_len=seq_len,
@@ -70,14 +76,14 @@ def batch_for_model(mcfg: ModelConfig, seq_len: int, global_batch: int,
         if mcfg.input_mode == "embeddings":
             b = dict(b)
             b.pop("tokens")
-            b["embeds"] = jnp.asarray(rng.normal(
+            b["embeds"] = rng.normal(
                 size=(global_batch, seq_len, mcfg.d_model),
-                scale=0.7).astype(np.float32))
+                scale=0.7).astype(np.float32)
         elif mcfg.input_mode == "audio+tokens":
             b = dict(b)
-            b["audio"] = jnp.asarray(rng.normal(
+            b["audio"] = rng.normal(
                 size=(global_batch, mcfg.encoder_seq, mcfg.d_model),
-                scale=0.7).astype(np.float32))
+                scale=0.7).astype(np.float32)
         yield b
 
 
@@ -115,7 +121,12 @@ def classification_dataset(cfg: ClsDataConfig):
 
 def classification_batches(x, y, batch: int, seed: int = 0):
     rng = np.random.default_rng(seed)
-    n = x.shape[0]
+    n = int(x.shape[0])
+    replace = batch > n
+    if replace:
+        warnings.warn(
+            f"classification_batches: batch={batch} exceeds dataset size "
+            f"n={n}; sampling with replacement", stacklevel=2)
     while True:
-        idx = rng.choice(n, size=batch, replace=False)
+        idx = rng.choice(n, size=batch, replace=replace)
         yield x[idx], y[idx]

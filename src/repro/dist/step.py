@@ -70,6 +70,12 @@ class TrainConfig:
     weight_q_min_numel: int = 2 ** 14   # small leaves skip Q_x (biases/norms)
     error_feedback: bool = True
     mode: str = "qadam"                 # any repro.dist.modes name
+    # update-exchange bucketing: leaves are fenced (optimization_barrier)
+    # and dispatched to the wire in buckets of about this many payload
+    # bytes instead of behind one whole-tree end-of-step barrier, so XLA
+    # may overlap an early bucket's quantized exchange with the rest of
+    # the backward. <= 0 restores the single whole-tree fence.
+    exchange_bucket_bytes: int = 4 << 20
     worker_axes: Tuple[str, ...] = ("pod", "data")
     batch_dim_shardable: bool = True
     model_gather_quant: Optional[int] = None  # int8 FSDP gather bits
@@ -126,6 +132,43 @@ class StepArtifacts(NamedTuple):
     worker_axes: Tuple[str, ...]
     mesh: Any
     config: Any
+
+
+def _exchange_buckets(metas_flat, mode, tc, n_workers):
+    """Group consecutive leaves into wire buckets of about
+    ``tc.exchange_bucket_bytes`` payload each. Each bucket gets its own
+    gradient fence, so the first bucket's quantized exchange can be
+    scheduled while the backward of later leaves is still running;
+    ``<= 0`` collapses to one whole-tree bucket (the pre-bucketing
+    end-of-step barrier)."""
+    if tc.exchange_bucket_bytes <= 0 or len(metas_flat) <= 1:
+        return [list(range(len(metas_flat)))]
+    buckets, cur, cur_bytes = [], [], 0
+    for i, meta in enumerate(metas_flat):
+        cur.append(i)
+        cur_bytes += mode.wire_nbytes(meta.c, n_workers, tc.grad_k)
+        if cur_bytes >= tc.exchange_bucket_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def batch_shardings(art: StepArtifacts, batch, stacked: bool = False):
+    """NamedShardings the train step expects for a (host numpy) batch -
+    lets a prefetcher stage batches onto the mesh ahead of dispatch so
+    the step consumes pre-placed buffers. ``stacked``: the batch carries
+    a leading scan-chunk axis (replicated)."""
+    ex = jax.tree.map(lambda x: x[0], batch) if stacked else batch
+    ms = dict(zip(art.mesh.axis_names, art.mesh.devices.shape))
+    Nm = int(ms.get(MODEL_AXIS, 1))
+    Wb, cp = _batch_geometry(ex, Nm, art.worker_axes, art.n_workers,
+                             art.config.batch_dim_shardable)
+    specs = _batch_specs(ex, Wb, cp)
+    if stacked:
+        specs = {k: P(None, *s) for k, s in specs.items()}
+    return {k: NamedSharding(art.mesh, s) for k, s in specs.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -244,6 +287,7 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
 
     treedef = jax.tree_util.tree_structure(layout._leaves)
     metas_flat = treedef.flatten_up_to(metas)
+    buckets = _exchange_buckets(metas_flat, mode, tc, n_workers)
     chunk_sharded = mode.chunk_sharded_moments  # moments chunked vs full-shard
     state_spec = P(*worker_axes, MODEL_AXIS, None) if model_in_mesh \
         else P(*worker_axes, None, None)
@@ -345,7 +389,6 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
             return sw / nw_ / (Nm if maxes else 1), (s, nt)
 
         grads, (s_loc, n_loc) = jax.grad(lfn, has_aux=True)(x_tree)
-        grads = jax.lax.optimization_barrier(grads)
         loss = (jax.lax.psum(s_loc, all_axes) /
                 jax.lax.psum(n_loc, all_axes)) if all_axes \
             else s_loc / n_loc
@@ -358,6 +401,18 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
                 # the gather-transpose psum over the model axis
                 g = jax.lax.psum(g, MODEL_AXIS)
             gs.append(g)
+
+        # fence the forward/backward off from the channel/update code so
+        # XLA compiles it like a standalone value_and_grad (float
+        # rounding then matches the single-machine reference path) - but
+        # per BUCKET rather than one whole-tree end-of-step barrier: a
+        # bucket's quantized exchange only waits on its own gradients,
+        # so the wire of early buckets can overlap the remaining
+        # backward.
+        for bucket in buckets:
+            fenced = jax.lax.optimization_barrier([gs[i] for i in bucket])
+            for i, g in zip(bucket, fenced):
+                gs[i] = g
 
         # 3+4. per-worker engine update + per-mode quantized exchange
         base = jax.random.fold_in(jax.random.PRNGKey(tc.seed), t)

@@ -4,9 +4,17 @@
       --steps 50 --data 2 --model 2 --grad-bits 4 --weight-bits 7
 
 Runs QAdam-EF distributed training (Algorithms 2+3) on a local mesh (or
-the production mesh under a real TPU runtime). `--mode dp_adam` gives the
-conventional data-parallel Adam baseline; `--no-ef` ablates error feedback;
+the production mesh under a real TPU runtime) through ``TrainSession``:
+batches are prefetched and staged to device on a background thread,
+losses stay device-resident between log boundaries, and checkpoints are
+written asynchronously. `--mode dp_adam` gives the conventional
+data-parallel Adam baseline; `--no-ef` ablates error feedback;
 `--grad-bits/--weight-bits 0` turn each quantized channel off.
+
+`--steps` is the TOTAL step budget: with `--resume`, the session restores
+the newest checkpoint under `--ckpt-dir` (step counter, optimizer/PRNG
+state, and data-stream position - bit-identical to never stopping) and
+runs only the remaining steps.
 """
 from __future__ import annotations
 
@@ -20,7 +28,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--steps", type=int, default=100,
+                    help="total step budget (resume counts toward it)")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--data", type=int, default=1, help="data axis size")
@@ -43,19 +52,28 @@ def main():
                     choices=["qadam", "dp_adam", "terngrad", "ef_sgd"])
     ap.add_argument("--scan-chunk", type=int, default=1,
                     help=">1: lax.scan this many steps per compiled call")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="batches staged to device ahead (0 = sync pulls)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="versioned checkpoints kept (keep-last-N)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest checkpoint under --ckpt-dir")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--history-out", default=None)
     args = ap.parse_args()
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume requires --ckpt-dir")
 
     import jax
     from repro.configs import get_config
     from repro.models.model import Model
     from repro.launch.mesh import make_local_mesh
     from repro.dist.step import make_train_step, TrainConfig
-    from repro.train.loop import train, LoopConfig, comm_bytes_per_step
+    from repro.train.loop import comm_bytes_per_step
+    from repro.train.session import SessionConfig, TrainSession
     from repro.data.pipeline import batch_for_model
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -79,16 +97,35 @@ def main():
 
     batches = batch_for_model(cfg, args.seq, args.global_batch,
                               seed=args.seed)
-    lc = LoopConfig(steps=args.steps, log_every=args.log_every,
-                    ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
-                    scan_chunk=args.scan_chunk)
-    state, history = train(art, tc, batches, lc,
-                           key=jax.random.PRNGKey(args.seed))
+    sc = SessionConfig(log_every=args.log_every, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir, ckpt_keep=args.ckpt_keep,
+                       scan_chunk=args.scan_chunk, prefetch=args.prefetch)
+    sess = TrainSession.from_artifacts(art, batches, sc,
+                                       key=jax.random.PRNGKey(args.seed))
+    try:
+        start = sess.resume(args.ckpt_dir) if args.resume else 0
+        if start:
+            print(f"resumed from step {start} ({args.ckpt_dir})")
+        remaining = args.steps - start
+        if remaining <= 0:
+            print(f"nothing to do: checkpoint at step {start} >= "
+                  f"--steps {args.steps}")
+            return
+        sess.run(remaining)
+        losses = [h for h in sess.history if "loss" in h]
+        if not losses:   # --log-every 0: nothing harvested during run
+            losses = [{"step": s, "loss": v}
+                      for s, v in sess.harvest_losses()]
+    finally:
+        sess.close()
+    history = sess.history
+    print(f"session stats: {sess.stats}")
     if args.history_out:
         with open(args.history_out, "w") as f:
             json.dump({"arch": args.arch, "history": history,
-                       "comm": comm}, f, indent=1)
-    print("final loss:", history[-1]["loss"])
+                       "comm": comm, "stats": sess.stats}, f, indent=1)
+    if losses:
+        print("final loss:", losses[-1]["loss"])
 
 
 if __name__ == "__main__":

@@ -4,8 +4,9 @@
               log / uniform / ternary / blockwise quantizer grids
   engine    - backend dispatch ("jnp" | "pallas" | None=auto) around the
               grids; consumed by repro.core.qadam and repro.dist.modes
-  multistep - lax.scan-chunked, buffer-donating training drivers that
-              amortize per-step Python dispatch
+  multistep - compat re-export of the lax.scan-chunked, buffer-donating
+              step builders (canonical home: repro.train.session, whose
+              TrainSession owns the full training loop)
 """
 from repro.opt import grids, engine  # noqa: F401
 from repro.opt.engine import resolve_backend  # noqa: F401

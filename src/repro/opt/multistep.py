@@ -1,61 +1,21 @@
-"""lax.scan-chunked training drivers for the single-machine optimizer.
-
-The classic loop pays one Python dispatch + jit-cache lookup + host sync
-per step; for small models that overhead rivals the update math itself.
-These helpers compile K optimizer steps into ONE program (`lax.scan` over
-a stacked leading axis) with the parameter/state buffers donated, so the
-hot loop runs K steps per Python round-trip and updates in place.
+"""Compat shim: the lax.scan-chunked single-machine step builders moved
+into ``repro.train.session`` (the ``TrainSession`` substrate owns ALL
+training drivers now - it wraps these same builders behind its
+prefetching, ring-buffered, resumable loop).
 
     opt = qadam(QAdamConfig(...))
     chunk = make_chunked_train_step(opt, loss_fn)
     params, state, losses = chunk(params, state, stacked_batches)
 
-``benchmarks/run.py --only kernels`` measures the per-step win vs the
-per-step ``jax.jit`` loop.
+remains supported for direct use; prefer
+``TrainSession.from_optimizer(opt, loss_fn, params, batches)`` for a
+full loop. ``benchmarks/run.py --only kernels`` measures the per-step
+win vs the per-step ``jax.jit`` loop.
 """
 from __future__ import annotations
 
-from typing import Callable
+from repro.train.session import (make_chunked_train_step,  # noqa: F401
+                                 make_chunked_update, stack_batches)
 
-import jax
-
-from repro.core.qadam import Optimizer, apply_updates
-
-
-def stack_batches(batch_list):
-    """Stack a list of same-shape batch pytrees along a new leading axis
-    (the scan axis)."""
-    import jax.numpy as jnp
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *batch_list)
-
-
-def make_chunked_update(opt: Optimizer, donate: bool = True) -> Callable:
-    """K pure optimizer updates per call: ``fn(params, state, gstack)``
-    with ``gstack`` a gradient pytree stacked over a leading step axis.
-    Returns (params, state)."""
-    def chunk(params, state, gstack):
-        def body(carry, g):
-            p, s = carry
-            upd, s2 = opt.update(g, s, p)
-            return (apply_updates(p, upd), s2), None
-        (p2, s2), _ = jax.lax.scan(body, (params, state), gstack)
-        return p2, s2
-    return jax.jit(chunk, donate_argnums=(0, 1) if donate else ())
-
-
-def make_chunked_train_step(opt: Optimizer, loss_fn: Callable,
-                            donate: bool = True) -> Callable:
-    """K full steps (Q_x forward params -> grad -> engine update -> apply)
-    per call: ``fn(params, state, batches)`` with ``batches`` a batch
-    pytree stacked over a leading step axis. Returns
-    (params, state, per-step losses)."""
-    def chunk(params, state, batches):
-        def body(carry, batch):
-            p, s = carry
-            fp = opt.forward_params(p, s)
-            loss, g = jax.value_and_grad(loss_fn)(fp, batch)
-            upd, s2 = opt.update(g, s, p)
-            return (apply_updates(p, upd), s2), loss
-        (p2, s2), losses = jax.lax.scan(body, (params, state), batches)
-        return p2, s2, losses
-    return jax.jit(chunk, donate_argnums=(0, 1) if donate else ())
+__all__ = ["make_chunked_update", "make_chunked_train_step",
+           "stack_batches"]

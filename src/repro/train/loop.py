@@ -1,20 +1,25 @@
-"""Training loop: wires data pipeline, distributed step, metrics,
-checkpointing, and communication accounting together."""
+"""Training-loop compat surface + communication accounting.
+
+The loop itself lives in ``repro.train.session.TrainSession`` (async
+prefetch, device-resident metrics, async checkpoints, resume);
+``train()`` here is a thin shim kept for existing callers. New code
+should construct a ``TrainSession`` directly.
+
+``comm_bytes_per_step`` (the paper's 'Comm' column) stays here - it is
+loop-independent accounting over ``StepArtifacts``.
+"""
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
 from typing import Callable, Dict, Iterator, Optional
 
 import jax
 import numpy as np
 
-from repro.checkpoint import store
 from repro.dist import collectives as C
 from repro.dist.modes import get_mode
 from repro.dist.step import StepArtifacts, TrainConfig, _leaf_meta
-from repro.models.config import ModelConfig
+from repro.train.session import SessionConfig, TrainSession
 
 
 @dataclasses.dataclass
@@ -29,6 +34,7 @@ class LoopConfig:
     # per chunk, state buffers donated). ckpt/eval/log cadences must be
     # multiples of the chunk.
     scan_chunk: int = 1
+    prefetch: int = 2              # staged batches; 0 = synchronous pulls
 
 
 def comm_bytes_per_step(art: StepArtifacts, tc: TrainConfig) -> Dict[str, float]:
@@ -54,52 +60,19 @@ def comm_bytes_per_step(art: StepArtifacts, tc: TrainConfig) -> Dict[str, float]
             "total_bytes": a2a + bcast, "shard_params": shard_numel}
 
 
-def _make_chunk_step(step_fn):
-    """One compiled program scanning the stacked batch pytree's leading
-    axis, donating the state buffers (in-place double-buffer-free update
-    on device)."""
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def chunk_step(state, batches):
-        def body(s, b):
-            s2, metrics = step_fn(s, b)
-            return s2, metrics["loss"]
-        return jax.lax.scan(body, state, batches)
-    return chunk_step
-
-
 def train(art: StepArtifacts, tc: TrainConfig, batches: Iterator,
           lc: LoopConfig, key=None, state=None, log=print):
-    key = key if key is not None else jax.random.PRNGKey(0)
-    if state is None:
-        state = art.init_state(key)
-    from repro.opt.multistep import stack_batches
-    chunk = max(1, lc.scan_chunk)
-    if chunk > 1:
-        step = _make_chunk_step(art.step_fn)
-    else:
-        step = jax.jit(art.step_fn, donate_argnums=(0,))
-    history = []
-    t0 = time.time()
-    for i0 in range(0, lc.steps, chunk):
-        k = min(chunk, lc.steps - i0)  # tail chunk stays within budget
-        if chunk > 1:
-            stacked = stack_batches([next(batches) for _ in range(k)])
-            state, losses = step(state, stacked)
-            i, loss_now = i0 + k - 1, float(losses[-1])
-        else:
-            state, metrics = step(state, next(batches))
-            i, loss_now = i0, float(metrics["loss"])
-        if (i + 1) % lc.log_every < k or i0 == 0:
-            dt = time.time() - t0
-            log(f"step {i + 1:5d}  loss {loss_now:.4f}  "
-                f"({dt / (i + 1):.2f}s/step)")
-            history.append({"step": i + 1, "loss": loss_now})
-            if not np.isfinite(loss_now):
-                raise FloatingPointError(f"loss diverged at step {i + 1}")
-        if lc.ckpt_every and (i + 1) % lc.ckpt_every == 0 and lc.ckpt_dir:
-            store.save(lc.ckpt_dir, state, step=i + 1)
-        if lc.eval_every and (i + 1) % lc.eval_every == 0 and lc.eval_fn:
-            ev = lc.eval_fn(state)
-            log(f"  eval @{i + 1}: {ev}")
-            history[-1]["eval"] = ev
-    return state, history
+    """Compat shim: one-shot ``TrainSession`` run. Returns
+    ``(state, history)`` like the old blocking loop; evals now get their
+    own history entries (``{"step", "eval"}``) pinned to the eval step."""
+    cfg = SessionConfig(log_every=lc.log_every, ckpt_every=lc.ckpt_every,
+                        ckpt_dir=lc.ckpt_dir, eval_every=lc.eval_every,
+                        eval_fn=lc.eval_fn, scan_chunk=lc.scan_chunk,
+                        prefetch=lc.prefetch)
+    sess = TrainSession.from_artifacts(art, batches, cfg, key=key,
+                                       state=state, log=log)
+    try:
+        sess.run(lc.steps)
+    finally:
+        sess.close()
+    return sess.state, sess.history
