@@ -49,10 +49,18 @@ def accuracy(p, x, y):
     return float(jnp.mean(jnp.argmax(mlp_apply(p, x), -1) == y))
 
 
-def run(opt, steps, data, key, batch=128, seed=0, n_workers=8):
+def run(opt, steps, data, key, batch=128, seed=0, n_workers=8,
+        server_q=None, server_ef=True):
     """Multi-worker protocol: each worker gets its own minibatch; updates
     are the mean of the workers' (quantized) deltas - Algorithm 2.
-    Workers are vmapped; one jitted step."""
+    Workers are vmapped; one jitted step.
+
+    ``server_q`` (a ``repro.comm`` codec spec, e.g. "log:2") turns on
+    two-way compression: the server also quantizes the averaged update
+    it broadcasts back, with its own error feedback when ``server_ef``
+    (the ``efadam`` protocol, Chen et al. '22)."""
+    from repro import comm
+
     xtr, ytr, xte, yte = data
     params = mlp_init(key, xtr.shape[1], 256, int(ytr.max()) + 1)
     state0 = opt.init(params)
@@ -60,9 +68,12 @@ def run(opt, steps, data, key, batch=128, seed=0, n_workers=8):
     wkeys = jax.vmap(lambda i: jax.random.fold_in(state0.key, i))(
         jnp.arange(n_workers))
     sstack = jax.vmap(lambda k: state0._replace(key=k))(wkeys)
+    codec = comm.get_codec(server_q) if server_q else None
+    es = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                      params)
 
     @jax.jit
-    def step(params, sstack, xs, ys):
+    def step(params, sstack, es, xs, ys):
         def worker(st, x, y):
             fp = opt.forward_params(params, st)
             g = jax.grad(loss_fn)(fp, x, y)
@@ -71,7 +82,17 @@ def run(opt, steps, data, key, batch=128, seed=0, n_workers=8):
 
         upds, sstack2 = jax.vmap(worker)(sstack, xs, ys)
         mean_upd = jax.tree.map(lambda u: jnp.mean(u, axis=0), upds)
-        return apply_updates(params, mean_upd), sstack2
+        if codec is not None:
+            def srv(u, e):
+                send = u + e
+                scale = codec.compute_scale(send)
+                q = codec.dequantize(codec.quantize(send, scale), scale)
+                return q, (send - q if server_ef else jnp.zeros_like(e))
+            out = jax.tree.map(srv, mean_upd, es)
+            is_pair = lambda o: isinstance(o, tuple)
+            mean_upd = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+            es = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+        return apply_updates(params, mean_upd), sstack2, es
 
     its = [classification_batches(xtr, ytr, batch, seed=seed + w)
            for w in range(n_workers)]
@@ -79,7 +100,7 @@ def run(opt, steps, data, key, batch=128, seed=0, n_workers=8):
         pairs = [next(it) for it in its]
         xs = jnp.stack([p[0] for p in pairs])
         ys = jnp.stack([p[1] for p in pairs])
-        params, sstack = step(params, sstack, xs, ys)
+        params, sstack, es = step(params, sstack, es, xs, ys)
     return params
 
 
@@ -93,11 +114,48 @@ def main():
     ap.add_argument("--steps", type=int, default=400)
     ap.add_argument("--seeds", type=int, default=3)
     ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--mode", default="qadam", choices=["qadam", "efadam"],
+                    help="efadam: two-way compression - the server also "
+                         "quantizes the broadcast update, with its own EF")
+    ap.add_argument("--server-q", default="log:2",
+                    help="efadam server->worker codec spec")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     data = classification_dataset(ClsDataConfig(seed=1))
     xte, yte = data[2], data[3]
+
+    if args.mode == "efadam":
+        sq = args.server_q
+        methods = {
+            # one-way (worker channel only) vs two-way, matched bits
+            "QADAM log-3bit 1way": (lambda: qadam(QAdamConfig(
+                alpha=2e-3, grad_q="log:2")), None, None, True),
+            f"EFADAM 2way {sq}": (lambda: qadam(QAdamConfig(
+                alpha=2e-3, grad_q="log:2")), None, sq, True),
+            f"EFADAM 2way {sq} no-srv-EF": (lambda: qadam(QAdamConfig(
+                alpha=2e-3, grad_q="log:2")), None, sq, False),
+            "EFADAM fp32 workers 2way": (lambda: qadam(QAdamConfig(
+                alpha=2e-3, grad_q=None)), None, sq, True),
+        }
+        rows = []
+        for name, (builder, wq_after, srv_q, srv_ef) in methods.items():
+            accs = []
+            for s in range(args.seeds):
+                p = run(builder(), args.steps, data, jax.random.PRNGKey(s),
+                        seed=s * 100, n_workers=args.workers,
+                        server_q=srv_q, server_ef=srv_ef)
+                if wq_after is not None:
+                    p = wquan(p, k_x=wq_after, absolute=False)
+                accs.append(accuracy(p, xte, yte))
+            rows.append((name, float(np.mean(accs)), float(np.std(accs))))
+            print(f"{name:28s} acc {np.mean(accs) * 100:.2f} "
+                  f"+/- {np.std(accs) * 100:.2f}%")
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump([{"method": n, "acc": a, "std": s}
+                           for n, a, s in rows], f, indent=1)
+        return
 
     methods = {
         # name: (optimizer builder, weight quant after?)

@@ -1,0 +1,39 @@
+"""repro.comm - the single compression subsystem.
+
+Everything that quantizes, packs, or accounts for bytes goes through
+here: the dist wire channels, serve residency, checkpoint compression,
+and the ``repro.core.quantizers`` / ``repro.kernels`` compat shims.
+
+  * :mod:`repro.comm.bits`    - lane packing math (2/3/4/6/8/16-bit)
+  * :mod:`repro.comm.kernels` - fused single-launch Pallas kernels
+  * :mod:`repro.comm.codec`   - the Codec registry + WireBuffer
+"""
+from repro.comm.bits import (  # noqa: F401
+    SUPPORTED_BITS,
+    pack_flat,
+    pack_lanes,
+    pack_rows,
+    packed_nbytes,
+    pad_rows,
+    payload_nbytes,
+    unpack_flat,
+    unpack_lanes,
+    unpack_rows,
+)
+from repro.comm.codec import (  # noqa: F401
+    BACKENDS,
+    BlockwiseCodec,
+    Codec,
+    CODEC_NAMES,
+    IdentityCodec,
+    LogCodec,
+    TernaryCodec,
+    UniformCodec,
+    WireBuffer,
+    uniform_wire_codec,
+    decode_rows,
+    encode_rows,
+    encode_rows_ef,
+    get_codec,
+    resolve_backend,
+)

@@ -1,0 +1,162 @@
+"""Bit-lane packing: the byte layout every wire, residency, and checkpoint
+payload in the repo ships.
+
+Supported lane widths are ``SUPPORTED_BITS`` = (2, 3, 4, 6, 8, 16). The
+odd widths pack across byte boundaries in *groups*: ``lcm(bits, 8)`` bits
+of codes become whole bytes, so a group of ``group_codes(bits)`` codes
+maps to ``group_nbytes(bits)`` bytes (3-bit: 8 codes -> 3 bytes; 6-bit:
+4 codes -> 3 bytes). For the widths that divide 8 this degenerates to the
+historical ``repro.core.packing`` layout byte-for-byte (little-endian
+shifts within the byte, signed codes biased by ``2^(bits-1)``); 8-bit
+lanes are the two's-complement int8 view, 16-bit lanes the little-endian
+int16 view.
+
+Everything here is pure jnp arithmetic (no dtype views), so the *same*
+functions run inside the fused Pallas kernel bodies
+(``repro.comm.kernels``) and in the jnp reference backend - the two
+backends cannot drift.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+SUPPORTED_BITS = (2, 3, 4, 6, 8, 16)
+
+
+def group_codes(bits: int) -> int:
+    """Codes per whole-byte packing group: lcm(bits, 8) / bits."""
+    return math.lcm(bits, 8) // bits
+
+
+def group_nbytes(bits: int) -> int:
+    """Bytes per packing group: lcm(bits, 8) / 8."""
+    return math.lcm(bits, 8) // 8
+
+
+def payload_nbytes(numel: int, bits: int) -> int:
+    """Exact payload bytes for ``numel`` codes at a lane width: whole
+    groups only (the tail group is padded with zero codes). Pure
+    accounting - any positive width is accepted (the analytic 'Comm'
+    tables quote 1-bit sign and 32-bit f32 rows); actual pack/unpack is
+    restricted to SUPPORTED_BITS."""
+    if bits <= 0:
+        raise ValueError(f"bits={bits} must be positive")
+    g, b = group_codes(bits), group_nbytes(bits)
+    return -(-int(numel) // g) * b
+
+
+def lane_bits_for(max_abs_code: int) -> int:
+    """Smallest supported lane whose signed range [-(2^(b-1)),
+    2^(b-1)-1] holds codes with |c| <= max_abs_code."""
+    for b in SUPPORTED_BITS:
+        if max_abs_code <= 2 ** (b - 1) - 1:
+            return b
+    raise ValueError(f"codes of magnitude {max_abs_code} exceed 16 bits")
+
+
+def _bias(bits: int) -> int:
+    # <8-bit lanes use the historical biased-unsigned layout; 8/16-bit
+    # lanes are two's complement (byte-identical to an int8/int16 view).
+    return (1 << (bits - 1)) if bits < 8 else 0
+
+
+def pack_lanes(codes2d: jax.Array, bits: int) -> jax.Array:
+    """(R, L) signed int codes -> (R, L*bits/8) uint8, each row packed
+    independently. L must be a multiple of group_codes(bits)."""
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"bits={bits} not in {SUPPORTED_BITS}")
+    rows, L = codes2d.shape
+    g, nb = group_codes(bits), group_nbytes(bits)
+    assert L % g == 0, (L, g)
+    u = codes2d.astype(jnp.int32) + _bias(bits)
+    if bits == 16:
+        u = u & 0xFFFF
+        out = jnp.stack([u & 0xFF, (u >> 8) & 0xFF], axis=-1)
+        return out.reshape(rows, 2 * L).astype(jnp.uint8)
+    if bits == 8:
+        return (u & 0xFF).astype(jnp.uint8)
+    grp = u.reshape(rows, L // g, g)
+    val = jnp.zeros((rows, L // g), jnp.int32)
+    for j in range(g):  # <= 24 bits per group, fits int32
+        val = val | (grp[:, :, j] << (j * bits))
+    out = jnp.stack([(val >> (8 * b)) & 0xFF for b in range(nb)], axis=-1)
+    return out.reshape(rows, (L // g) * nb).astype(jnp.uint8)
+
+
+def unpack_lanes(payload2d: jax.Array, bits: int, L: int) -> jax.Array:
+    """Inverse of pack_lanes -> (R, L) codes (int8, or int16 for 16-bit
+    lanes)."""
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"bits={bits} not in {SUPPORTED_BITS}")
+    rows = payload2d.shape[0]
+    g, nb = group_codes(bits), group_nbytes(bits)
+    u = payload2d.astype(jnp.int32)
+    if bits == 16:
+        pair = u.reshape(rows, L, 2)
+        val = pair[:, :, 0] | (pair[:, :, 1] << 8)
+        return (((val + 0x8000) & 0xFFFF) - 0x8000).astype(jnp.int16)
+    if bits == 8:
+        return (((u + 0x80) & 0xFF) - 0x80).astype(jnp.int8)
+    grp = u.reshape(rows, L // g, nb)
+    val = jnp.zeros((rows, L // g), jnp.int32)
+    for b in range(nb):
+        val = val | (grp[:, :, b] << (8 * b))
+    mask = (1 << bits) - 1
+    cols = [((val >> (j * bits)) & mask) - _bias(bits) for j in range(g)]
+    return jnp.stack(cols, axis=-1).reshape(rows, L).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# flat / row-chunked views (the shapes the wire and residency paths use)
+# ---------------------------------------------------------------------------
+
+def pack_flat(codes: jax.Array, bits: int) -> jax.Array:
+    """Any-shape codes -> flat uint8 payload of payload_nbytes(numel)."""
+    flat = codes.reshape(-1)
+    numel = flat.shape[0]
+    g = group_codes(bits)
+    pad = (-numel) % g
+    flat = jnp.pad(flat, (0, pad))
+    return pack_lanes(flat.reshape(1, -1), bits).reshape(-1)
+
+
+def unpack_flat(payload: jax.Array, bits: int, numel: int) -> jax.Array:
+    """Inverse of pack_flat -> (numel,) codes."""
+    g = group_codes(bits)
+    padded = -(-numel // g) * g
+    return unpack_lanes(payload.reshape(1, -1), bits, padded)[0, :numel]
+
+
+def pack_rows(codes_rows: jax.Array, bits: int) -> jax.Array:
+    """(n_rows, c) codes -> (n_rows, payload_nbytes(c)) uint8; each row
+    packed independently so chunk boundaries stay byte-aligned on the
+    wire (the all_to_all moves whole rows)."""
+    n_rows, c = codes_rows.shape
+    g = group_codes(bits)
+    pad = (-c) % g
+    rows = jnp.pad(codes_rows, ((0, 0), (0, pad)))
+    return pack_lanes(rows, bits)
+
+
+def unpack_rows(payload_rows: jax.Array, bits: int, c: int) -> jax.Array:
+    """Inverse of pack_rows -> (n_rows, c) codes."""
+    g = group_codes(bits)
+    padded = -(-c // g) * g
+    return unpack_lanes(payload_rows, bits, padded)[:, :c]
+
+
+def pad_rows(x: jax.Array, n_rows: int) -> jax.Array:
+    """Flatten and zero-pad into (n_rows, ceil(numel/n_rows)) ownership
+    rows (the worker-chunk layout of Algorithm 2)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    c = -(-n // n_rows)
+    return jnp.pad(flat, (0, n_rows * c - n)).reshape(n_rows, c)
+
+
+def packed_nbytes(numel: int, bits: int) -> int:
+    """Compat alias (the historical ``repro.core.packing`` name)."""
+    return payload_nbytes(numel, bits)

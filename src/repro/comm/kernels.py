@@ -1,0 +1,538 @@
+"""Fused Pallas TPU kernels for the compression codec stack.
+
+One kernel launch per direction (the acceptance contract of the codec
+subsystem):
+
+  * **encode** = amax + quantize + bit-pack. Data-dependent scales use a
+    two-phase grid over the SAME ``pallas_call`` - phase 0 streams the
+    tensor and folds per-block amax partials into an SMEM scratch
+    accumulator, phase 1 re-streams it, quantizes against the final
+    scale, and packs the codes to their wire lanes in VMEM. (TPU grids
+    iterate sequentially, which is what makes the scratch carry work.)
+    Codecs with static scales (the paper's absolute Q_x) skip phase 0.
+  * **decode** = unpack + dequantize, one pass.
+  * **ef-encode** = quantize + pack + error-feedback residual
+    ``e' = x - deq(codes)`` in one pass (the scale arrives from the Adam
+    moment pass, see ``repro.kernels.adam_ef``).
+
+The packed payload never exists as an unpacked int8 code tensor in HBM:
+codes live only in VMEM registers between the quantize and pack steps.
+
+Every kernel body calls the canonical math in ``repro.opt.grids`` and
+``repro.comm.bits`` on its VMEM tile, so the fused path is bit-identical
+to the jnp reference backend by construction (asserted across all lane
+widths by ``tests/test_comm_codecs.py``).
+
+Lane geometry: the input tile's lane count ``LANES_IN[bits]`` is chosen
+so the packed output tile is a whole number of 128-lane VREGs (e.g.
+3-bit lanes read (rows, 1024) floats and write (rows, 384) bytes).
+
+The historical per-op kernels (separate amax / quantize / dequantize
+passes) also live here now; ``repro.kernels.quantize`` and
+``repro.kernels.pack`` re-export them for backward compatibility.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.comm import bits as B
+from repro.opt import grids
+
+# legacy two-pass tiling (kept: repro.opt.engine's update core uses it)
+BLOCK_ROWS = 256
+LANES = 128
+
+# fused-codec tiling: rows per grid step (f32 sublane multiple; small so
+# sub-tile tensors don't over-pad) and input lanes per lane width (the
+# packed output tile is then a whole number of 128-lane VREGs).
+ENC_ROWS = 32
+LANES_IN = {2: 512, 3: 1024, 4: 256, 6: 512, 8: 128, 16: 128}
+
+
+def lanes_in(bits: int) -> int:
+    return LANES_IN[bits]
+
+
+def lanes_out(bits: int) -> int:
+    return LANES_IN[bits] * bits // 8
+
+
+# ---------------------------------------------------------------------------
+# in-kernel quantize/dequantize dispatch (static kind)
+# ---------------------------------------------------------------------------
+
+def _quant(x, scale, u, *, kind: str, k: int, clip_abs):
+    if kind == "log":
+        codes = grids.log_quantize(x, scale, k)
+    elif kind == "uniform":
+        codes = grids.uniform_quantize(x, scale, k)
+    elif kind == "ternary":
+        codes = grids.ternary_quantize(x, u, scale)
+    else:
+        raise ValueError(kind)
+    if clip_abs is not None:
+        codes = jnp.clip(codes, -clip_abs, clip_abs)
+    return codes
+
+
+def _dequant(codes, scale, *, kind: str, k: int):
+    if kind == "log":
+        return grids.log_dequantize(codes, scale, k)
+    if kind == "uniform":
+        return grids.uniform_dequantize(codes, scale, k)
+    if kind == "ternary":
+        return grids.ternary_dequantize(codes, scale)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# fused encode (single launch)
+# ---------------------------------------------------------------------------
+
+def _encode2_body(x_ref, payload_ref, scale_ref, acc_ref, *, kind, bits,
+                  k, clip_abs):
+    """Two-phase: (0, i) amax partials -> SMEM; (1, i) quantize + pack."""
+    ph = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(ph == 0)
+    def _():
+        part = grids.block_amax(x_ref[...])
+
+        @pl.when(i == 0)
+        def _():
+            acc_ref[0] = part
+
+        @pl.when(i > 0)
+        def _():
+            acc_ref[0] = jnp.maximum(acc_ref[0], part)
+
+    @pl.when(ph == 1)
+    def _():
+        amax = acc_ref[0]
+        scale = jnp.where(amax > 0, amax, 1.0).astype(jnp.float32)
+
+        @pl.when(i == 0)
+        def _():
+            scale_ref[0] = scale
+
+        codes = _quant(x_ref[...], scale, None, kind=kind, k=k,
+                       clip_abs=clip_abs)
+        payload_ref[...] = B.pack_lanes(codes, bits)
+
+
+def _encode2_ternary_body(x_ref, u_ref, payload_ref, scale_ref, acc_ref,
+                          *, bits, clip_abs):
+    ph = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(ph == 0)
+    def _():
+        part = grids.block_amax(x_ref[...])
+
+        @pl.when(i == 0)
+        def _():
+            acc_ref[0] = part
+
+        @pl.when(i > 0)
+        def _():
+            acc_ref[0] = jnp.maximum(acc_ref[0], part)
+
+    @pl.when(ph == 1)
+    def _():
+        amax = acc_ref[0]
+        scale = jnp.where(amax > 0, amax, 1.0).astype(jnp.float32)
+
+        @pl.when(i == 0)
+        def _():
+            scale_ref[0] = scale
+
+        codes = _quant(x_ref[...], scale, u_ref[...], kind="ternary", k=0,
+                       clip_abs=clip_abs)
+        payload_ref[...] = B.pack_lanes(codes, bits)
+
+
+def _encode1_body(x_ref, scale_ref, payload_ref, *, kind, bits, k,
+                  clip_abs):
+    """Single-phase encode with a known scale (absolute grids)."""
+    codes = _quant(x_ref[...], scale_ref[0], None, kind=kind, k=k,
+                   clip_abs=clip_abs)
+    payload_ref[...] = B.pack_lanes(codes, bits)
+
+
+def encode_pallas(x2d: jax.Array, kind: str, bits: int, k: int, *,
+                  scale=None, u2d=None, clip_abs=None,
+                  interpret: bool):
+    """Fused amax+quantize+pack, ONE ``pallas_call``.
+
+    x2d: (R, LANES_IN[bits]) f32, R a multiple of ENC_ROWS. Returns
+    ``(payload2d uint8 (R, lanes_out), scale ())``; with ``scale=`` given
+    the amax phase is skipped and the same scale is returned.
+    """
+    rows = x2d.shape[0]
+    li, lo = lanes_in(bits), lanes_out(bits)
+    assert x2d.shape[1] == li and rows % ENC_ROWS == 0, (x2d.shape, bits)
+    nb = rows // ENC_ROWS
+    xblk = pl.BlockSpec((ENC_ROWS, li), lambda p, i: (i, 0))
+    pblk = pl.BlockSpec((ENC_ROWS, lo), lambda p, i: (i, 0))
+    payload_shape = jax.ShapeDtypeStruct((rows, lo), jnp.uint8)
+
+    if scale is not None:
+        scale = jnp.asarray(scale, jnp.float32)
+        payload = pl.pallas_call(
+            functools.partial(_encode1_body, kind=kind, bits=bits, k=k,
+                              clip_abs=clip_abs),
+            grid=(1, nb),
+            in_specs=[xblk, pl.BlockSpec((1,), lambda p, i: (0,))],
+            out_specs=pblk,
+            out_shape=payload_shape,
+            interpret=interpret,
+        )(x2d, scale.reshape(1))
+        return payload, scale
+
+    sblk = pl.BlockSpec((1,), lambda p, i: (0,))
+    if kind == "ternary":
+        body = functools.partial(_encode2_ternary_body, bits=bits,
+                                 clip_abs=clip_abs)
+        operands = (x2d, u2d)
+        in_specs = [xblk, pl.BlockSpec((ENC_ROWS, li), lambda p, i: (i, 0))]
+    else:
+        body = functools.partial(_encode2_body, kind=kind, bits=bits, k=k,
+                                 clip_abs=clip_abs)
+        operands = (x2d,)
+        in_specs = [xblk]
+    payload, scale_out = pl.pallas_call(
+        body,
+        grid=(2, nb),
+        in_specs=in_specs,
+        out_specs=[pblk, sblk],
+        out_shape=[payload_shape,
+                   jax.ShapeDtypeStruct((1,), jnp.float32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return payload, scale_out[0]
+
+
+# ---------------------------------------------------------------------------
+# fused decode (single launch)
+# ---------------------------------------------------------------------------
+
+def _decode_body(payload_ref, scale_ref, o_ref, *, kind, bits, k,
+                 out_dtype):
+    li = o_ref.shape[-1]
+    codes = B.unpack_lanes(payload_ref[...], bits, li)
+    o_ref[...] = _dequant(codes, scale_ref[0], kind=kind,
+                          k=k).astype(out_dtype)
+
+
+def decode_pallas(payload2d: jax.Array, scales: jax.Array, kind: str,
+                  bits: int, k: int, *, tiles_per_scale: int = 0,
+                  out_dtype=jnp.float32, interpret: bool) -> jax.Array:
+    """Fused unpack+dequantize, ONE ``pallas_call``.
+
+    payload2d: (R, lanes_out(bits)) uint8. ``scales`` is either a scalar
+    (per-tensor) or a (n_rows,) vector with ``tiles_per_scale`` grid
+    steps per wire row (the per-source-worker scales of the dist
+    channels).
+    """
+    rows = payload2d.shape[0]
+    li, lo = lanes_in(bits), lanes_out(bits)
+    assert payload2d.shape[1] == lo and rows % ENC_ROWS == 0
+    nb = rows // ENC_ROWS
+    scales = jnp.asarray(scales, jnp.float32).reshape(-1)
+    if tiles_per_scale:
+        t = tiles_per_scale
+        sspec = pl.BlockSpec((1,), lambda i: (i // t,))
+    else:
+        sspec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_decode_body, kind=kind, bits=bits, k=k,
+                          out_dtype=out_dtype),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((ENC_ROWS, lo), lambda i: (i, 0)), sspec],
+        out_specs=pl.BlockSpec((ENC_ROWS, li), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, li), out_dtype),
+        interpret=interpret,
+    )(payload2d, scales)
+
+
+# ---------------------------------------------------------------------------
+# fused EF encode (quantize + pack + residual, single launch)
+# ---------------------------------------------------------------------------
+
+def _ef_encode_body(x_ref, scale_ref, payload_ref, e_ref, *, kind, bits,
+                    k, clip_abs):
+    x = x_ref[...]
+    s = scale_ref[0]
+    codes = _quant(x, s, None, kind=kind, k=k, clip_abs=clip_abs)
+    payload_ref[...] = B.pack_lanes(codes, bits)
+    e_ref[...] = x - _dequant(codes, s, kind=kind, k=k)
+
+
+def ef_encode_pallas(x2d: jax.Array, scale: jax.Array, kind: str,
+                     bits: int, k: int, *, clip_abs=None,
+                     interpret: bool):
+    """(x, scale) -> (packed payload, EF residual e' = x - deq(codes)),
+    one launch. The codes never leave VMEM."""
+    rows = x2d.shape[0]
+    li, lo = lanes_in(bits), lanes_out(bits)
+    assert x2d.shape[1] == li and rows % ENC_ROWS == 0
+    nb = rows // ENC_ROWS
+    return pl.pallas_call(
+        functools.partial(_ef_encode_body, kind=kind, bits=bits, k=k,
+                          clip_abs=clip_abs),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((ENC_ROWS, li), lambda i: (i, 0)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((ENC_ROWS, lo), lambda i: (i, 0)),
+                   pl.BlockSpec((ENC_ROWS, li), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, lo), jnp.uint8),
+                   jax.ShapeDtypeStruct((rows, li), jnp.float32)],
+        interpret=interpret,
+    )(x2d, jnp.asarray(scale, jnp.float32).reshape(1))
+
+
+# ---------------------------------------------------------------------------
+# fused blockwise encode (sign + per-block scale + pack, single launch)
+# ---------------------------------------------------------------------------
+
+BLOCKWISE_ROWS = 8
+
+
+def _blockwise_encode_body(x_ref, payload_ref, scale_ref, *, bits):
+    codes, scale = grids.blockwise_quantize(x_ref[...])
+    payload_ref[...] = B.pack_lanes(codes, bits)
+    scale_ref[...] = scale
+
+
+def encode_blockwise_pallas(x2d: jax.Array, *, bits: int = 2,
+                            interpret: bool):
+    """(nb, block) f32 -> ((nb, block*bits/8) uint8 payload, (nb,)
+    scales) in one launch; nb must be a multiple of BLOCKWISE_ROWS."""
+    nb, block = x2d.shape
+    assert nb % BLOCKWISE_ROWS == 0
+    lo = block * bits // 8
+    grid = nb // BLOCKWISE_ROWS
+    return pl.pallas_call(
+        functools.partial(_blockwise_encode_body, bits=bits),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((BLOCKWISE_ROWS, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((BLOCKWISE_ROWS, lo), lambda i: (i, 0)),
+                   pl.BlockSpec((BLOCKWISE_ROWS,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nb, lo), jnp.uint8),
+                   jax.ShapeDtypeStruct((nb,), jnp.float32)],
+        interpret=interpret,
+    )(x2d)
+
+
+# ---------------------------------------------------------------------------
+# standalone pack/unpack kernels (generic lane widths)
+# ---------------------------------------------------------------------------
+
+def _pack_body(codes_ref, payload_ref, *, bits):
+    payload_ref[...] = B.pack_lanes(codes_ref[...], bits)
+
+
+def pack_pallas(codes2d: jax.Array, bits: int, *, interpret: bool):
+    """(R, lanes_in) codes -> (R, lanes_out) uint8, one launch."""
+    rows = codes2d.shape[0]
+    li, lo = lanes_in(bits), lanes_out(bits)
+    assert codes2d.shape[1] == li and rows % ENC_ROWS == 0
+    return pl.pallas_call(
+        functools.partial(_pack_body, bits=bits),
+        grid=(rows // ENC_ROWS,),
+        in_specs=[pl.BlockSpec((ENC_ROWS, li), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ENC_ROWS, lo), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lo), jnp.uint8),
+        interpret=interpret,
+    )(codes2d)
+
+
+def _unpack_body(payload_ref, codes_ref, *, bits):
+    codes_ref[...] = B.unpack_lanes(payload_ref[...], bits,
+                                    codes_ref.shape[-1])
+
+
+def unpack_pallas(payload2d: jax.Array, bits: int, *, interpret: bool):
+    rows = payload2d.shape[0]
+    li, lo = lanes_in(bits), lanes_out(bits)
+    assert payload2d.shape[1] == lo and rows % ENC_ROWS == 0
+    dtype = jnp.int16 if bits == 16 else jnp.int8
+    return pl.pallas_call(
+        functools.partial(_unpack_body, bits=bits),
+        grid=(rows // ENC_ROWS,),
+        in_specs=[pl.BlockSpec((ENC_ROWS, lo), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ENC_ROWS, li), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, li), dtype),
+        interpret=interpret,
+    )(payload2d)
+
+
+# ---------------------------------------------------------------------------
+# historical per-op kernels (separate passes), moved here from
+# repro.kernels.quantize; that module re-exports them unchanged.
+# ---------------------------------------------------------------------------
+
+def _amax_kernel(x_ref, o_ref):
+    o_ref[0] = grids.block_amax(x_ref[...])
+
+
+def amax_pallas(x2d: jax.Array, *, interpret: bool) -> jax.Array:
+    """Per-block amax -> (grid,) partials. x2d: (R, 128), R % BLOCK_ROWS == 0."""
+    rows = x2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    partials = pl.pallas_call(
+        _amax_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid,), jnp.float32),
+        interpret=interpret,
+    )(x2d)
+    return jnp.max(partials)
+
+
+def _log_quantize_kernel(x_ref, scale_ref, codes_ref, *, k_g: int):
+    codes_ref[...] = grids.log_quantize(x_ref[...], scale_ref[0], k_g)
+
+
+def log_quantize_pallas(x2d: jax.Array, scale: jax.Array, k_g: int,
+                        *, interpret: bool) -> jax.Array:
+    rows = x2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    return pl.pallas_call(
+        functools.partial(_log_quantize_kernel, k_g=k_g),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int8),
+        interpret=interpret,
+    )(x2d, scale.reshape(1))
+
+
+def _log_dequantize_kernel(codes_ref, scale_ref, o_ref, *, k_g: int,
+                           out_dtype):
+    o_ref[...] = grids.log_dequantize(
+        codes_ref[...], scale_ref[0], k_g).astype(out_dtype)
+
+
+def log_dequantize_pallas(codes2d: jax.Array, scale: jax.Array, k_g: int,
+                          *, out_dtype=jnp.float32, interpret: bool) -> jax.Array:
+    rows = codes2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    return pl.pallas_call(
+        functools.partial(_log_dequantize_kernel, k_g=k_g, out_dtype=out_dtype),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), out_dtype),
+        interpret=interpret,
+    )(codes2d, scale.reshape(1))
+
+
+def _uniform_quantize_kernel(x_ref, scale_ref, codes_ref, *, k_x: int):
+    codes_ref[...] = grids.uniform_quantize(x_ref[...], scale_ref[0], k_x)
+
+
+def uniform_quantize_pallas(x2d: jax.Array, scale: jax.Array, k_x: int,
+                            *, interpret: bool) -> jax.Array:
+    """Codes dtype follows the grid width: int8 for k_x <= 6, int16 above
+    (codes reach +/- 2^k_x, which overflows int8 at k_x = 7)."""
+    rows = x2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    return pl.pallas_call(
+        functools.partial(_uniform_quantize_kernel, k_x=k_x),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES),
+                                       grids.uniform_code_dtype(k_x)),
+        interpret=interpret,
+    )(x2d, scale.reshape(1))
+
+
+def _uniform_dequantize_kernel(codes_ref, scale_ref, o_ref, *, k_x: int,
+                               out_dtype):
+    o_ref[...] = grids.uniform_dequantize(
+        codes_ref[...], scale_ref[0], k_x).astype(out_dtype)
+
+
+def uniform_dequantize_pallas(codes2d: jax.Array, scale: jax.Array, k_x: int,
+                              *, out_dtype=jnp.float32,
+                              interpret: bool) -> jax.Array:
+    rows = codes2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    return pl.pallas_call(
+        functools.partial(_uniform_dequantize_kernel, k_x=k_x,
+                          out_dtype=out_dtype),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), out_dtype),
+        interpret=interpret,
+    )(codes2d, scale.reshape(1))
+
+
+def _ternary_quantize_kernel(x_ref, u_ref, scale_ref, codes_ref):
+    codes_ref[...] = grids.ternary_quantize(x_ref[...], u_ref[...],
+                                            scale_ref[0])
+
+
+def ternary_quantize_pallas(x2d: jax.Array, u2d: jax.Array,
+                            scale: jax.Array, *, interpret: bool) -> jax.Array:
+    """TernGrad codes from pre-drawn uniforms (stochastic rounding bits are
+    generated outside so the jnp backend sees identical draws)."""
+    rows = x2d.shape[0]
+    grid = rows // BLOCK_ROWS
+    blk = lambda: pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _ternary_quantize_kernel,
+        grid=(grid,),
+        in_specs=[blk(), blk(), pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=blk(),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int8),
+        interpret=interpret,
+    )(x2d, u2d, scale.reshape(1))
+
+
+def _blockwise_quantize_kernel(x_ref, codes_ref, scale_ref):
+    codes, scale = grids.blockwise_quantize(x_ref[...])
+    codes_ref[...] = codes
+    scale_ref[...] = scale
+
+
+def blockwise_quantize_pallas(x2d: jax.Array, *, interpret: bool):
+    """(nb, block) -> (sign codes, per-block scales). The block dim rides
+    the lane axis whole (one EF block per sublane row); nb must be a
+    multiple of BLOCKWISE_ROWS (the engine pads with zero rows)."""
+    nb, block = x2d.shape
+    grid = nb // BLOCKWISE_ROWS
+    codes, scales = pl.pallas_call(
+        _blockwise_quantize_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((BLOCKWISE_ROWS, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((BLOCKWISE_ROWS, block), lambda i: (i, 0)),
+                   pl.BlockSpec((BLOCKWISE_ROWS,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.int8),
+                   jax.ShapeDtypeStruct((nb,), jnp.float32)],
+        interpret=interpret,
+    )(x2d)
+    return codes, scales

@@ -1,53 +1,31 @@
-"""Bit-packing of quantization codes for the wire.
+"""Bit-packing of quantization codes for the wire - thin shim.
 
-The paper's log grid at k_g<=6 has <=15 levels -> 4 bits/code; the channel
-ships two codes per int8. TernGrad/sign codes fit 2 bits -> four per int8.
-Packing is what turns "fewer levels" into "fewer bytes" on the TPU ICI: the
-collectives in repro.dist move the *packed* arrays.
+The packing math lives in ``repro.comm.bits`` (the codec stack's lane
+packer); this module keeps the historical flat-array API. The byte
+layout for 2/4/8-bit codes is unchanged; 3-, 6- and 16-bit lanes are new
+(odd widths pack in 24-bit groups - see ``repro.comm.bits``).
 
-Signed codes c in [-(2^(b-1)-1), 2^(b-1)-1] are biased to unsigned
-u = c + 2^(b-1) before packing.
+Packing is what turns "fewer levels" into "fewer bytes" on the TPU ICI:
+the collectives in repro.dist move the *packed* arrays.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
+
+from repro.comm.bits import (  # noqa: F401
+    SUPPORTED_BITS,
+    packed_nbytes,
+)
+from repro.comm import bits as _B
 
 
 def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
-    """Pack signed int codes (int8) into a dense uint8 array.
-
-    codes: any shape, values in [-(2^(bits-1)), 2^(bits-1)-1].
-    Returns uint8 of shape (ceil(numel*bits/8),).
-    """
-    if bits == 8:
-        return codes.astype(jnp.int8).reshape(-1).view(jnp.uint8)
-    assert 8 % bits == 0, f"bits={bits} must divide 8"
-    per = 8 // bits
-    bias = 1 << (bits - 1)
-    flat = codes.reshape(-1).astype(jnp.int32) + bias  # unsigned
-    pad = (-flat.shape[0]) % per
-    flat = jnp.pad(flat, (0, pad), constant_values=bias)
-    grp = flat.reshape(-1, per)
-    shifts = jnp.arange(per, dtype=jnp.int32) * bits
-    packed = jnp.sum(grp << shifts[None, :], axis=1)
-    return packed.astype(jnp.uint8)
+    """Pack signed int codes into a dense uint8 array of shape
+    ``(packed_nbytes(numel, bits),)``."""
+    return _B.pack_flat(codes, bits)
 
 
 def unpack_codes(packed: jax.Array, bits: int, numel: int) -> jax.Array:
-    """Inverse of pack_codes -> int8 codes of shape (numel,)."""
-    if bits == 8:
-        return packed.view(jnp.int8)[:numel]
-    per = 8 // bits
-    bias = 1 << (bits - 1)
-    mask = (1 << bits) - 1
-    u = packed.astype(jnp.int32)
-    shifts = jnp.arange(per, dtype=jnp.int32) * bits
-    grp = (u[:, None] >> shifts[None, :]) & mask
-    flat = grp.reshape(-1)[:numel] - bias
-    return flat.astype(jnp.int8)
-
-
-def packed_nbytes(numel: int, bits: int) -> int:
-    return int(np.ceil(numel * bits / 8))
+    """Inverse of pack_codes -> codes of shape (numel,) (int8; int16 for
+    16-bit lanes)."""
+    return _B.unpack_flat(packed, bits, numel)

@@ -1,4 +1,5 @@
-"""Quantization operators from the paper (and the baselines it compares to).
+"""Quantization operators from the paper (and the baselines it compares
+to) - thin shims over the ``repro.comm`` codec registry.
 
 The paper's two quantizers (Section 5):
 
@@ -8,41 +9,38 @@ The paper's two quantizers (Section 5):
   Q_x(x) = 0.5 * argmin_{xhat in X} || 2x - xhat ||,
       X = {-1, ..., -1/2^{k_x}, 0, 1/2^{k_x}, ..., 1}          (uniform grid)
 
-Baselines:
-  * TernGrad (Wen et al. '17): unbiased stochastic ternary levels
-    {-amax, 0, +amax}.
-  * Blockwise (Zheng et al. '19): sign() scaled by per-block mean |.|.
-
-Every quantizer is exposed as a `Quantizer` with
-  encode(x)  -> QTensor (integer codes + scale metadata)
-  decode(qt) -> dequantized float array
-  __call__   -> decode(encode(x))  (the mathematical operator Q(.))
-
-The grid arithmetic itself lives once in ``repro.opt.grids`` (the same
-functions the Pallas kernel bodies call); this module wraps it in the
-QTensor wire objects and the spec-string registry.
+Baselines: TernGrad (Wen et al. '17) and blockwise sign (Zheng et al.
+'19). Every quantizer wraps a :class:`repro.comm.Codec` - the grid math,
+scale policy, lane width, and byte accounting all live once there; this
+module only keeps the historical ``QTensor`` (unpacked integer codes +
+scale) wire objects and the spec-string surface.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import comm
+from repro.comm.bits import lane_bits_for, payload_nbytes
 from repro.opt import grids
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class QTensor:
-    """Integer codes + scale. The wire format of the paper's channel.
+    """Integer codes + scale: a wire tensor *before* bit-packing.
 
-    codes: integer array (int8 storage; possibly bit-packed, see packing.py)
+    (The packed form is :class:`repro.comm.WireBuffer`; QTensor keeps the
+    codes addressable for code-level tests and the single-machine
+    optimizer.)
+
+    codes: integer array (int8 storage; int16 for wide uniform grids)
     scale: scalar (per-tensor) or per-block array of float32
-    meta:  static metadata (grid kind, bits, shape) - not traced.
+    meta:  static metadata (grid kind, packed lane bits, shape).
     """
 
     codes: jax.Array
@@ -62,11 +60,12 @@ class QTensor:
 
     @property
     def nbytes_wire(self) -> int:
-        """Bytes on the wire: ceil(bits/8 packing) * numel + scale bytes."""
+        """Exact bytes on the wire: packed payload + scale bytes (the
+        codec-registry accounting)."""
         numel = int(np.prod(self.shape)) if self.shape else 1
-        code_bytes = (numel * self.bits + 7) // 8
-        scale_bytes = int(np.prod(self.scale.shape)) * 4 if hasattr(self.scale, "shape") else 4
-        return code_bytes + scale_bytes
+        scale_bytes = int(np.prod(self.scale.shape)) * 4 \
+            if hasattr(self.scale, "shape") else 4
+        return payload_nbytes(numel, self.bits) + scale_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -77,10 +76,9 @@ def _log_levels(k_g: int) -> int:
     """Number of representable levels: +/- 2^0..2^-k_g plus 0."""
     return 2 * (k_g + 1) + 1
 
-
 def log_bits(k_g: int) -> int:
-    """Bits per element needed for the log grid (sign + exponent index)."""
-    return max(2, int(np.ceil(np.log2(_log_levels(k_g)))))
+    """Packed lane bits for the log grid (codes in [-(k_g+1), k_g+1])."""
+    return lane_bits_for(k_g + 1)
 
 
 def log_encode(g: jax.Array, k_g: int) -> QTensor:
@@ -89,15 +87,16 @@ def log_encode(g: jax.Array, k_g: int) -> QTensor:
     Code layout (``grids.log_quantize``): 0 encodes the value 0; signed
     code c with |c| in [1, k_g+1] encodes magnitude 2^{-(k_g+1-|c|)}.
     """
+    cd = comm.LogCodec(k_g=k_g)
     g = g.astype(jnp.float32)
-    scale = grids.amax_scale(g)
-    codes = grids.log_quantize(g, scale, k_g)
-    return QTensor(codes=codes, scale=scale, kind="log", bits=log_bits(k_g),
+    scale = cd.compute_scale(g)
+    codes = cd.quantize(g, scale)
+    return QTensor(codes=codes, scale=scale, kind="log", bits=cd.bits,
                    shape=tuple(g.shape))
 
 
 def log_decode(qt: QTensor, k_g: int) -> jax.Array:
-    return grids.log_dequantize(qt.codes, qt.scale, k_g)
+    return comm.LogCodec(k_g=k_g).dequantize(qt.codes, qt.scale)
 
 
 # ---------------------------------------------------------------------------
@@ -109,15 +108,16 @@ def uniform_encode(x: jax.Array, k_x: int, absolute: bool = True) -> QTensor:
     with spacing 2^-(k_x+1), no data-dependent scale (Assumption 3 is an
     additive bound). `absolute=False` scales the grid by amax (robust mode
     for big-model configs)."""
+    cd = comm.UniformCodec(k_x=k_x, absolute=absolute)
     x = x.astype(jnp.float32)
-    scale = jnp.float32(0.5) if absolute else grids.amax_scale(x)
-    codes = grids.uniform_quantize(x, scale, k_x)  # int8, int16 for k_x > 6
-    return QTensor(codes=codes, scale=scale, kind="uniform", bits=k_x + 1,
+    scale = cd.compute_scale(x)
+    codes = cd.quantize(x, scale)
+    return QTensor(codes=codes, scale=scale, kind="uniform", bits=cd.bits,
                    shape=tuple(x.shape))
 
 
 def uniform_decode(qt: QTensor, k_x: int) -> jax.Array:
-    return grids.uniform_dequantize(qt.codes, qt.scale, k_x)
+    return comm.UniformCodec(k_x=k_x).dequantize(qt.codes, qt.scale)
 
 
 # ---------------------------------------------------------------------------
@@ -125,17 +125,18 @@ def uniform_decode(qt: QTensor, k_x: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def ternary_encode(g: jax.Array, key: jax.Array) -> QTensor:
+    cd = comm.TernaryCodec()
     g = g.astype(jnp.float32)
-    scale = grids.amax_scale(g)
+    scale = cd.compute_scale(g)
     # pre-drawn uniforms == jax.random.bernoulli(key, |g|/scale) draws
     u = jax.random.uniform(key, g.shape)
-    codes = grids.ternary_quantize(g, u, scale)
-    return QTensor(codes=codes, scale=scale, kind="ternary", bits=2,
+    codes = cd.quantize(g, scale, u=u)
+    return QTensor(codes=codes, scale=scale, kind="ternary", bits=cd.bits,
                    shape=tuple(g.shape))
 
 
 def ternary_decode(qt: QTensor) -> jax.Array:
-    return grids.ternary_dequantize(qt.codes, qt.scale)
+    return comm.TernaryCodec().dequantize(qt.codes, qt.scale)
 
 
 # ---------------------------------------------------------------------------
@@ -177,6 +178,11 @@ class Quantizer:
         return self.decode(self.encode(x, key=key))
 
     @property
+    def codec(self) -> comm.Codec:
+        """The registry codec backing this operator."""
+        raise NotImplementedError
+
+    @property
     def wire_bits(self) -> float:
         """Average payload bits per element (excluding scales)."""
         raise NotImplementedError
@@ -198,6 +204,10 @@ class IdentityQuantizer(Quantizer):
         return jnp.asarray(x)
 
     @property
+    def codec(self):
+        return comm.IdentityCodec()
+
+    @property
     def wire_bits(self):
         return 32.0
 
@@ -214,6 +224,10 @@ class LogGradQuantizer(Quantizer):
 
     def decode(self, qt):
         return log_decode(qt, self.k_g)
+
+    @property
+    def codec(self):
+        return comm.LogCodec(k_g=self.k_g)
 
     @property
     def wire_bits(self):
@@ -235,8 +249,12 @@ class UniformWeightQuantizer(Quantizer):
         return uniform_decode(qt, self.k_x)
 
     @property
+    def codec(self):
+        return comm.UniformCodec(k_x=self.k_x, absolute=self.absolute)
+
+    @property
     def wire_bits(self):
-        return float(self.k_x + 1)
+        return float(self.codec.bits)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -249,6 +267,10 @@ class TernGradQuantizer(Quantizer):
 
     def decode(self, qt):
         return ternary_decode(qt)
+
+    @property
+    def codec(self):
+        return comm.TernaryCodec()
 
     @property
     def wire_bits(self):
@@ -267,13 +289,18 @@ class BlockwiseQuantizer(Quantizer):
         return blockwise_decode(qt)
 
     @property
+    def codec(self):
+        return comm.BlockwiseCodec(block=self.block)
+
+    @property
     def wire_bits(self):
         return 1.0 + 32.0 / self.block
 
 
 def get_quantizer(spec: Optional[str]) -> Quantizer:
     """Parse a quantizer spec string: 'none', 'log:k', 'uniform:k',
-    'uniform_amax:k', 'terngrad', 'blockwise:b'."""
+    'uniform_amax:k', 'terngrad', 'blockwise:b' (the same grammar as
+    ``repro.comm.get_codec``)."""
     if spec is None or spec in ("none", "identity", "fp32"):
         return IdentityQuantizer()
     head, _, arg = spec.partition(":")

@@ -1,17 +1,25 @@
 """The quantized wire of Algorithm 3: every cross-worker collective ships
 bit-packed uint8 payloads (plus f32 scales), never raw floats.
 
+All compression goes through the ``repro.comm`` codec registry; this
+module owns only the mesh topology - which rows move where. The fused
+codec entry points (``comm.encode_rows*`` / ``comm.decode_rows``) emit
+and consume the exact payload arrays the collectives move, so no
+unpacked code tensor is ever materialized between quantize and the wire.
+
 Two worker-axis channels (both error-compensated in ``repro.dist.step``):
 
-  * **update exchange** (worker -> server): each worker quantizes its
-    update ``Delta_t + e_t`` for the whole model-shard, packs the codes to
-    ``wire_bits_for_log(k_g)`` bits each, and all-to-alls chunk rows so
-    that worker ``w`` (the "server" for chunk ``w``) receives every
-    worker's packed codes for its chunk. Per leaf this moves
-    ``n_workers * packed_nbytes(c, bits)`` bytes per device.
-  * **weight broadcast** (server -> worker): each server quantizes its
-    updated master chunk with Q_x, packs to 8-bit codes and all-gathers,
-    so every worker reassembles Q_x(x_{t+1}) for the full shard.
+  * **update exchange** (worker -> server): each worker fuse-encodes its
+    update ``Delta_t + e_t`` for the whole model-shard into per-chunk
+    payload rows and all-to-alls them, so worker ``w`` (the "server" for
+    chunk ``w``) receives every worker's packed codes for its chunk.
+    Per leaf this moves ``n_workers * codec.payload_nbytes(c)`` bytes
+    per device.
+  * **weight broadcast** (server -> worker): each server encodes its
+    updated master chunk with the weight codec (Q_x wire lanes) and
+    all-gathers the payload, so every worker reassembles Q_x(x_{t+1})
+    for the full shard. The ``efadam`` mode adds server-side error
+    feedback on this channel.
 
 One model-axis channel:
 
@@ -20,76 +28,28 @@ One model-axis channel:
     "int8 weight gather" and the train path's ``model_gather_quant``.
 
 All functions that touch ``jax.lax`` collectives must run inside
-``shard_map``; the pack/unpack helpers are pure and unit-tested directly
-(``tests/test_packing.py``).
+``shard_map``; the codec helpers are pure and unit-tested directly
+(``tests/test_packing.py``, ``tests/test_comm_codecs.py``).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packing import pack_codes, unpack_codes, packed_nbytes
-from repro.dist.sharding import chunk_size, flatten_pad
+from repro import comm
+from repro.comm.bits import pack_rows, unpack_rows  # noqa: F401  (compat)
 from repro.opt import grids
 
 
-# ---------------------------------------------------------------------------
-# wire format (pure helpers)
-# ---------------------------------------------------------------------------
-
 def wire_bits_for_log(k_g: int) -> int:
-    """Packed bits/code for the log grid: smallest of {2,4,8} whose signed
-    range [-2^(b-1), 2^(b-1)-1] holds codes in [-(k_g+1), k_g+1]."""
-    for b in (2, 4, 8):
-        if k_g + 1 <= 2 ** (b - 1) - 1:
-            return b
-    return 8
-
-
-def pack_rows(codes_rows: jax.Array, bits: int) -> jax.Array:
-    """Pack each worker row independently: (n_workers, c) int codes ->
-    (n_workers, packed_nbytes(c, bits)) uint8. Row-wise packing keeps
-    chunk boundaries byte-aligned for the all_to_all."""
-    return jax.vmap(lambda r: pack_codes(r, bits))(codes_rows)
-
-
-def unpack_rows(packed_rows: jax.Array, bits: int, c: int) -> jax.Array:
-    """Inverse of pack_rows -> (n_workers, c) int8."""
-    return jax.vmap(lambda r: unpack_codes(r, bits, c))(packed_rows)
+    """Packed lane width of the log-grid wire (codec-derived)."""
+    return comm.LogCodec(k_g=k_g).bits
 
 
 amax_scale = grids.amax_scale  # shared zero-guarded scale (one definition)
-
-
-def uniform_wire_codes(x: jax.Array, scale, k_x: int) -> jax.Array:
-    """Q_x codes clipped into int8 wire range. Only k_x=7 can clip (codes
-    reach +/-128 when |x| rides the grid edge); the paper's weights live
-    well inside [-0.5, 0.5], so the clip is a no-op in practice."""
-    codes = grids.uniform_quantize(x, scale, k_x)
-    if k_x >= 7:
-        codes = jnp.clip(codes, -127, 127)
-    return codes.astype(jnp.int8)
-
-
-# ---------------------------------------------------------------------------
-# byte accounting. Counts packed *code* payloads only; the f32 scale
-# side-channels (one scalar per leaf per worker, per-256-block for
-# ef_sgd) are excluded. The per-mode update-exchange wire math lives on
-# each ``repro.dist.modes`` ModeSpec (``wire_nbytes``); only the
-# mode-independent weight-broadcast channel is accounted here.
-# ---------------------------------------------------------------------------
-
-def weight_broadcast_nbytes(c: int, n_workers: int, full_numel: int,
-                            weight_k: Optional[int],
-                            min_numel: int = 0) -> int:
-    """Per-device bytes of the weight-broadcast payload for one leaf
-    (8-bit Q_x codes, or f32 rows for small / unquantized leaves)."""
-    if weight_k is None or full_numel < min_numel:
-        return n_workers * c * 4
-    return n_workers * packed_nbytes(c, 8)
 
 
 # ---------------------------------------------------------------------------
@@ -128,30 +88,33 @@ def exchange_rows(rows: jax.Array, axes: Sequence[str],
     return x.reshape((nw,) + rows.shape[1:])
 
 
-def exchange_packed(codes: jax.Array, bits: int, n_workers: int,
-                    axes: Sequence[str], sizes: Sequence[int]
-                    ) -> Tuple[jax.Array, jax.Array]:
-    """Update-exchange channel for one leaf: flat int codes -> packed
-    uint8 all_to_all -> (n_workers, c) int8 codes received for my chunk.
-    Returns (codes_rows, packed_payload) - the payload is returned so the
-    wire dtype/size is assertable in tests."""
-    c = chunk_size(codes.shape[0], n_workers)
-    rows = flatten_pad(codes, n_workers)
-    packed = pack_rows(rows, bits)
-    assert packed.dtype == jnp.uint8
-    recv = exchange_rows(packed, axes, sizes)
-    return unpack_rows(recv, bits, c), packed
+# ---------------------------------------------------------------------------
+# codec-backed channels: the wire arrays are codec payload rows
+# ---------------------------------------------------------------------------
+
+def exchange_decode(payload_rows: jax.Array, scale, codec: comm.Codec,
+                    c: int, axes: Sequence[str], sizes: Sequence[int],
+                    *, backend: Optional[str] = None) -> jax.Array:
+    """Update-exchange channel for one leaf: my per-chunk payload rows
+    (from ``comm.encode_rows*``) -> all_to_all -> fused decode of every
+    worker's codes for MY chunk with its source scale. Returns
+    ``(n_workers, c)`` dequantized rows."""
+    assert payload_rows.dtype == jnp.uint8
+    recv = exchange_rows(payload_rows, axes, sizes)
+    scales = gather_rows(scale, axes)
+    return comm.decode_rows(recv, scales, codec, c, backend=backend)
 
 
-def broadcast_packed(codes_chunk: jax.Array, axes: Sequence[str]
-                     ) -> jax.Array:
-    """Weight-broadcast channel for one leaf: my chunk's 8-bit codes ->
-    packed uint8 all_gather -> (n_workers, c) int8 codes of every chunk."""
-    c = codes_chunk.shape[0]
-    packed = pack_codes(codes_chunk, 8)
-    assert packed.dtype == jnp.uint8
-    rows = gather_rows(packed, axes)
-    return unpack_rows(rows, 8, c)
+def broadcast_decode(payload: jax.Array, scale, codec: comm.Codec, c: int,
+                     axes: Sequence[str],
+                     *, backend: Optional[str] = None) -> jax.Array:
+    """Weight-broadcast channel for one leaf: my chunk's packed payload
+    -> all_gather -> fused decode of every chunk with its source scale.
+    Returns ``(n_workers, c)`` dequantized rows."""
+    assert payload.dtype == jnp.uint8
+    rows = gather_rows(payload, axes)
+    scales = gather_rows(scale, axes)
+    return comm.decode_rows(rows, scales, codec, c, backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -172,16 +135,18 @@ def quantized_gather_shard(leaf: jax.Array, ax: int, n_shards: int,
     """Int8 weight gather: quantize the local shard (per-shard scale),
     all_gather codes + scales, dequantize each received segment with its
     source scale. With n_shards == 1 this degenerates to local Q_x."""
+    codec = comm.UniformCodec(k_x=k_x, absolute=absolute, wire_bits=8)
     leaf32 = leaf.astype(jnp.float32)
-    scale = jnp.float32(0.5) if absolute else amax_scale(leaf32)
-    codes = uniform_wire_codes(leaf32, scale, k_x)
+    scale = codec.compute_scale(leaf32)
+    # int8 on the wire: the clip above guarantees the int8 range
+    codes = codec.quantize(leaf32, scale).astype(jnp.int8)
     if n_shards <= 1:
-        return grids.uniform_dequantize(codes, scale, k_x)
+        return codec.dequantize(codes, scale)
     seg = jax.lax.all_gather(codes, axis_name, axis=0,
                              tiled=False)          # (n_shards, *shard)
     scales = jax.lax.all_gather(scale, axis_name)  # (n_shards,)
     bshape = (n_shards,) + (1,) * leaf.ndim
-    deq = grids.uniform_dequantize(seg, scales.reshape(bshape), k_x)
+    deq = codec.dequantize(seg, scales.reshape(bshape))
     out = jnp.moveaxis(deq, 0, ax)                 # (..., n_shards, loc, ...)
     shape = list(leaf.shape)
     shape[ax] = shape[ax] * n_shards

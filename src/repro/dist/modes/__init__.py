@@ -2,13 +2,20 @@
 
 ``repro.dist.step`` owns the worker-step template (weight broadcast ->
 fwd/bwd -> engine update -> update exchange); each module here owns one
-mode's per-leaf math + wire accounting. Adding a mode = one new module
-exporting a ``SPEC`` (see ``base.ModeSpec``) + a registry entry below.
+mode's per-leaf math and declares its wire as a ``repro.comm`` codec.
+Adding a mode = one new module exporting a ``SPEC`` (see
+``base.ModeSpec``) + a registry entry below.
 """
-from repro.dist.modes.base import ModeSpec, WorkerCtx, worker_mean  # noqa: F401
-from repro.dist.modes import qadam, dp_adam, terngrad, ef_sgd
+from repro.dist.modes.base import (  # noqa: F401
+    ModeSpec,
+    WorkerCtx,
+    identity_codec,
+    worker_mean,
+)
+from repro.dist.modes import qadam, dp_adam, terngrad, ef_sgd, efadam
 
-MODES = {m.SPEC.name: m.SPEC for m in (qadam, dp_adam, terngrad, ef_sgd)}
+MODES = {m.SPEC.name: m.SPEC
+         for m in (qadam, dp_adam, terngrad, ef_sgd, efadam)}
 
 
 def get_mode(name: str) -> ModeSpec:

@@ -1,9 +1,10 @@
 """Shared pieces of the per-mode distributed updaters.
 
 A mode is a ~50-line plugin: it owns the per-leaf optimizer math (via the
-``repro.opt`` engine) and its update-exchange wire format, while
-``repro.dist.step`` owns the mode-independent worker-step template
-(weight broadcast -> fwd/bwd -> engine update -> update exchange).
+``repro.opt`` engine) and *declares* its update-exchange wire as a
+``repro.comm`` codec, while ``repro.dist.step`` owns the mode-independent
+worker-step template (weight broadcast -> fwd/bwd -> engine update ->
+update exchange).
 
 Updater contract: ``updater(g, m, v, e, chunk, meta, a_t, th_t, key)``
 with the flat per-shard gradient/moments, this worker's master chunk and
@@ -14,6 +15,8 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Optional, Tuple
+
+from repro import comm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,15 +30,33 @@ class WorkerCtx:
 
 @dataclasses.dataclass(frozen=True)
 class ModeSpec:
-    """One optimizer mode: updater factory + wire accounting + state
-    layout. ``wire_nbytes(c, n_workers, grad_k)`` is the per-device,
-    per-leaf update-exchange payload (packed codes only, scale
-    side-channels excluded) - the single source of truth behind
-    ``train.loop.comm_bytes_per_step``."""
+    """One optimizer mode: updater factory + wire declaration + state
+    layout.
+
+    ``wire_codec(grad_k)`` names the update-exchange codec; the byte
+    accounting behind ``train.loop.comm_bytes_per_step`` derives from it
+    (``wire_nbytes`` below - packed codes only, scale side-channels
+    excluded), so the figure agrees byte-for-byte with the payload the
+    collectives actually move. ``extra_state`` adds chunk-sized state
+    leaves; ``broadcast_ef`` turns on server-side error feedback on the
+    weight-broadcast channel (the ``efadam`` mode).
+    """
     name: str
     chunk_sharded_moments: bool
     make_updater: Callable          # (tc, ctx: WorkerCtx) -> updater
-    wire_nbytes: Callable           # (c, n_workers, grad_k) -> int
+    wire_codec: Callable            # (grad_k) -> comm.Codec
+    extra_state: Tuple[str, ...] = ()
+    broadcast_ef: bool = False
+
+    def wire_nbytes(self, c: int, n_workers: int, grad_k=None) -> int:
+        """Per-device, per-leaf update-exchange payload bytes - the
+        single source of truth, derived from the declared codec."""
+        return n_workers * self.wire_codec(grad_k).payload_nbytes(c)
+
+
+def identity_codec(grad_k=None) -> comm.Codec:
+    """Wire declaration of the uncompressed (f32 rows) modes."""
+    return comm.IdentityCodec()
 
 
 def worker_mean(rows):

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 from repro.dist import collectives as C
 from repro.dist import sharding as SH
-from repro.dist.modes.base import ModeSpec, WorkerCtx
+from repro.dist.modes.base import ModeSpec, WorkerCtx, identity_codec
 from repro.opt import engine
 
 
@@ -27,10 +27,5 @@ def make_updater(tc, ctx: WorkerCtx):
     return upd
 
 
-def wire_nbytes(c: int, n_workers: int, grad_k=None) -> int:
-    """All-reduced f32 gradient rows - no quantized wire."""
-    return n_workers * c * 4
-
-
 SPEC = ModeSpec(name="dp_adam", chunk_sharded_moments=True,
-                make_updater=make_updater, wire_nbytes=wire_nbytes)
+                make_updater=make_updater, wire_codec=identity_codec)

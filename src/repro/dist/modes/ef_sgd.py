@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import packed_nbytes
+from repro import comm
 from repro.dist import collectives as C
 from repro.dist.modes.base import ModeSpec, WorkerCtx, worker_mean
 from repro.opt import engine, grids
@@ -13,7 +13,13 @@ from repro.opt import engine, grids
 BLOCK = 256
 
 
+def wire_codec(grad_k=None) -> comm.Codec:
+    return comm.BlockwiseCodec(block=BLOCK)
+
+
 def make_updater(tc, ctx: WorkerCtx):
+    codec = wire_codec()
+
     def upd(g, m, v, e, chunk, meta, a_t, th_t, key):
         m2 = tc.beta * m + g
         de = a_t * m2 + e
@@ -23,9 +29,13 @@ def make_updater(tc, ctx: WorkerCtx):
         deq_own = grids.blockwise_dequantize(codes2d,
                                              scale_b).reshape(-1)[:n]
         e2 = de - deq_own
-        codes_rows, _ = C.exchange_packed(codes2d.reshape(-1)[:n], 2,
-                                          ctx.n_workers, ctx.worker_axes,
-                                          ctx.wsizes)
+        # wire: codec-packed 2-bit sign rows; the per-block scale
+        # side-channel is gathered whole and column-sliced below.
+        rows = comm.pad_rows(codes2d.reshape(-1)[:n], ctx.n_workers)
+        payload = comm.pack_rows(rows, codec.bits)
+        codes_rows = comm.unpack_rows(
+            C.exchange_rows(payload, ctx.worker_axes, ctx.wsizes),
+            codec.bits, meta.c)
         scales = C.gather_rows(scale_b, ctx.worker_axes)   # (nw, nb)
         elem = jnp.repeat(scales, BLOCK, axis=1)           # (nw, nb*BLOCK)
         c = meta.c
@@ -40,9 +50,5 @@ def make_updater(tc, ctx: WorkerCtx):
     return upd
 
 
-def wire_nbytes(c: int, n_workers: int, grad_k=None) -> int:
-    return n_workers * packed_nbytes(c, 2)
-
-
 SPEC = ModeSpec(name="ef_sgd", chunk_sharded_moments=False,
-                make_updater=make_updater, wire_nbytes=wire_nbytes)
+                make_updater=make_updater, wire_codec=wire_codec)

@@ -1,0 +1,30 @@
+"""Efficient-Adam-style two-way compression (Chen et al. '22, PAPERS.md):
+the paper's qadam worker channel (log-grid Q_g + worker-side EF) PLUS
+server-side error feedback on the weight-broadcast channel.
+
+The worker->server direction is exactly qadam's updater. The
+server->worker direction quantizes ``x_t + e_srv`` instead of ``x_t``
+(``e_srv`` is this server's broadcast residual for its chunk, the new
+``es`` state leaf) and carries the quantization error to the next step:
+
+    q_t     = Q_x(x_t + e_srv_t)        (what every worker computes at)
+    e_srv'  = (x_t + e_srv_t) - q_t
+
+With ``weight_k=None`` the broadcast is f32 and ``es`` stays zero, so
+the mode degenerates to qadam. The channel implementation lives in the
+step template (``repro.dist.step``), keyed off ``broadcast_ef``; with
+identical workers the whole scheme is bit-exact against a sequential
+two-way reference (``tests/dist_scripts/train_equiv_single.py``).
+
+One-line codec swaps: the broadcast codec is the registry's uniform wire
+codec, so e.g. 4-bit broadcasts (``weight_k=3``) need no new code.
+"""
+from __future__ import annotations
+
+from repro.dist.modes import qadam
+from repro.dist.modes.base import ModeSpec
+
+SPEC = ModeSpec(name="efadam", chunk_sharded_moments=False,
+                make_updater=qadam.make_updater,
+                wire_codec=qadam.wire_codec,
+                extra_state=("es",), broadcast_ef=True)

@@ -1,17 +1,28 @@
 """The paper's mode (Algorithms 2+3): Adam+EF per worker, log-grid Q_g
-codes on the update-exchange wire."""
+codes on the update-exchange wire (fused encode straight to payload
+rows - the codes never hit HBM unpacked)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.packing import packed_nbytes
+from repro import comm
 from repro.dist import collectives as C
 from repro.dist import sharding as SH
 from repro.dist.modes.base import ModeSpec, WorkerCtx, worker_mean
 from repro.opt import engine, grids
 
 
+def wire_codec(grad_k=None) -> comm.Codec:
+    """Log-grid codec packed to its lane width; identity (f32 rows) when
+    the wire is unquantized."""
+    if grad_k is None:
+        return comm.IdentityCodec()
+    return comm.LogCodec(k_g=grad_k)
+
+
 def make_updater(tc, ctx: WorkerCtx):
+    codec = wire_codec(tc.grad_k)
+
     def upd(g, m, v, e, chunk, meta, a_t, th_t, key):
         m2, v2, de = engine.adam_ef_moments(
             g, m, v, e, a_t, tc.beta, th_t, tc.eps, backend=ctx.backend)
@@ -21,27 +32,17 @@ def make_updater(tc, ctx: WorkerCtx):
             e2 = jnp.zeros_like(e)
         else:
             scale = grids.amax_scale(de)
-            codes, e2 = engine.ef_quantize(de, scale, tc.grad_k,
-                                           backend=ctx.backend)
+            payload, e2 = comm.encode_rows_ef(de, scale, codec,
+                                              ctx.n_workers,
+                                              backend=ctx.backend)
             if not tc.error_feedback:
                 e2 = jnp.zeros_like(e)
-            codes_rows, _ = C.exchange_packed(
-                codes, C.wire_bits_for_log(tc.grad_k), ctx.n_workers,
-                ctx.worker_axes, ctx.wsizes)
-            scales = C.gather_rows(scale, ctx.worker_axes)
-            recv = grids.log_dequantize(codes_rows, scales[:, None],
-                                        tc.grad_k)
+            recv = C.exchange_decode(payload, scale, codec, meta.c,
+                                     ctx.worker_axes, ctx.wsizes,
+                                     backend=ctx.backend)
         return chunk - worker_mean(recv), m2, v2, e2
     return upd
 
 
-def wire_nbytes(c: int, n_workers: int, grad_k=None) -> int:
-    """Log-grid codes packed to wire_bits_for_log(grad_k); f32 rows when
-    the wire is unquantized."""
-    if grad_k is None:
-        return n_workers * c * 4
-    return n_workers * packed_nbytes(c, C.wire_bits_for_log(grad_k))
-
-
 SPEC = ModeSpec(name="qadam", chunk_sharded_moments=False,
-                make_updater=make_updater, wire_nbytes=wire_nbytes)
+                make_updater=make_updater, wire_codec=wire_codec)

@@ -2,26 +2,27 @@
 2-bit codes on the wire, no error feedback."""
 from __future__ import annotations
 
-from repro.core.packing import packed_nbytes
+from repro import comm
 from repro.dist import collectives as C
 from repro.dist.modes.base import ModeSpec, WorkerCtx, worker_mean
-from repro.opt import engine, grids
+
+
+def wire_codec(grad_k=None) -> comm.Codec:
+    return comm.TernaryCodec()
 
 
 def make_updater(tc, ctx: WorkerCtx):
+    codec = wire_codec()
+
     def upd(g, m, v, e, chunk, meta, a_t, th_t, key):
-        codes, scale = engine.quantize_ternary(g, key, backend=ctx.backend)
-        codes_rows, _ = C.exchange_packed(codes, 2, ctx.n_workers,
-                                          ctx.worker_axes, ctx.wsizes)
-        scales = C.gather_rows(scale, ctx.worker_axes)
-        recv = grids.ternary_dequantize(codes_rows, scales[:, None])
+        payload, scale = comm.encode_rows(g, codec, ctx.n_workers,
+                                          key=key, backend=ctx.backend)
+        recv = C.exchange_decode(payload, scale, codec, meta.c,
+                                 ctx.worker_axes, ctx.wsizes,
+                                 backend=ctx.backend)
         return chunk - a_t * worker_mean(recv), m, v, e
     return upd
 
 
-def wire_nbytes(c: int, n_workers: int, grad_k=None) -> int:
-    return n_workers * packed_nbytes(c, 2)
-
-
 SPEC = ModeSpec(name="terngrad", chunk_sharded_moments=False,
-                make_updater=make_updater, wire_nbytes=wire_nbytes)
+                make_updater=make_updater, wire_codec=wire_codec)

@@ -43,12 +43,12 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import comm
 from repro.core.qadam import QAdamConfig, _alpha_t, _theta_t
 from repro.dist import sharding as SH
 from repro.dist import collectives as C
 from repro.dist.modes import WorkerCtx, get_mode
 from repro.models.layers import ShardCtx
-from repro.opt import grids
 
 MODEL_AXIS = "model"
 
@@ -134,6 +134,16 @@ class StepArtifacts(NamedTuple):
     config: Any
 
 
+def weight_wire_codec(tc, full_numel: int) -> comm.Codec:
+    """The weight-broadcast channel's codec for one leaf - THE source of
+    truth for what moves on channel 2 (``comm_bytes_per_step`` and the
+    dryrun accounting read the same function). Small / unquantized
+    leaves ride f32 (identity)."""
+    if tc.weight_k is None or full_numel < tc.weight_q_min_numel:
+        return comm.IdentityCodec()
+    return comm.uniform_wire_codec(tc.weight_k, tc.weight_absolute)
+
+
 def _exchange_buckets(metas_flat, mode, tc, n_workers):
     """Group consecutive leaves into wire buckets of about
     ``tc.exchange_bucket_bytes`` payload each. Each bucket gets its own
@@ -153,6 +163,41 @@ def _exchange_buckets(metas_flat, mode, tc, n_workers):
     if cur:
         buckets.append(cur)
     return buckets
+
+
+def state_template(art: StepArtifacts):
+    """Sharded ShapeDtypeStructs of ``art.init_state``'s output - the one
+    description of the chunked state layout (master/m/v/e plus the
+    mode's ``extra_state``) that dryrun lowering, resume plumbing and
+    tests consume instead of hand-reconstructing shapes."""
+    tc = art.config
+    mode = get_mode(tc.mode)
+    ms = dict(zip(art.mesh.axis_names, art.mesh.devices.shape))
+    Nm = int(ms.get(MODEL_AXIS, 1))
+    wdims = tuple(ms[a] for a in art.worker_axes)
+    spec = P(*art.worker_axes, MODEL_AXIS, None) if MODEL_AXIS in ms \
+        else P(*art.worker_axes, None, None)
+    sh = NamedSharding(art.mesh, spec)
+    metas = _leaf_meta(art.layout, art.n_workers)
+
+    def sds(meta, x):
+        return jax.ShapeDtypeStruct(wdims + (Nm, x), jnp.float32,
+                                    sharding=sh)
+
+    def tree(xfn):
+        return jax.tree.map(lambda _, m: sds(m, xfn(m)),
+                            art.layout._leaves, metas)
+
+    moment_x = (lambda m: m.c) if mode.chunk_sharded_moments \
+        else (lambda m: m.numel)
+    state = {"master": tree(lambda m: m.c)}
+    for k in ("m", "v", "e"):
+        state[k] = tree(moment_x)
+    for k in mode.extra_state:
+        state[k] = tree(lambda m: m.c)
+    state["count"] = jax.ShapeDtypeStruct(
+        (), jnp.int32, sharding=NamedSharding(art.mesh, P()))
+    return state
 
 
 def batch_shardings(art: StepArtifacts, batch, stacked: bool = False):
@@ -300,7 +345,7 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
         params = model.init(key)
         p_flat = treedef.flatten_up_to(params)
         sh = NamedSharding(mesh, state_spec)
-        master, zs = [], []
+        master, zs, chunk_zs = [], [], []
         for p, meta in zip(p_flat, metas_flat):
             rows = [SH.flatten_pad(
                 SH.shard_of(p, meta.dim, meta.stacked, Nm, mi)
@@ -311,33 +356,44 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
                 arr.reshape(wsizes + (Nm, meta.c)), sh))
             # m/v/e exist for every mode even where unused (terngrad
             # reads none, ef_sgd skips v): the chunked state layout is a
-            # fixed contract with repro.launch.dryrun's analytic state
-            # reconstruction and with checkpoint round-trips.
+            # fixed contract with repro.launch.dryrun (state_template)
+            # and with checkpoint round-trips.
             zs.append(jax.device_put(
                 jnp.zeros(wsizes + (Nm, _state_x(meta)), jnp.float32), sh))
+            chunk_zs.append(jax.device_put(
+                jnp.zeros(wsizes + (Nm, meta.c), jnp.float32), sh))
         mtree = jax.tree_util.tree_unflatten(treedef, master)
         ztree = jax.tree_util.tree_unflatten(treedef, zs)
-        zero = lambda: jax.tree.map(jnp.copy, ztree)
-        return {"master": mtree, "m": zero(), "v": zero(), "e": zero(),
-                "count": jax.device_put(jnp.zeros((), jnp.int32),
-                                        NamedSharding(mesh, P()))}
+        ctree = jax.tree_util.tree_unflatten(treedef, chunk_zs)
+        zero = lambda t: jax.tree.map(jnp.copy, t)
+        state = {"master": mtree, "m": zero(ztree), "v": zero(ztree),
+                 "e": zero(ztree),
+                 "count": jax.device_put(jnp.zeros((), jnp.int32),
+                                         NamedSharding(mesh, P()))}
+        for k in mode.extra_state:   # efadam: server broadcast residual
+            state[k] = zero(ctree)
+        return state
 
     # ---------------- weight-broadcast channel ----------------
-    def chunks_to_shard(chunk, meta):
-        """My master chunk -> full f32 shard (Q_x wire when quantized)."""
-        quantized = (tc.weight_k is not None
-                     and meta.full_numel >= tc.weight_q_min_numel)
-        if quantized:
-            scale = jnp.float32(0.5) if tc.weight_absolute \
-                else grids.amax_scale(chunk)
-            codes = C.uniform_wire_codes(chunk, scale, tc.weight_k)
-            codes_rows = C.broadcast_packed(codes, worker_axes)
-            scales = C.gather_rows(scale, worker_axes)       # (n_workers,)
-            rows = grids.uniform_dequantize(codes_rows, scales[:, None],
-                                            tc.weight_k)
-        else:
+    def chunks_to_shard(chunk, meta, es=None):
+        """My master chunk -> full f32 shard over the codec wire.
+
+        With ``es`` (the ``broadcast_ef`` modes), the server sends
+        ``Q(chunk + es)`` and keeps the residual; the returned es' feeds
+        the next step. Identity-codec leaves broadcast f32 rows (their
+        residual is exactly zero)."""
+        codec = weight_wire_codec(tc, meta.full_numel)
+        if isinstance(codec, comm.IdentityCodec):
             rows = C.gather_rows(chunk, worker_axes)
-        return SH.unflatten_chunked(rows, meta.shp)
+            return SH.unflatten_chunked(rows, meta.shp), es
+        send = chunk if es is None else chunk + es
+        scale = codec.compute_scale(send)
+        payload, e_new = comm.encode_rows_ef(send, scale, codec, 1,
+                                             backend=tc.engine_backend)
+        rows = C.broadcast_decode(payload[0], scale, codec, meta.c,
+                                  worker_axes, backend=tc.engine_backend)
+        return (SH.unflatten_chunked(rows, meta.shp),
+                e_new if es is not None else None)
 
     # ---------------- the sharded step ----------------
     def _impl(state, batch, cp: bool):
@@ -353,8 +409,19 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
         a_t = _alpha_t(qcfg, t)
         th_t = _theta_t(qcfg, t)
 
-        # 1. weight broadcast: chunks -> Q_x(x_t) shards
-        xs = [chunks_to_shard(ch, m) for ch, m in zip(masters, metas_flat)]
+        # 1. weight broadcast: chunks -> Q_x(x_t) shards. broadcast_ef
+        # modes thread the per-chunk server residual through the codec.
+        if mode.broadcast_ef:
+            srv = [x.reshape(m.c) for x, m in
+                   zip(treedef.flatten_up_to(state["es"]), metas_flat)]
+            pairs = [chunks_to_shard(ch, m, es)
+                     for ch, m, es in zip(masters, metas_flat, srv)]
+            new_es = [p[1] for p in pairs]
+        else:
+            pairs = [chunks_to_shard(ch, m)
+                     for ch, m in zip(masters, metas_flat)]
+            new_es = None
+        xs = [p[0] for p in pairs]
         # fence the forward/backward off from the channel/update code so
         # XLA compiles it like a standalone value_and_grad: its float
         # rounding then matches the single-machine reference path instead
@@ -431,6 +498,11 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
         unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
         new_state = {"master": unf(new_m), "m": unf(new_mm),
                      "v": unf(new_vv), "e": unf(new_ee), "count": t}
+        if mode.broadcast_ef:
+            lead = (1,) * (len(worker_axes) + 1)
+            new_state["es"] = unf([
+                es.reshape(lead + (m.c,))
+                for es, m in zip(new_es, metas_flat)])
         return new_state, {"loss": loss}
 
     def step_fn(state, batch):
@@ -439,7 +511,7 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
         sspec = {"master": jax.tree.map(lambda _: state_spec,
                                         layout._leaves),
                  "count": P()}
-        for k in ("m", "v", "e"):
+        for k in ("m", "v", "e") + mode.extra_state:
             sspec[k] = jax.tree.map(lambda _: state_spec, layout._leaves)
         bspec = _batch_specs(batch, Wb, cp)
         fn = shard_map(functools.partial(_impl, cp=cp), mesh=mesh,

@@ -1,59 +1,24 @@
-"""Pallas kernel: fused 4-bit pack/unpack of log-grid codes.
+"""Pallas pack/unpack kernels - thin shim over ``repro.comm.kernels``.
 
-The channel-1 wire carries two signed nibbles per byte (repro.core.packing
-semantics). On TPU this is a VPU shuffle over (rows,128) tiles: the packed
-layout interleaves along the last dim so each lane reads its pair locally.
-Validated against core.packing in interpret mode.
+The generic lane packer there covers 2/3/4/6/8/16-bit widths in the same
+byte layout; ``pack4_pallas``/``unpack4_pallas`` keep the historical
+4-bit surface (two signed nibbles per byte, ``repro.core.packing``
+semantics) used by the kernel tests.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.comm.kernels import pack_pallas, unpack_pallas  # noqa: F401
 
 BLOCK_ROWS = 256
 LANES = 128
 
 
-def _pack4_kernel(codes_ref, packed_ref):
-    c = codes_ref[...].astype(jnp.int32) + 8          # (R, 2*LANES) biased
-    lo = c[:, 0::2]
-    hi = c[:, 1::2]
-    packed_ref[...] = (lo | (hi << 4)).astype(jnp.uint8)
-
-
 def pack4_pallas(codes2d: jax.Array, *, interpret: bool) -> jax.Array:
     """codes2d: int8 (R, 256) with values in [-8, 7] -> uint8 (R, 128)."""
-    rows = codes2d.shape[0]
-    grid = rows // BLOCK_ROWS
-    return pl.pallas_call(
-        _pack4_kernel,
-        grid=(grid,),
-        in_specs=[pl.BlockSpec((BLOCK_ROWS, 2 * LANES), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.uint8),
-        interpret=interpret,
-    )(codes2d)
-
-
-def _unpack4_kernel(packed_ref, codes_ref):
-    u = packed_ref[...].astype(jnp.int32)             # (R, LANES)
-    lo = (u & 0xF) - 8
-    hi = ((u >> 4) & 0xF) - 8
-    out = jnp.zeros(codes_ref.shape, jnp.int32)
-    out = out.at[:, 0::2].set(lo)
-    out = out.at[:, 1::2].set(hi)
-    codes_ref[...] = out.astype(jnp.int8)
+    return pack_pallas(codes2d, 4, interpret=interpret)
 
 
 def unpack4_pallas(packed2d: jax.Array, *, interpret: bool) -> jax.Array:
-    rows = packed2d.shape[0]
-    grid = rows // BLOCK_ROWS
-    return pl.pallas_call(
-        _unpack4_kernel,
-        grid=(grid,),
-        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, 2 * LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, 2 * LANES), jnp.int8),
-        interpret=interpret,
-    )(packed2d)
+    return unpack_pallas(packed2d, 4, interpret=interpret)

@@ -1,196 +1,21 @@
-"""Pallas TPU kernels: amax reduction + grid quantization (log / uniform /
-ternary / blockwise sign).
+"""Pallas quantization kernels - thin shim.
 
-TPU adaptation notes (vs the paper's CUDA-free formulation):
-  * These are VPU (vector unit) kernels - no MXU involvement. Blocks are
-    (BLOCK_ROWS, 128): the last dim matches the 128-lane VREG layout, rows
-    a multiple of 8 (f32 sublane) so every load is a full tile.
-  * Two-pass scheme: pass 1 tiles the tensor and emits one partial amax per
-    grid step into SMEM-resident (grid,) vector; the tiny final max happens
-    in XLA. Pass 2 re-streams the tensor and writes integer codes. This is
-    the standard TPU pattern for data-dependent scales (one HBM round-trip
-    per pass; fusing the passes would require keeping the whole tensor in
-    VMEM).
-  * exp2/log2 are VPU-native (transcendental unit), so the log-grid math
-    runs at full vector throughput.
-
-Every kernel body calls the canonical grid math in ``repro.opt.grids`` on
-its VMEM-resident tile - the kernels *cannot* drift from the jnp backend,
-which is what makes the engine's exact-parity contract
-(``tests/test_opt_engine.py``) hold by construction.
+The kernels live in ``repro.comm.kernels`` (the codec stack owns every
+quantize/pack pass, fused and unfused); this module re-exports the
+historical per-op surface the engine and kernel tests drive. See
+``repro.comm`` for the fused single-launch encode/decode paths.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-from repro.opt import grids
-
-BLOCK_ROWS = 256
-LANES = 128
-
-
-def _amax_kernel(x_ref, o_ref):
-    o_ref[0] = grids.block_amax(x_ref[...])
-
-
-def amax_pallas(x2d: jax.Array, *, interpret: bool) -> jax.Array:
-    """Per-block amax -> (grid,) partials. x2d: (R, 128), R % BLOCK_ROWS == 0."""
-    rows = x2d.shape[0]
-    grid = rows // BLOCK_ROWS
-    partials = pl.pallas_call(
-        _amax_kernel,
-        grid=(grid,),
-        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((grid,), jnp.float32),
-        interpret=interpret,
-    )(x2d)
-    return jnp.max(partials)
-
-
-def _log_quantize_kernel(x_ref, scale_ref, codes_ref, *, k_g: int):
-    codes_ref[...] = grids.log_quantize(x_ref[...], scale_ref[0], k_g)
-
-
-def log_quantize_pallas(x2d: jax.Array, scale: jax.Array, k_g: int,
-                        *, interpret: bool) -> jax.Array:
-    rows = x2d.shape[0]
-    grid = rows // BLOCK_ROWS
-    return pl.pallas_call(
-        functools.partial(_log_quantize_kernel, k_g=k_g),
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int8),
-        interpret=interpret,
-    )(x2d, scale.reshape(1))
-
-
-def _log_dequantize_kernel(codes_ref, scale_ref, o_ref, *, k_g: int,
-                           out_dtype):
-    o_ref[...] = grids.log_dequantize(
-        codes_ref[...], scale_ref[0], k_g).astype(out_dtype)
-
-
-def log_dequantize_pallas(codes2d: jax.Array, scale: jax.Array, k_g: int,
-                          *, out_dtype=jnp.float32, interpret: bool) -> jax.Array:
-    rows = codes2d.shape[0]
-    grid = rows // BLOCK_ROWS
-    return pl.pallas_call(
-        functools.partial(_log_dequantize_kernel, k_g=k_g, out_dtype=out_dtype),
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), out_dtype),
-        interpret=interpret,
-    )(codes2d, scale.reshape(1))
-
-
-def _uniform_quantize_kernel(x_ref, scale_ref, codes_ref, *, k_x: int):
-    codes_ref[...] = grids.uniform_quantize(x_ref[...], scale_ref[0], k_x)
-
-
-def uniform_quantize_pallas(x2d: jax.Array, scale: jax.Array, k_x: int,
-                            *, interpret: bool) -> jax.Array:
-    """Codes dtype follows the grid width: int8 for k_x <= 6, int16 above
-    (codes reach +/- 2^k_x, which overflows int8 at k_x = 7)."""
-    rows = x2d.shape[0]
-    grid = rows // BLOCK_ROWS
-    return pl.pallas_call(
-        functools.partial(_uniform_quantize_kernel, k_x=k_x),
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, LANES),
-                                       grids.uniform_code_dtype(k_x)),
-        interpret=interpret,
-    )(x2d, scale.reshape(1))
-
-
-def _uniform_dequantize_kernel(codes_ref, scale_ref, o_ref, *, k_x: int,
-                               out_dtype):
-    o_ref[...] = grids.uniform_dequantize(
-        codes_ref[...], scale_ref[0], k_x).astype(out_dtype)
-
-
-def uniform_dequantize_pallas(codes2d: jax.Array, scale: jax.Array, k_x: int,
-                              *, out_dtype=jnp.float32,
-                              interpret: bool) -> jax.Array:
-    rows = codes2d.shape[0]
-    grid = rows // BLOCK_ROWS
-    return pl.pallas_call(
-        functools.partial(_uniform_dequantize_kernel, k_x=k_x,
-                          out_dtype=out_dtype),
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), out_dtype),
-        interpret=interpret,
-    )(codes2d, scale.reshape(1))
-
-
-def _ternary_quantize_kernel(x_ref, u_ref, scale_ref, codes_ref):
-    codes_ref[...] = grids.ternary_quantize(x_ref[...], u_ref[...],
-                                            scale_ref[0])
-
-
-def ternary_quantize_pallas(x2d: jax.Array, u2d: jax.Array,
-                            scale: jax.Array, *, interpret: bool) -> jax.Array:
-    """TernGrad codes from pre-drawn uniforms (stochastic rounding bits are
-    generated outside so the jnp backend sees identical draws)."""
-    rows = x2d.shape[0]
-    grid = rows // BLOCK_ROWS
-    blk = lambda: pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
-    return pl.pallas_call(
-        _ternary_quantize_kernel,
-        grid=(grid,),
-        in_specs=[blk(), blk(), pl.BlockSpec((1,), lambda i: (0,))],
-        out_specs=blk(),
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int8),
-        interpret=interpret,
-    )(x2d, u2d, scale.reshape(1))
-
-
-# Blockwise rows processed per grid step (f32 sublane multiple).
-BLOCKWISE_ROWS = 8
-
-
-def _blockwise_quantize_kernel(x_ref, codes_ref, scale_ref):
-    codes, scale = grids.blockwise_quantize(x_ref[...])
-    codes_ref[...] = codes
-    scale_ref[...] = scale
-
-
-def blockwise_quantize_pallas(x2d: jax.Array, *, interpret: bool):
-    """(nb, block) -> (sign codes, per-block scales). The block dim rides
-    the lane axis whole (one EF block per sublane row); nb must be a
-    multiple of BLOCKWISE_ROWS (the engine pads with zero rows)."""
-    nb, block = x2d.shape
-    grid = nb // BLOCKWISE_ROWS
-    codes, scales = pl.pallas_call(
-        _blockwise_quantize_kernel,
-        grid=(grid,),
-        in_specs=[pl.BlockSpec((BLOCKWISE_ROWS, block), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((BLOCKWISE_ROWS, block), lambda i: (i, 0)),
-                   pl.BlockSpec((BLOCKWISE_ROWS,), lambda i: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.int8),
-                   jax.ShapeDtypeStruct((nb,), jnp.float32)],
-        interpret=interpret,
-    )(x2d)
-    return codes, scales
+from repro.comm.kernels import (  # noqa: F401
+    BLOCK_ROWS,
+    BLOCKWISE_ROWS,
+    LANES,
+    amax_pallas,
+    blockwise_quantize_pallas,
+    log_dequantize_pallas,
+    log_quantize_pallas,
+    ternary_quantize_pallas,
+    uniform_dequantize_pallas,
+    uniform_quantize_pallas,
+)

@@ -179,14 +179,14 @@ def _batch_sds(cfg, gbatch, seq, enc_seq, sds, Wb):
 
 
 def _lower_one(cfg, kind, mesh, gbatch, seq, enc_seq, W, batch_shardable,
-               train_overrides):
+               train_overrides, train_art=None):
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.models.model import Model
     from repro.dist.serve import make_serve_step
     from repro.dist.step import (make_train_step, TrainConfig, ServeConfig,
-                                 _leaf_meta)
+                                 state_template)
 
     model = Model(cfg)
     ms = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -198,21 +198,16 @@ def _lower_one(cfg, kind, mesh, gbatch, seq, enc_seq, W, batch_shardable,
                                     sharding=NamedSharding(mesh, spec))
 
     if kind == "train":
-        tc = TrainConfig(worker_axes=W, **(train_overrides or {}))
-        art = make_train_step(model, mesh, tc)
-        metas = _leaf_meta(art.layout, art.n_workers)
-        wdims = tuple(ms[a] for a in art.worker_axes)
-        spec = P(*art.worker_axes, "model", None)
-        mtree = jax.tree.map(
-            lambda l, m: sds(wdims + (Nm, m.c), jnp.float32, spec),
-            art.layout._leaves, metas)
-        ztree = jax.tree.map(
-            lambda l, m: sds(
-                wdims + (Nm, m.c if tc.mode == "dp_adam"
-                         else int(np.prod(m.shp))), jnp.float32, spec),
-            art.layout._leaves, metas)
-        state = {"master": mtree, "m": ztree, "v": ztree, "e": ztree,
-                 "count": jax.ShapeDtypeStruct((), jnp.int32)}
+        # build_and_compile pre-builds the artifacts for its codec
+        # accounting; the calibration re-lowerings (modified n_layers)
+        # build their own
+        art = train_art
+        if art is None:
+            tc = TrainConfig(worker_axes=W, **(train_overrides or {}))
+            art = make_train_step(model, mesh, tc)
+        # the chunked state layout (incl. per-mode extra leaves) comes
+        # from one place - no hand-reconstruction of shapes here
+        state = state_template(art)
         batch = _batch_sds(cfg, gbatch, seq, enc_seq, sds, Wb)
         return jax.jit(art.step_fn).lower(state, batch)
 
@@ -320,8 +315,22 @@ def build_and_compile(arch: str, shape_name: str, multi_pod: bool,
               "n_devices": n_dev, "skipped": False,
               "seq": seq, "global_batch": gbatch}
 
+    train_art = None
+    if kind == "train":
+        # analytic wire accounting from the codec registry (the same
+        # single source of truth as train.loop.comm_bytes_per_step),
+        # recorded next to the HLO-parsed collective bytes; the same
+        # artifacts feed the main lowering below.
+        from repro.models.model import Model
+        from repro.dist.step import make_train_step, TrainConfig
+        from repro.train.loop import comm_bytes_per_step
+        tc = TrainConfig(worker_axes=W, **(train_overrides or {}))
+        train_art = make_train_step(Model(cfg), mesh, tc)
+        result["comm_accounting"] = comm_bytes_per_step(train_art, tc)
+
     lowered = _lower_one(cfg, kind, mesh, gbatch, seq, enc_seq, W,
-                         batch_shardable, train_overrides)
+                         batch_shardable, train_overrides,
+                         train_art=train_art)
     t_lower = time.time()
     compiled = lowered.compile()
     t_compile = time.time()

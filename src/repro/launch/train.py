@@ -49,7 +49,8 @@ def main():
                     help="int8 FSDP gather bits (beyond-paper), 0=off")
     ap.add_argument("--no-ef", action="store_true")
     ap.add_argument("--mode", default="qadam",
-                    choices=["qadam", "dp_adam", "terngrad", "ef_sgd"])
+                    choices=["qadam", "efadam", "dp_adam", "terngrad",
+                             "ef_sgd"])
     ap.add_argument("--scan-chunk", type=int, default=1,
                     help=">1: lax.scan this many steps per compiled call")
     ap.add_argument("--prefetch", type=int, default=2,
@@ -59,6 +60,9 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-keep", type=int, default=3,
                     help="versioned checkpoints kept (keep-last-N)")
+    ap.add_argument("--ckpt-codec", default=None,
+                    help="repro.comm codec spec for compressed moment "
+                         "snapshots, e.g. uniform_amax:7:w8 (lossy)")
     ap.add_argument("--resume", action="store_true",
                     help="restore the newest checkpoint under --ckpt-dir")
     ap.add_argument("--seed", type=int, default=0)
@@ -99,6 +103,7 @@ def main():
                               seed=args.seed)
     sc = SessionConfig(log_every=args.log_every, ckpt_every=args.ckpt_every,
                        ckpt_dir=args.ckpt_dir, ckpt_keep=args.ckpt_keep,
+                       ckpt_codec=args.ckpt_codec,
                        scan_chunk=args.scan_chunk, prefetch=args.prefetch)
     sess = TrainSession.from_artifacts(art, batches, sc,
                                        key=jax.random.PRNGKey(args.seed))

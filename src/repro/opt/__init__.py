@@ -7,6 +7,19 @@
   multistep - compat re-export of the lax.scan-chunked, buffer-donating
               step builders (canonical home: repro.train.session, whose
               TrainSession owns the full training loop)
+
+``engine`` is imported lazily (PEP 562): the ``repro.comm`` kernel stack
+sits between ``grids`` and ``engine`` (grids -> comm -> engine), so an
+eager import here would close an import cycle when comm pulls grids.
 """
-from repro.opt import grids, engine  # noqa: F401
-from repro.opt.engine import resolve_backend  # noqa: F401
+from repro.opt import grids  # noqa: F401
+
+
+def __getattr__(name):
+    if name in ("engine", "multistep"):
+        import importlib
+        return importlib.import_module(f"repro.opt.{name}")
+    if name == "resolve_backend":
+        from repro.opt.engine import resolve_backend
+        return resolve_backend
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

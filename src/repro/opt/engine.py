@@ -29,12 +29,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.opt import grids
+from repro.comm.codec import BACKENDS, resolve_backend as _resolve
 from repro.kernels import quantize as qk
 from repro.kernels import adam_ef as ak
 
 TILE = qk.BLOCK_ROWS * qk.LANES
-
-BACKENDS = ("jnp", "pallas")
 
 
 def _interpret() -> bool:
@@ -42,17 +41,9 @@ def _interpret() -> bool:
 
 
 def resolve_backend(backend: Optional[str], numel: Optional[int] = None) -> str:
-    """Auto: Pallas on TPU when the tensor fills at least one tile
-    (padding overhead dominates below that), jnp otherwise. An explicit
-    ``backend=`` always wins - "pallas" off TPU runs in interpret mode."""
-    if backend is not None:
-        if backend not in BACKENDS:
-            raise ValueError(f"unknown backend {backend!r}; "
-                             f"expected one of {BACKENDS}")
-        return backend
-    if jax.default_backend() == "tpu" and (numel is None or numel >= TILE):
-        return "pallas"
-    return "jnp"
+    """Auto backend policy - one definition, in ``repro.comm.codec``;
+    the engine's tile threshold is its own (BLOCK_ROWS x LANES)."""
+    return _resolve(backend, numel, tile=TILE)
 
 
 def _to_tiles(x: jax.Array) -> Tuple[jax.Array, int]:

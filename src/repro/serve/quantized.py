@@ -6,8 +6,9 @@ back in fp32 - zero actual memory saved. This module keeps the integer
 codes themselves resident:
 
   * ``quantize_params(params, k_x)`` replaces every large float leaf with a
-    :class:`QuantizedLeaf` - int8 codes (int16 above k_x=6, 4-bit packed
-    below k_x=3 via ``repro.core.packing``) plus f32 scales. Scan-stacked
+    :class:`QuantizedLeaf` - integer codes (int16 above k_x=6; packed to
+    the registry codec's 3/4/6-bit lanes with ``pack=True``) plus f32
+    scales. Scan-stacked
     ``blocks`` leaves get one amax scale *per layer* (shape ``(L,)``), so
     ``lax.scan`` slices codes and scale together and each layer dequantizes
     independently.
@@ -17,8 +18,10 @@ codes themselves resident:
     codes (``params_nbytes`` measures it: ~fp32/4 at k_x<=6).
 
 Quantization itself goes through ``repro.opt.engine`` (Pallas kernels on
-TPU, the same ``repro.opt.grids`` math everywhere else), so resident codes
-match the training/wire codecs bit-for-bit.
+TPU, the same ``repro.opt.grids`` math everywhere else), and the packed
+layout + lane width come from the ``repro.comm`` codec registry - so
+resident payloads match the training/wire codecs bit-for-bit, and every
+lane the registry packs (3/4/6-bit) is a residency option for free.
 """
 from __future__ import annotations
 
@@ -28,7 +31,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.dist.collectives import pack_rows, unpack_rows
+from repro import comm
 from repro.opt import engine, grids
 
 _STACKED_KEYS = ("blocks", "enc_blocks")
@@ -40,8 +43,9 @@ class QuantizedLeaf:
     """One parameter tensor held as integer codes + scales.
 
     codes: integer codes with the leaf's logical shape; when ``pack_bits``
-        is set, uint8 with the last dim holding ``pack_bits``-bit fields
-        (``repro.core.packing`` layout, per leading row).
+        is set, uint8 with the last dim holding ``pack_bits``-bit lanes
+        (``repro.comm.bits`` layout, per leading row - the same bytes
+        the dist wire ships).
     scale: f32 scalar (per-tensor) or (L,) per-layer for stacked leaves.
         ``lax.scan`` slices it alongside the codes.
     """
@@ -77,7 +81,7 @@ class QuantizedLeaf:
             lead = codes.shape[:-1]
             flat = codes.reshape((-1, codes.shape[-1]))
             numel = self.shape[-1]  # logical last-dim length
-            rows = unpack_rows(flat, self.pack_bits, numel)
+            rows = comm.unpack_rows(flat, self.pack_bits, numel)
             codes = rows.reshape(lead + (numel,))
         scale = self.scale
         if scale.ndim:
@@ -107,14 +111,15 @@ def _quantize_leaf(p: jax.Array, k_x: int, absolute: bool, per_layer: bool,
             lambda xl: engine.quantize_uniform(xl, k_x, absolute=absolute))(x)
     else:
         codes, scale = engine.quantize_uniform(x, k_x, absolute=absolute)
+    # the registry's exact (unclipped) lane for this grid: 3/4/6-bit
+    # lanes below int8 are worth packing, 8/16-bit codes stay as-is
+    codec = comm.UniformCodec(k_x=k_x, absolute=absolute)
     pack_bits = 0
-    if pack and k_x <= 2:
-        # codes live in [-2^k_x, 2^k_x] (+/-4 at k_x=2): 4-bit fields hold
-        # them; two codes per byte along the last dim, per leading row
-        # (the same row-wise layout the dist wire ships).
-        pack_bits = 4
+    if pack and codec.bits < 8:
+        pack_bits = codec.bits
         lead = codes.shape[:-1]
-        rows = pack_rows(codes.reshape((-1, codes.shape[-1])), pack_bits)
+        rows = comm.pack_rows(codes.reshape((-1, codes.shape[-1])),
+                              pack_bits)
         codes = rows.reshape(lead + (rows.shape[-1],))
     return QuantizedLeaf(codes=codes, scale=scale, k_x=k_x,
                          shape=tuple(p.shape), dtype=jnp.dtype(p.dtype).name,

@@ -16,9 +16,9 @@ from typing import Callable, Dict, Iterator, Optional
 import jax
 import numpy as np
 
-from repro.dist import collectives as C
 from repro.dist.modes import get_mode
-from repro.dist.step import StepArtifacts, TrainConfig, _leaf_meta
+from repro.dist.step import (StepArtifacts, TrainConfig, _leaf_meta,
+                             weight_wire_codec)
 from repro.train.session import SessionConfig, TrainSession
 
 
@@ -39,13 +39,15 @@ class LoopConfig:
 
 def comm_bytes_per_step(art: StepArtifacts, tc: TrainConfig) -> Dict[str, float]:
     """Per-device *code* payload bytes of the two quantized worker
-    channels (the paper's 'Comm' column). Sums, over parameter leaves,
-    the packed uint8 payload each device touches per step - the mode's
-    own ``wire_nbytes`` plus the weight-broadcast arithmetic the wire in
-    ``repro.dist.collectives`` performs, so tests can assert the figures
-    agree byte-for-byte (``tests/test_comm_accounting.py``). The f32
-    scale side-channels (one scalar per leaf per worker; per-256-block
-    for ef_sgd, ~6% of its 2-bit payload) are excluded."""
+    channels (the paper's 'Comm' column), sourced entirely from the
+    ``repro.comm`` codec registry: per leaf, the mode's declared
+    update-exchange codec (``ModeSpec.wire_nbytes``) plus the
+    weight-broadcast codec (``dist.step.weight_wire_codec``). Tests
+    assert the figures agree byte-for-byte with the packed payload
+    arrays the collectives actually move
+    (``tests/test_comm_accounting.py``). The f32 scale side-channels
+    (one scalar per leaf per worker; per-256-block for ef_sgd, ~6% of
+    its 2-bit payload) are excluded."""
     mode = get_mode(tc.mode)
     metas = _leaf_meta(art.layout, art.n_workers)
     leaves = jax.tree.leaves(
@@ -53,9 +55,9 @@ def comm_bytes_per_step(art: StepArtifacts, tc: TrainConfig) -> Dict[str, float]
     shard_numel = sum(int(np.prod(m.shp)) for m in leaves)
     a2a = sum(mode.wire_nbytes(m.c, art.n_workers, tc.grad_k)
               for m in leaves)
-    bcast = sum(C.weight_broadcast_nbytes(
-        m.c, art.n_workers, m.full_numel, tc.weight_k,
-        tc.weight_q_min_numel) for m in leaves)
+    bcast = sum(
+        art.n_workers * weight_wire_codec(tc, m.full_numel).payload_nbytes(m.c)
+        for m in leaves)
     return {"update_exchange_bytes": a2a, "weight_broadcast_bytes": bcast,
             "total_bytes": a2a + bcast, "shard_params": shard_numel}
 

@@ -61,6 +61,10 @@ class SessionConfig:
     ckpt_dir: Optional[str] = None
     ckpt_keep: int = 3         # keep-last-N versioned checkpoints
     ckpt_async: bool = True    # background writer thread
+    # repro.comm codec spec for compressed optimizer-moment snapshots
+    # (e.g. "uniform_amax:7:w8"); None = raw f32. Master weights and
+    # counters always stay exact; see repro.checkpoint.store.
+    ckpt_codec: Optional[str] = None
     scan_chunk: int = 1        # K steps per compiled dispatch
     prefetch: int = 2          # staged batches in flight; 0 = synchronous
     check_finite: bool = True  # raise on non-finite harvested loss
@@ -416,7 +420,8 @@ class TrainSession:
                         return
                     tree, step, extra = item
                     store.save(self.cfg.ckpt_dir, tree, step=step,
-                               keep=self.cfg.ckpt_keep, extra=extra)
+                               keep=self.cfg.ckpt_keep, extra=extra,
+                               codec=self.cfg.ckpt_codec)
                 except BaseException as e:   # re-raised on the main thread
                     self._ckpt_err = e
                 finally:
@@ -448,7 +453,8 @@ class TrainSession:
             self._ckpt_q.put((tree, step, extra))
         else:
             store.save(self.cfg.ckpt_dir, tree, step=step,
-                       keep=self.cfg.ckpt_keep, extra=extra)
+                       keep=self.cfg.ckpt_keep, extra=extra,
+                       codec=self.cfg.ckpt_codec)
 
     def wait_for_checkpoints(self):
         """Block until every queued async checkpoint hit disk."""

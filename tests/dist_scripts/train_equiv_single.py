@@ -81,4 +81,79 @@ err = jax.tree.map(lambda a, b: float(np.max(np.abs(np.asarray(a) - np.asarray(b
 max_err = max(jax.tree.leaves(err))
 print("max param err vs Algorithm 1:", max_err)
 assert max_err < 5e-5, max_err
+
+# ---------------------------------------------------------------------------
+# efadam: two-way compression. Same identical-worker protocol; the
+# sequential reference adds server-side error feedback on the weight
+# channel: q_t = Q_x(x_t + es_t), es' = (x_t + es_t) - q_t, fwd/bwd at
+# q_t. Both sides quantize through the SAME registry codec (absolute
+# scale, so chunk-wise == element-wise), which is what makes the match
+# bit-exact rather than approximate.
+# ---------------------------------------------------------------------------
+from repro import comm
+
+tc2 = TrainConfig(alpha=1e-2, beta=0.9, theta=0.9, schedule="sqrt",
+                  grad_k=4, weight_k=7, weight_absolute=True,
+                  mode="efadam", worker_axes=("data",))
+art2 = make_train_step(model, mesh, tc2)
+state2 = art2.init_state(jax.random.PRNGKey(0))
+step2 = jax.jit(art2.step_fn)
+losses2 = []
+for i in range(4):
+    state2, metrics2 = step2(state2, batch)
+    losses2.append(float(metrics2["loss"]))
+
+wcodec = comm.uniform_wire_codec(7, absolute=True)
+MIN_N = tc2.weight_q_min_numel
+params2 = model.init(jax.random.PRNGKey(0))
+opt2 = qadam(QAdamConfig(alpha=1e-2, beta=0.9, theta=0.9, schedule="sqrt",
+                         grad_q="log:4", weight_q=None))
+ostate2 = opt2.init(params2)
+es_ref = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                      params2)
+
+
+@jax.jit
+def ref2_step(params, ostate, es):
+    def bcast(p, e):
+        if p.size < MIN_N:
+            return p, e
+        send = p.astype(jnp.float32) + e
+        scale = jnp.float32(0.5)
+        deq = wcodec.dequantize(wcodec.quantize(send, scale), scale)
+        return deq.astype(p.dtype), send - deq
+
+    out = jax.tree.map(bcast, params, es)
+    is_pair = lambda x: isinstance(x, tuple)
+    fp = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+    es2 = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+    (lmean, _), grads = jax.value_and_grad(lfn, has_aux=True)(fp)
+    upd, ostate = opt2.update(grads, ostate, params)
+    return apply_updates(params, upd), ostate, es2, lmean
+
+
+ref_losses2 = []
+for i in range(4):
+    params2, ostate2, es_ref, lmean2 = ref2_step(params2, ostate2, es_ref)
+    ref_losses2.append(float(lmean2))
+
+print("efadam dist losses:", losses2)
+print("efadam ref  losses:", ref_losses2)
+np.testing.assert_allclose(losses2, ref_losses2, rtol=2e-4, atol=1e-5)
+
+rec2 = unchunk_params(state2["master"], art2.layout, metas, (4,), 1)
+err2 = jax.tree.map(lambda a, b: float(np.max(np.abs(np.asarray(a)
+                                                     - np.asarray(b)))),
+                    rec2, params2)
+max_err2 = max(jax.tree.leaves(err2))
+print("efadam max param err vs sequential two-way reference:", max_err2)
+assert max_err2 < 5e-5, max_err2
+
+es_rec = unchunk_params(state2["es"], art2.layout, metas, (4,), 1)
+err_es = jax.tree.map(lambda a, b: float(np.max(np.abs(np.asarray(a)
+                                                       - np.asarray(b)))),
+                      es_rec, es_ref)
+max_err_es = max(jax.tree.leaves(err_es))
+print("efadam max server-EF err vs reference:", max_err_es)
+assert max_err_es < 5e-5, max_err_es
 print("OK")

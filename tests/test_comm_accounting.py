@@ -1,14 +1,18 @@
 """Communication accounting: train.loop.comm_bytes_per_step must agree,
-byte for byte, with the packed payload sizes derivable from the per-leaf
-wire geometry (_leaf_meta) - the 'Comm' column of the paper's tables."""
+byte for byte, with the *measured* packed payload buffers the codec
+registry emits for the per-leaf wire geometry (_leaf_meta) - the 'Comm'
+column of the paper's tables, with no hand-rolled byte formulas left."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import comm
 from repro.configs import get_config
 from repro.core.packing import packed_nbytes
-from repro.dist import collectives as C
-from repro.dist.step import make_train_step, TrainConfig, _leaf_meta
+from repro.dist.modes import get_mode
+from repro.dist.step import (make_train_step, TrainConfig, _leaf_meta,
+                             weight_wire_codec)
 from repro.models.model import Model
 from repro.train.loop import comm_bytes_per_step
 
@@ -31,13 +35,13 @@ class TestCommAccounting:
         mesh = jax.make_mesh((1, 1), ("data", "model"))
         tc = TrainConfig(grad_k=4, weight_k=None, worker_axes=("data",))
         art = make_train_step(model, mesh, tc)
-        comm = comm_bytes_per_step(art, tc)
+        comm_b = comm_bytes_per_step(art, tc)
         metas = _metas(art)
         want_a2a = sum(art.n_workers * packed_nbytes(m.c, 4) for m in metas)
         want_bcast = sum(art.n_workers * m.c * 4 for m in metas)
-        assert comm["update_exchange_bytes"] == want_a2a
-        assert comm["weight_broadcast_bytes"] == want_bcast
-        assert comm["total_bytes"] == want_a2a + want_bcast
+        assert comm_b["update_exchange_bytes"] == want_a2a
+        assert comm_b["weight_broadcast_bytes"] == want_bcast
+        assert comm_b["total_bytes"] == want_a2a + want_bcast
         # 4-bit codes: the exchange is ~8x smaller than an f32 wire
         f32_wire = sum(art.n_workers * m.c * 4 for m in metas)
         assert want_a2a * 7 < f32_wire
@@ -49,7 +53,7 @@ class TestCommAccounting:
         tc = TrainConfig(grad_k=None, weight_k=7, weight_absolute=True,
                          worker_axes=("data",))
         art = make_train_step(model, mesh, tc)
-        comm = comm_bytes_per_step(art, tc)
+        comm_b = comm_bytes_per_step(art, tc)
         metas = _metas(art)
         want_a2a = sum(art.n_workers * m.c * 4 for m in metas)
         want_bcast = sum(
@@ -57,8 +61,8 @@ class TestCommAccounting:
                              if m.full_numel >= tc.weight_q_min_numel
                              else m.c * 4)
             for m in metas)
-        assert comm["update_exchange_bytes"] == want_a2a
-        assert comm["weight_broadcast_bytes"] == want_bcast
+        assert comm_b["update_exchange_bytes"] == want_a2a
+        assert comm_b["weight_broadcast_bytes"] == want_bcast
         # both kinds of leaves must actually occur in the smoke model
         assert any(m.full_numel >= tc.weight_q_min_numel for m in metas)
         assert any(m.full_numel < tc.weight_q_min_numel for m in metas)
@@ -75,16 +79,75 @@ class TestCommAccounting:
             tc = TrainConfig(grad_k=6, weight_k=None, mode=mode,
                              worker_axes=("data",))
             art = make_train_step(model, mesh, tc)
-            comm = comm_bytes_per_step(art, tc)
+            comm_b = comm_bytes_per_step(art, tc)
             want = sum(per_leaf(m, art.n_workers) for m in _metas(art))
-            assert comm["update_exchange_bytes"] == want, mode
+            assert comm_b["update_exchange_bytes"] == want, mode
+
+    @pytest.mark.parametrize("mode,grad_k,weight_k", [
+        ("qadam", 6, 7), ("qadam", 4, None), ("qadam", 2, 3),
+        ("efadam", 6, 7), ("efadam", 4, 3),
+        ("terngrad", None, None), ("ef_sgd", None, None),
+        ("dp_adam", None, 7),
+    ])
+    def test_accounting_equals_measured_payload_bytes(self, model, mode,
+                                                      grad_k, weight_k):
+        """THE drift guard: for every mode, the loop accounting must
+        equal the summed ``.nbytes`` of the actual packed payload arrays
+        the codec emits for each leaf's wire geometry."""
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        tc = TrainConfig(grad_k=grad_k, weight_k=weight_k, mode=mode,
+                         worker_axes=("data",))
+        art = make_train_step(model, mesh, tc)
+        comm_b = comm_bytes_per_step(art, tc)
+        spec = get_mode(mode)
+        key = jax.random.PRNGKey(0)
+        measured_a2a = measured_bcast = 0
+        for m in _metas(art):
+            x = jnp.zeros((m.numel,), jnp.float32)
+            wc = spec.wire_codec(tc.grad_k)
+            if isinstance(wc, comm.IdentityCodec):
+                measured_a2a += art.n_workers * m.c * 4
+            elif isinstance(wc, comm.BlockwiseCodec):
+                # ef_sgd packs its sign codes row-wise (per-block scales
+                # ride a separate gather, excluded like all scales)
+                rows = comm.pad_rows(jnp.sign(x).astype(jnp.int8),
+                                     art.n_workers)
+                measured_a2a += comm.pack_rows(rows, wc.bits).nbytes
+            else:
+                payload, _ = comm.encode_rows(
+                    x, wc, art.n_workers,
+                    key=key if wc.stochastic else None)
+                # the all_to_all moves exactly this array per device
+                measured_a2a += payload.nbytes
+            bc = weight_wire_codec(tc, m.full_numel)
+            if isinstance(bc, comm.IdentityCodec):
+                measured_bcast += art.n_workers * m.c * 4
+            else:
+                chunk = jnp.zeros((m.c,), jnp.float32)
+                p, _ = comm.encode_rows(chunk, bc, 1)
+                measured_bcast += art.n_workers * p.nbytes
+        assert comm_b["update_exchange_bytes"] == measured_a2a, mode
+        assert comm_b["weight_broadcast_bytes"] == measured_bcast, mode
+        assert comm_b["total_bytes"] == measured_a2a + measured_bcast
+
+    def test_efadam_matches_qadam_wire(self, model):
+        """Two-way compression reuses both channels' codecs: identical
+        accounting to qadam at the same (grad_k, weight_k)."""
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        figs = []
+        for mode in ("qadam", "efadam"):
+            tc = TrainConfig(grad_k=6, weight_k=7, mode=mode,
+                             worker_axes=("data",))
+            art = make_train_step(model, mesh, tc)
+            figs.append(comm_bytes_per_step(art, tc))
+        assert figs[0] == figs[1]
 
     def test_shard_params_counts_shards_not_chunks(self, model):
         mesh = jax.make_mesh((1, 1), ("data", "model"))
         tc = TrainConfig(worker_axes=("data",))
         art = make_train_step(model, mesh, tc)
-        comm = comm_bytes_per_step(art, tc)
+        comm_b = comm_bytes_per_step(art, tc)
         metas = _metas(art)
-        assert comm["shard_params"] == sum(
+        assert comm_b["shard_params"] == sum(
             int(np.prod(m.shp)) for m in metas)
-        assert comm["shard_params"] == sum(m.numel for m in metas)
+        assert comm_b["shard_params"] == sum(m.numel for m in metas)

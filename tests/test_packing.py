@@ -1,6 +1,6 @@
 """Wire-format tests: bit-packing round-trips and the guarantee that the
 distributed channels ship *packed uint8* payloads of exactly the
-advertised size."""
+codec-advertised size."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +8,7 @@ import pytest
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro import comm
 from repro.core.packing import pack_codes, unpack_codes, packed_nbytes
 from repro.dist import collectives as C
 from repro.dist import sharding as SH
@@ -17,15 +18,17 @@ from repro.dist.modes import get_mode
 def _codes(numel, bits, seed=0):
     rng = np.random.default_rng(seed)
     lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
-    return jnp.asarray(rng.integers(lo, hi + 1, size=(numel,)), jnp.int8)
+    dtype = np.int16 if bits == 16 else np.int8
+    return jnp.asarray(rng.integers(lo, hi + 1, size=(numel,)).astype(dtype))
 
 
 class TestPackRoundtrip:
-    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("bits", list(comm.SUPPORTED_BITS))
     @pytest.mark.parametrize("numel", [1, 3, 7, 64, 129, 1000])
     def test_roundtrip(self, bits, numel):
         """unpack(pack(c, b), b, n) == c, including non-divisible numel
-        (the pad codes must not leak back)."""
+        (the pad codes must not leak back) and the odd 3/6-bit widths
+        that pack across byte boundaries."""
         c = _codes(numel, bits, seed=numel * bits)
         p = pack_codes(c, bits)
         assert p.dtype == jnp.uint8
@@ -33,7 +36,7 @@ class TestPackRoundtrip:
         back = unpack_codes(p, bits, numel)
         np.testing.assert_array_equal(np.asarray(back), np.asarray(c))
 
-    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("bits", [2, 3, 4, 6, 8])
     def test_row_packing_payload_size(self, bits):
         """Per-worker-row packing: payload is (n_workers,
         packed_nbytes(c, bits)) uint8 - the exact array the all_to_all
@@ -48,27 +51,31 @@ class TestPackRoundtrip:
         np.testing.assert_array_equal(np.asarray(back), np.asarray(rows))
 
     def test_log_wire_bits(self):
+        """Codec-derived lane widths; the 3- and 6-bit lanes pack small
+        and large log grids tighter than the old {2,4,8}-only packer."""
         assert C.wire_bits_for_log(0) == 2
+        assert C.wire_bits_for_log(1) == 3
         assert C.wire_bits_for_log(4) == 4
         assert C.wire_bits_for_log(6) == 4
-        assert C.wire_bits_for_log(7) == 8
+        assert C.wire_bits_for_log(7) == 6
 
-    @pytest.mark.parametrize("grad_k,bits", [(4, 4), (6, 4), (7, 8)])
+    @pytest.mark.parametrize("grad_k,bits", [(2, 3), (4, 4), (6, 4), (7, 6)])
     def test_accounting_matches_packed_nbytes(self, grad_k, bits):
         n_workers, numel = 8, 5000
         c = SH.chunk_size(numel, n_workers)
         qadam = get_mode("qadam")
+        assert comm.LogCodec(k_g=grad_k).bits == bits
         assert qadam.wire_nbytes(c, n_workers, grad_k) == \
             n_workers * packed_nbytes(c, bits)
         assert qadam.wire_nbytes(c, n_workers, None) == \
             n_workers * c * 4
-        assert C.weight_broadcast_nbytes(c, n_workers, numel, 7) == \
-            n_workers * packed_nbytes(c, 8)
+        assert comm.uniform_wire_codec(7).payload_nbytes(c) == \
+            packed_nbytes(c, 8)
 
 
 class TestChannelsShipPackedUint8:
     """Drive the actual collective channels under shard_map and assert the
-    wire arrays are packed uint8 of the advertised size."""
+    wire arrays are codec payload rows of exactly the advertised size."""
 
     def _mesh(self):
         return jax.make_mesh((1,), ("data",))
@@ -77,38 +84,50 @@ class TestChannelsShipPackedUint8:
     def test_update_exchange(self, k_g):
         mesh = self._mesh()
         numel, n_workers = 777, 1
-        bits = C.wire_bits_for_log(k_g)
-        codes = _codes(numel, bits, seed=k_g)
+        codec = comm.LogCodec(k_g=k_g)
+        x = jnp.asarray(
+            np.random.default_rng(k_g).normal(size=(numel,))
+            .astype(np.float32))
 
-        def f(cd):
-            rows, payload = C.exchange_packed(cd, bits, n_workers,
-                                              ("data",), (1,))
-            return rows, payload
+        def f(v):
+            payload, scale = comm.encode_rows(v, codec, n_workers)
+            rows = C.exchange_decode(payload, scale, codec, numel,
+                                     ("data",), (1,))
+            return rows, payload, scale
 
-        rows, payload = jax.jit(shard_map(
-            f, mesh=mesh, in_specs=P(None), out_specs=(P(), P()),
-            check_rep=False))(codes)
+        rows, payload, scale = jax.jit(shard_map(
+            f, mesh=mesh, in_specs=P(None), out_specs=(P(), P(), P()),
+            check_rep=False))(x)
         c = SH.chunk_size(numel, n_workers)
         assert payload.dtype == jnp.uint8
-        assert payload.shape == (n_workers, packed_nbytes(c, bits))
+        assert payload.shape == (n_workers, codec.payload_nbytes(c))
         assert payload.nbytes == get_mode("qadam").wire_nbytes(c, n_workers,
                                                                k_g)
+        # the channel round-trips the codec's own quantize->dequantize
+        expect = codec.dequantize(codec.quantize(x, scale), scale)
         np.testing.assert_array_equal(
-            np.asarray(rows).reshape(-1)[:numel], np.asarray(codes))
+            np.asarray(rows).reshape(-1)[:numel], np.asarray(expect))
 
     def test_weight_broadcast(self):
         mesh = self._mesh()
+        codec = comm.uniform_wire_codec(7)
         chunk = jnp.asarray(
             np.random.default_rng(3).normal(size=(513,)).astype(np.float32)
             * 0.05)
 
         def f(x):
-            codes = C.uniform_wire_codes(x, jnp.float32(0.5), 7)
-            return C.broadcast_packed(codes, ("data",)), codes
+            scale = codec.compute_scale(x)
+            payload, _ = comm.encode_rows_ef(x, scale, codec, 1)
+            rows = C.broadcast_decode(payload[0], scale, codec,
+                                      x.shape[0], ("data",))
+            return rows, payload
 
-        rows, codes = jax.jit(shard_map(
+        rows, payload = jax.jit(shard_map(
             f, mesh=mesh, in_specs=P(None), out_specs=(P(), P()),
             check_rep=False))(chunk)
-        assert rows.dtype == jnp.int8
+        assert payload.dtype == jnp.uint8
+        assert payload.nbytes == codec.payload_nbytes(chunk.shape[0])
+        expect = codec.dequantize(
+            codec.quantize(chunk, jnp.float32(0.5)), jnp.float32(0.5))
         np.testing.assert_array_equal(np.asarray(rows[0]),
-                                      np.asarray(codes))
+                                      np.asarray(expect))
