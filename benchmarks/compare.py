@@ -1,0 +1,164 @@
+"""Diff a fresh benchmark run against a committed baseline snapshot.
+
+  PYTHONPATH=src python -m benchmarks.compare --baseline BENCH_pr5.json
+  PYTHONPATH=src python -m benchmarks.compare --baseline BENCH_pr5.json \\
+      --bench comm_codec --out compare_report.md --json compare.json
+
+Runs the baseline's benches (or ``--bench``), joins rows by name, and
+gates on PER-ROW budgets instead of one blanket threshold - the check
+that would have caught PR-5's fused log decode landing at 0.23x of the
+legacy path while every other row looked fine.
+
+Two gate classes:
+
+* ratio floors (always on, machine-independent): rows carrying a
+  dimensionless ``ratio`` - fused-vs-legacy speedups, warm-vs-cold
+  startup - must clear a named floor. Fused log DECODE must reach 1.0x
+  (the SMEM-LUT kernel does zero transcendentals; legacy pays exp2 per
+  element), encode and the uniform paths get 1/1.5 (CPU fusion jitter),
+  startup warm must beat cold.
+* time budgets (``--gate-times``, off by default): fresh us_per_call
+  may not exceed baseline x ``--time-budget``. Wall-clock comparisons
+  across machines are noise, so this only makes sense when the baseline
+  was collected on the same runner class.
+
+Exit code 1 when any gate fails; the markdown report marks each row.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+# Ordered prefix -> floor. First match wins; rows with a ratio but no
+# matching rule are reported, not gated (e.g. serve_resident_ratio is a
+# size figure, smaller is better).
+RATIO_FLOORS = [
+    ("comm_decode_speedup_log", 1.0),     # the PR-6 fix: no grace
+    ("comm_decode_speedup_", 1 / 1.5),
+    ("comm_encode_speedup_", 1 / 1.5),
+    ("startup_train_speedup", 1.0),       # warm must beat cold
+    ("startup_serve_speedup", 1.0),
+]
+
+
+def ratio_floor(name):
+    for prefix, floor in RATIO_FLOORS:
+        if name.startswith(prefix):
+            return floor
+    return None
+
+
+def row_ratio(row):
+    """Numeric ratio of a snapshot row; pre-PR-6 baselines only carried
+    it inside the derived string ("0.23x"), so fall back to parsing."""
+    if row.get("ratio") is not None:
+        return float(row["ratio"])
+    m = re.match(r"^(\d+(?:\.\d+)?)x", str(row.get("derived", "")))
+    return float(m.group(1)) if m else None
+
+
+def fresh_rows(names):
+    from benchmarks import run as bench_run
+    rows = []
+
+    def emit(name, us, derived, ratio=None):
+        row = {"name": name, "us_per_call": round(us, 1), "derived": derived}
+        if ratio is not None:
+            row["ratio"] = round(float(ratio), 4)
+        rows.append(row)
+        print(f"# {name},{us:.1f},{derived}", file=sys.stderr, flush=True)
+
+    for n in names:
+        bench_run.BENCHES[n](emit)
+    return rows
+
+
+def compare(base_rows, new_rows, *, gate_times=False, time_budget=2.0):
+    base = {r["name"]: r for r in base_rows}
+    results = []
+    for r in new_rows:
+        b = base.get(r["name"])
+        entry = {"name": r["name"], "us": r["us_per_call"],
+                 "base_us": b["us_per_call"] if b else None,
+                 "ratio": row_ratio(r),
+                 "base_ratio": row_ratio(b) if b else None,
+                 "status": "ok", "detail": ""}
+        floor = ratio_floor(r["name"])
+        if floor is not None and entry["ratio"] is not None:
+            if entry["ratio"] < floor:
+                entry["status"] = "FAIL"
+                entry["detail"] = (f"ratio {entry['ratio']:.2f} < "
+                                   f"floor {floor:.2f}")
+        if (entry["status"] == "ok" and gate_times and b
+                and b["us_per_call"] > 0 and r["us_per_call"] > 0):
+            rel = r["us_per_call"] / b["us_per_call"]
+            if rel > time_budget:
+                entry["status"] = "FAIL"
+                entry["detail"] = (f"{rel:.2f}x baseline time "
+                                   f"(budget {time_budget:.2f}x)")
+        if b is None:
+            entry["detail"] = entry["detail"] or "new row (no baseline)"
+        results.append(entry)
+    return results
+
+
+def render_md(results, baseline_path):
+    lines = [f"## Bench compare vs `{os.path.basename(baseline_path)}`", "",
+             "| name | us/call | base us | ratio | base ratio | status |",
+             "|---|---|---|---|---|---|"]
+    for e in results:
+        fmt = lambda v, p="{:.1f}": "-" if v is None else p.format(v)
+        status = e["status"] + (f" ({e['detail']})" if e["detail"] else "")
+        lines.append(f"| {e['name']} | {fmt(e['us'])} | {fmt(e['base_us'])} |"
+                     f" {fmt(e['ratio'], '{:.2f}')} |"
+                     f" {fmt(e['base_ratio'], '{:.2f}')} | {status} |")
+    failed = [e for e in results if e["status"] == "FAIL"]
+    lines += ["", f"**{len(failed)} gate failure(s), "
+                  f"{len(results)} rows checked.**"]
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed snapshot (recollect.py --bench output)")
+    ap.add_argument("--bench", default=None,
+                    help="comma list of benches (default: baseline's)")
+    ap.add_argument("--out", default=None, help="markdown report path "
+                    "(default stdout)")
+    ap.add_argument("--json", default=None, help="machine-readable results")
+    ap.add_argument("--gate-times", action="store_true",
+                    help="also gate absolute us_per_call vs baseline "
+                         "(same-machine baselines only)")
+    ap.add_argument("--time-budget", type=float, default=2.0)
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        snap = json.load(f)
+    names = args.bench.split(",") if args.bench else snap["benches"]
+    results = compare(snap["rows"], fresh_rows(names),
+                      gate_times=args.gate_times,
+                      time_budget=args.time_budget)
+    md = render_md(results, args.baseline)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md)
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(md)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"baseline": args.baseline, "results": results}, f,
+                      indent=1)
+    if any(e["status"] == "FAIL" for e in results):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,10 +31,16 @@ def collect_bench(names, out_path):
 
     rows = []
 
-    def emit(name, us, derived):
-        rows.append({"name": name, "us_per_call": round(us, 1),
-                     "derived": derived})
-        print(f"{name},{us:.1f},{derived}", flush=True)
+    def emit(name, us, derived, ratio=None):
+        row = {"name": name, "us_per_call": round(us, 1),
+               "derived": derived}
+        if ratio is not None:
+            # dimensionless figure (speedup, residency) - the derived
+            # string is for eyes, this field is for tooling (compare.py)
+            row["ratio"] = round(float(ratio), 4)
+        rows.append(row)
+        cell = "" if ratio is None else f"{ratio:.4f}"
+        print(f"{name},{us:.1f},{derived},{cell}", flush=True)
 
     for n in names:
         bench_run.BENCHES[n](emit)

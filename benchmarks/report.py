@@ -2,6 +2,11 @@
 results/dryrun_*.jsonl.
 
   PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+
+Or render a committed benchmark snapshot (``recollect.py --bench``
+output) as a markdown table, ratio column included:
+
+  PYTHONPATH=src python -m benchmarks.report --bench BENCH_pr6.json
 """
 import json
 import os
@@ -100,7 +105,24 @@ def _note(r):
     return "compute-bound: raise per-device batch or reduce remat"
 
 
+def bench_table(path):
+    with open(path) as f:
+        snap = json.load(f)
+    print(f"## Bench snapshot `{os.path.basename(path)}` "
+          f"({snap.get('backend')}/{snap.get('device')}, "
+          f"jax {snap.get('jax')})\n")
+    print("| name | us/call | ratio | derived |")
+    print("|---|---|---|---|")
+    for r in snap["rows"]:
+        ratio = r.get("ratio")
+        print(f"| {r['name']} | {r['us_per_call']:.1f} |"
+              f" {ratio if ratio is not None else '-'} | {r['derived']} |")
+
+
 def main():
+    if "--bench" in sys.argv:
+        bench_table(sys.argv[sys.argv.index("--bench") + 1])
+        return
     single = load(os.path.join(ROOT, "results", "dryrun_single.jsonl"))
     multi = load(os.path.join(ROOT, "results", "dryrun_multi.jsonl"))
     print("## Dry-run (single-pod 16x16)\n")

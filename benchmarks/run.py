@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m benchmarks.run               # all, CSV to stdout
   PYTHONPATH=src python -m benchmarks.run --only kernels
+  PYTHONPATH=src python -m benchmarks.run --suite comm --trace
 
 Benches (name -> paper artifact):
   table2_cifar100_analogue  - Table 2 protocol (QADAM vs TernGrad vs
@@ -13,10 +14,23 @@ Benches (name -> paper artifact):
                               step/model at each quantization level
   kernels                   - Pallas kernel micro-bench (interpret mode on
                               CPU: correctness-path timing, not TPU perf)
+  startup                   - cold vs warm jit startup through the
+                              persistent compile cache + AOT artifacts
   roofline                  - reads results/dryrun_single.jsonl and emits
                               the three roofline terms per (arch x shape)
 
-Output format: ``name,us_per_call,derived`` CSV rows.
+Output format: ``name,us_per_call,derived,ratio`` CSV rows; ``ratio`` is
+a machine-readable dimensionless figure (fused-vs-legacy speedup,
+warm-vs-cold) on rows where us_per_call alone is meaningless, else
+empty.
+
+``--trace [--trace-dir D]`` wraps the run in ``jax.profiler.trace``
+with one ``TraceAnnotation`` per bench, so a regression like PR-5's
+fused log decode (0.23x: per-element exp2 on unpacked codes) shows up
+as a named hot region in the timeline instead of surviving five PRs.
+Profiler overhead distorts absolute timings (10x+ on CPU interpret
+runs), so never combine ``--trace`` with the ``BENCH_ASSERT_*`` gates
+or a baseline snapshot - traced runs are for reading timelines.
 """
 from __future__ import annotations
 
@@ -154,7 +168,8 @@ def bench_serve(emit, requests=8, slots=4, prompt_len=16, max_new=32):
     run(params, "fp32")
     run(qparams, "qx6")
     emit("serve_resident_ratio", 0.0,
-         f"{params_nbytes(qparams) / params_nbytes(params):.3f}x_fp32_measured")
+         f"{params_nbytes(qparams) / params_nbytes(params):.3f}x_fp32_measured",
+         params_nbytes(qparams) / params_nbytes(params))
 
 
 def bench_train(emit, steps=24, chunk=8):
@@ -223,6 +238,101 @@ def bench_train(emit, steps=24, chunk=8):
     sess.close()
 
 
+def bench_startup(emit, steps=2):
+    """Cold vs warm startup through repro.perf: a fresh persistent XLA
+    cache + AOT step-artifact dir, then a TrainSession and a
+    ServeSession built TWICE against them. Cold pays trace + lower +
+    compile (+ export); warm deserializes the compiled step. Rows are
+    setup-through-first-work wall time; the speedup rows are the
+    machine-independent signal.
+
+    Set BENCH_ASSERT_STARTUP=1 (the CI startup-smoke gate) to hard-fail
+    unless warm < cold and the warm sessions report zero compilations.
+    """
+    import shutil
+    import tempfile
+
+    import jax
+    from repro import perf
+    from repro.configs import get_config
+    from repro.models.model import Model
+    from repro.launch.mesh import make_local_mesh
+    from repro.dist.step import make_train_step, TrainConfig
+    from repro.train.session import SessionConfig, TrainSession
+    from repro.data.pipeline import batch_for_model
+    from repro.serve import Request, ServeSession
+
+    cfg = get_config("yi-6b", smoke=True)
+    model = Model(cfg)
+    mesh = make_local_mesh(data=1, model=1)
+    tc = TrainConfig(alpha=3e-3, grad_k=6, weight_k=None, worker_axes=())
+    art = make_train_step(model, mesh, tc)
+    params = model.init(jax.random.PRNGKey(0))
+
+    tmp = tempfile.mkdtemp(prefix="bench_startup_")
+    cache_dir = os.path.join(tmp, "xla")
+    prev_cache = jax.config.jax_compilation_cache_dir
+    perf.enable_persistent_cache(cache_dir)
+    try:
+        def train_once():
+            t0 = time.perf_counter()
+            sess = TrainSession.from_artifacts(
+                art, batch_for_model(cfg, 64, 4, seed=0),
+                SessionConfig(log_every=0, prefetch=0,
+                              aot_dir=os.path.join(tmp, "aot_train")),
+                log=lambda *_: None)
+            sess.run(steps)
+            dt = time.perf_counter() - t0
+            stats = dict(sess.stats)
+            sess.close()
+            return dt, stats
+
+        cold, st_c = train_once()
+        warm, st_w = train_once()
+        emit("startup_train_cold", cold * 1e6,
+             f"{st_c['compilations']}compiles_{steps}steps")
+        emit("startup_train_warm", warm * 1e6,
+             f"{st_w['aot_loads']}aot_loads_{steps}steps")
+        emit("startup_train_speedup", 0.0, f"{cold / warm:.2f}x_warm",
+             cold / warm)
+
+        def serve_once():
+            t0 = time.perf_counter()
+            sess = ServeSession(model, params, slots=2, max_seq=64, seed=0,
+                                aot_dir=os.path.join(tmp, "aot_serve"))
+            sess.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+            sess.drain()
+            return time.perf_counter() - t0, dict(sess.stats)
+
+        s_cold, sst_c = serve_once()
+        s_warm, sst_w = serve_once()
+        emit("startup_serve_cold", s_cold * 1e6,
+             f"{sst_c['compilations']}compiles")
+        emit("startup_serve_warm", s_warm * 1e6,
+             f"{sst_w['aot_loads']}aot_loads")
+        emit("startup_serve_speedup", 0.0, f"{s_cold / s_warm:.2f}x_warm",
+             s_cold / s_warm)
+        emit("startup_compile_cache_entries", 0.0,
+             f"{perf.cache_entries(cache_dir)}entries")
+
+        if os.environ.get("BENCH_ASSERT_STARTUP"):
+            assert warm < cold, (
+                f"warm TrainSession no faster: {warm:.2f}s vs {cold:.2f}s")
+            assert st_w["compilations"] == 0 and st_w["aot_loads"] >= 1, (
+                f"warm TrainSession recompiled: {st_w}")
+            assert s_warm < s_cold, (
+                f"warm ServeSession no faster: {s_warm:.2f}s vs {s_cold:.2f}s")
+            assert sst_w["compilations"] == 0 and sst_w["aot_loads"] >= 1, (
+                f"warm ServeSession recompiled: {sst_w}")
+    finally:
+        # the bench repointed the process-global cache config; restore
+        if prev_cache:
+            perf.enable_persistent_cache(prev_cache)
+        else:
+            perf.disable_persistent_cache()
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def bench_comm_codec(emit, numel=1 << 20, steps=6):
     """The fused codec stack vs the legacy three-pass path it replaced.
 
@@ -280,7 +390,8 @@ def bench_comm_codec(emit, numel=1 << 20, steps=6):
         us_l = _time_call(legacy_enc, x)
         emit(f"comm_encode_legacy3_{tag}", us_l,
              f"{gbytes / (us_l / 1e6):.2f}GB_s_4MB")
-        emit(f"comm_encode_speedup_{tag}", 0.0, f"{us_l / us_f:.2f}x")
+        emit(f"comm_encode_speedup_{tag}", 0.0, f"{us_l / us_f:.2f}x",
+             us_l / us_f)
         checks.append(("encode", spec,
                        lambda v, f=fused_enc: f(v).payload, legacy_enc, x))
 
@@ -302,7 +413,8 @@ def bench_comm_codec(emit, numel=1 << 20, steps=6):
         us_ld = _time_call(legacy_dec, wb)
         emit(f"comm_decode_legacy2_{tag}", us_ld,
              f"{gbytes / (us_ld / 1e6):.2f}GB_s_4MB")
-        emit(f"comm_decode_speedup_{tag}", 0.0, f"{us_ld / us_fd:.2f}x")
+        emit(f"comm_decode_speedup_{tag}", 0.0, f"{us_ld / us_fd:.2f}x",
+             us_ld / us_fd)
         checks.append(("decode", spec, fused_dec, legacy_dec, wb))
 
     if os.environ.get("BENCH_ASSERT_FUSED"):
@@ -310,22 +422,30 @@ def bench_comm_codec(emit, numel=1 << 20, steps=6):
         # path - e.g. the XLA loop-fusion bug where the packer's strided
         # reads re-ran the transcendental quantize per lane group (2x
         # wall time; fixed with an optimization_barrier in the codec).
-        # On CPU the comparison is dispatch/fusion overhead, not HBM
-        # passes, and XLA's fused-loop codegen jitters the
-        # transcendental-bound log path by up to ~1.3x either way - so
-        # compare medians of interleaved rounds with 1.5x grace:
-        # equal-within-noise passes, a recompute- or extra-pass-sized
-        # regression (>= 2x) reliably fails.
+        # Budgets are per (direction, grid), not a blanket grace: the
+        # PR-5 log-DECODE regression (0.23x: per-element exp2 on
+        # unpacked codes) sat comfortably under the old uniform 1.5x
+        # check because only the encode direction was asserted tightly.
+        # Since the SMEM dequant LUT, fused log decode does zero
+        # transcendentals while legacy still pays exp2 per element, so
+        # its budget is 1.0 - fused must win outright. Encode and the
+        # uniform paths keep 1.5x: on CPU those compare dispatch/fusion
+        # overhead, and XLA's fused-loop codegen jitters the
+        # transcendental-bound paths by up to ~1.3x either way.
+        budgets = {("encode", "log"): 1.5, ("decode", "log"): 1.0,
+                   ("encode", "uniform"): 1.5, ("decode", "uniform"): 1.5}
         for kind, spec, f_fn, l_fn, arg in checks:
+            grid = "log" if spec.startswith("log") else "uniform"
+            budget = budgets[(kind, grid)]
             fs, ls = [], []
             for _ in range(7):
                 fs.append(_time_call(f_fn, arg, reps=3, warmup=1))
                 ls.append(_time_call(l_fn, arg, reps=3, warmup=1))
             med_f = sorted(fs)[len(fs) // 2]
             med_l = sorted(ls)[len(ls) // 2]
-            assert med_f <= med_l * 1.5, (
-                f"fused {kind} slower than legacy for {spec}: "
-                f"median {med_f:.1f}us vs {med_l:.1f}us")
+            assert med_f <= med_l * budget, (
+                f"fused {kind} over budget ({budget}x) vs legacy for "
+                f"{spec}: median {med_f:.1f}us vs {med_l:.1f}us")
 
     # end-to-end dist step at 4MB exchange buckets, qadam vs efadam
     from repro.configs import get_config
@@ -473,6 +593,7 @@ BENCHES = {
     "comm_cost": bench_comm_cost,
     "serve": bench_serve,
     "train": bench_train,
+    "startup": bench_startup,
     "table2_cifar100_analogue": bench_table2,
     "table3_cifar10_analogue": bench_table3,
     "fig34_convergence": bench_fig34,
@@ -485,6 +606,7 @@ SUITES = {
     "train": ["train"],
     "comm": ["comm_codec", "comm_cost"],
     "kernels": ["kernels", "comm_codec", "comm_cost"],
+    "startup": ["startup"],
     "paper": ["table2_cifar100_analogue", "table3_cifar10_analogue",
               "fig34_convergence", "comm_cost"],
     "all": list(BENCHES),
@@ -496,6 +618,11 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma list of benches")
     ap.add_argument("--suite", default=None, choices=sorted(SUITES),
                     help="named bench group (overrides --only)")
+    ap.add_argument("--trace", action="store_true",
+                    help="wrap the run in jax.profiler.trace with one "
+                         "TraceAnnotation per bench")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="trace output dir (default results/traces)")
     args, _ = ap.parse_known_args()
     if args.suite:
         names = SUITES[args.suite]
@@ -504,13 +631,19 @@ def main() -> None:
     else:
         names = list(BENCHES)
 
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,ratio")
 
-    def emit(name, us, derived):
-        print(f"{name},{us:.1f},{derived}", flush=True)
+    def emit(name, us, derived, ratio=None):
+        cell = "" if ratio is None else f"{ratio:.4f}"
+        print(f"{name},{us:.1f},{derived},{cell}", flush=True)
 
-    for n in names:
-        BENCHES[n](emit)
+    from repro.perf import profiling
+    with profiling.trace(args.trace_dir, enabled=args.trace) as tdir:
+        for n in names:
+            with profiling.annotate(f"bench:{n}"):
+                BENCHES[n](emit)
+    if tdir:
+        print(f"# trace: {tdir}", file=sys.stderr)
 
 
 if __name__ == "__main__":

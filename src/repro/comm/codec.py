@@ -51,7 +51,7 @@ def _interpret() -> bool:
 
 
 def resolve_backend(backend: Optional[str], numel: Optional[int] = None,
-                    tile: int = K.ENC_ROWS * K.LANES) -> str:
+                    tile: Optional[int] = None) -> str:
     """Auto: Pallas on TPU when the tensor fills at least one kernel tile
     (padding overhead dominates below that), jnp otherwise. An explicit
     ``backend=`` always wins - "pallas" off TPU runs in interpret mode."""
@@ -60,6 +60,8 @@ def resolve_backend(backend: Optional[str], numel: Optional[int] = None,
             raise ValueError(f"unknown backend {backend!r}; "
                              f"expected one of {BACKENDS}")
         return backend
+    if tile is None:
+        tile = K.enc_rows() * K.LANES
     if jax.default_backend() == "tpu" and (numel is None or numel >= tile):
         return "pallas"
     return "jnp"
@@ -121,7 +123,8 @@ class WireBuffer:
 def _tile_rows(n: int, bits: int) -> int:
     """Rows of the (R, lanes_in) tiling covering n elements."""
     li = K.lanes_in(bits)
-    return -(-n // (K.ENC_ROWS * li)) * K.ENC_ROWS
+    er = K.enc_rows()
+    return -(-n // (er * li)) * er
 
 
 def _to_tiles(flat: jax.Array, bits: int) -> jax.Array:
@@ -193,8 +196,16 @@ class Codec:
                          k=self.k, clip_abs=self.clip_abs)
         return codes
 
+    def dequant_lut(self):
+        """(2^bits,) scale-1 dequant table for table-driven decode, or
+        None for grids whose dequant is already a single multiply
+        (uniform/ternary/blockwise: ``codes * scale``, no transcendental
+        to amortize — evaluated and deliberately left table-free)."""
+        return None
+
     def dequantize(self, codes: jax.Array, scale) -> jax.Array:
-        return K._dequant(codes, scale, kind=self.kind, k=self.k)
+        return K._dequant(codes, scale, kind=self.kind, k=self.k,
+                          lut=self.dequant_lut())
 
     # -- fused encode/decode ----------------------------------------------
     def _draw(self, key, shape):
@@ -259,7 +270,8 @@ class Codec:
         pad = rows * lo - wb.payload.shape[0]
         p2d = jnp.pad(wb.payload, (0, pad)).reshape(rows, lo)
         out = K.decode_pallas(p2d, wb.scale, self.kind, self.bits, self.k,
-                              out_dtype=out_dtype, interpret=_interpret())
+                              out_dtype=out_dtype, lut=self.dequant_lut(),
+                              interpret=_interpret())
         return out.reshape(-1)[:n].reshape(wb.shape)
 
 
@@ -283,6 +295,11 @@ class LogCodec(Codec):
     @property
     def k(self):
         return self.k_g
+
+    def dequant_lut(self):
+        # 2k_g+3 representable values: decode is a gather, not an exp2
+        # per element (the PR-5 0.23x fused-log-decode regression).
+        return grids.log_dequant_table(self.k_g, self.bits)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -539,8 +556,9 @@ CODEC_NAMES = ("identity", "log", "uniform", "uniform_amax", "terngrad",
 def _rows_tiling(c: int, bits: int):
     """Per-row padded length and tile count for the fused kernels."""
     li = K.lanes_in(bits)
-    t = -(-c // (K.ENC_ROWS * li))           # (ENC_ROWS, li) tiles per row
-    return t * K.ENC_ROWS * li, t * K.ENC_ROWS
+    er = K.enc_rows()
+    t = -(-c // (er * li))                   # (er, li) tiles per row
+    return t * er * li, t * er
 
 
 def encode_rows(x: jax.Array, codec: Codec, n_rows: int, *, key=None,
@@ -613,6 +631,7 @@ def _encode_rows_ef_jit(x, scale, *, codec, n_rows, backend):
     x2d = rows_f.reshape(n_rows * rrow, K.lanes_in(codec.bits))
     payload2d, e2d = K.ef_encode_pallas(x2d, scale, codec.kind, codec.bits,
                                         codec.k, clip_abs=codec.clip_abs,
+                                        lut=codec.dequant_lut(),
                                         interpret=_interpret())
     payload = payload2d.reshape(n_rows, -1)[:, :codec.payload_nbytes(c)]
     e_new = e2d.reshape(n_rows, lrow)[:, :c].reshape(-1)[:n]
@@ -646,6 +665,7 @@ def _decode_rows_jit(payload_rows, scales, *, codec, c, backend, out_dtype):
                 ((0, 0), (0, brow - payload_rows.shape[1])))
     p2d = p.reshape(n_rows * rrow, lo)
     out = K.decode_pallas(p2d, scales, codec.kind, codec.bits, codec.k,
-                          tiles_per_scale=rrow // K.ENC_ROWS,
-                          out_dtype=out_dtype, interpret=_interpret())
+                          tiles_per_scale=rrow // K.enc_rows(),
+                          out_dtype=out_dtype, lut=codec.dequant_lut(),
+                          interpret=_interpret())
     return out.reshape(n_rows, rrow * li)[:, :c]

@@ -53,6 +53,32 @@ LANES = 128
 ENC_ROWS = 32
 LANES_IN = {2: 512, 3: 1024, 4: 256, 6: 512, 8: 128, 16: 128}
 
+# per-backend tile-width override (autotuning hook): maps a
+# ``jax.default_backend()`` name to the rows-per-grid-step the fused
+# codec kernels should use there. ``repro.perf.autotune`` measures the
+# candidates and installs the winner; unset backends fall back to
+# ENC_ROWS. Callers must size/pad payloads with ``enc_rows()`` — never
+# the bare constant — so a retune changes every tiling consistently.
+_ENC_ROWS_OVERRIDE: dict = {}
+
+
+def enc_rows() -> int:
+    """Rows per fused-codec grid step for the active backend."""
+    return _ENC_ROWS_OVERRIDE.get(jax.default_backend(), ENC_ROWS)
+
+
+def set_enc_rows(rows, backend: str | None = None) -> None:
+    """Install (or, with ``rows=None``, clear) a tile-rows override for
+    ``backend`` (default: the active one). Rows must keep f32 sublane
+    alignment (multiple of 8)."""
+    key = backend or jax.default_backend()
+    if rows is None:
+        _ENC_ROWS_OVERRIDE.pop(key, None)
+        return
+    if rows % 8 != 0 or rows <= 0:
+        raise ValueError(f"enc_rows must be a positive multiple of 8: {rows}")
+    _ENC_ROWS_OVERRIDE[key] = int(rows)
+
 
 def lanes_in(bits: int) -> int:
     return LANES_IN[bits]
@@ -80,8 +106,17 @@ def _quant(x, scale, u, *, kind: str, k: int, clip_abs):
     return codes
 
 
-def _dequant(codes, scale, *, kind: str, k: int):
+def _dequant(codes, scale, *, kind: str, k: int, lut=None):
+    """Dequantize dispatch. For the log grid a precomputed table (see
+    ``grids.log_dequant_table``) turns the per-element exp2 into a gather
+    — the transcendental re-evaluated on every lane-strided unpacked code
+    is what made fused log decode 0.23x of legacy. The other grids are
+    already a single multiply (uniform/ternary/blockwise dequant is
+    ``codes * scale``), so a table buys them nothing and ``lut`` only
+    applies to ``kind == "log"``."""
     if kind == "log":
+        if lut is not None:
+            return grids.log_dequantize_lut(codes, scale, lut)
         return grids.log_dequantize(codes, scale, k)
     if kind == "uniform":
         return grids.uniform_dequantize(codes, scale, k)
@@ -175,11 +210,12 @@ def encode_pallas(x2d: jax.Array, kind: str, bits: int, k: int, *,
     the amax phase is skipped and the same scale is returned.
     """
     rows = x2d.shape[0]
+    er = enc_rows()
     li, lo = lanes_in(bits), lanes_out(bits)
-    assert x2d.shape[1] == li and rows % ENC_ROWS == 0, (x2d.shape, bits)
-    nb = rows // ENC_ROWS
-    xblk = pl.BlockSpec((ENC_ROWS, li), lambda p, i: (i, 0))
-    pblk = pl.BlockSpec((ENC_ROWS, lo), lambda p, i: (i, 0))
+    assert x2d.shape[1] == li and rows % er == 0, (x2d.shape, bits)
+    nb = rows // er
+    xblk = pl.BlockSpec((er, li), lambda p, i: (i, 0))
+    pblk = pl.BlockSpec((er, lo), lambda p, i: (i, 0))
     payload_shape = jax.ShapeDtypeStruct((rows, lo), jnp.uint8)
 
     if scale is not None:
@@ -200,7 +236,7 @@ def encode_pallas(x2d: jax.Array, kind: str, bits: int, k: int, *,
         body = functools.partial(_encode2_ternary_body, bits=bits,
                                  clip_abs=clip_abs)
         operands = (x2d, u2d)
-        in_specs = [xblk, pl.BlockSpec((ENC_ROWS, li), lambda p, i: (i, 0))]
+        in_specs = [xblk, pl.BlockSpec((er, li), lambda p, i: (i, 0))]
     else:
         body = functools.partial(_encode2_body, kind=kind, bits=bits, k=k,
                                  clip_abs=clip_abs)
@@ -231,32 +267,63 @@ def _decode_body(payload_ref, scale_ref, o_ref, *, kind, bits, k,
                           k=k).astype(out_dtype)
 
 
+def _decode_lut_body(payload_ref, scale_ref, lut_ref, o_ref, *, kind,
+                     bits, k, out_dtype):
+    """Decode with the dequant table resident in SMEM: unpack, then one
+    gather per element instead of re-evaluating exp2 on every
+    lane-strided code (the 0.23x fused-log-decode regression)."""
+    li = o_ref.shape[-1]
+    codes = B.unpack_lanes(payload_ref[...], bits, li)
+    o_ref[...] = _dequant(codes, scale_ref[0], kind=kind, k=k,
+                          lut=lut_ref[...]).astype(out_dtype)
+
+
+def _lut_spec():
+    """Whole-table SMEM placement for a (2^bits,) f32 dequant table."""
+    return pl.BlockSpec(memory_space=pltpu.SMEM)
+
+
 def decode_pallas(payload2d: jax.Array, scales: jax.Array, kind: str,
                   bits: int, k: int, *, tiles_per_scale: int = 0,
-                  out_dtype=jnp.float32, interpret: bool) -> jax.Array:
+                  out_dtype=jnp.float32, lut=None,
+                  interpret: bool) -> jax.Array:
     """Fused unpack+dequantize, ONE ``pallas_call``.
 
     payload2d: (R, lanes_out(bits)) uint8. ``scales`` is either a scalar
     (per-tensor) or a (n_rows,) vector with ``tiles_per_scale`` grid
     steps per wire row (the per-source-worker scales of the dist
-    channels).
+    channels). ``lut`` (log grid only) is the (2^bits,) scale-1 dequant
+    table from ``grids.log_dequant_table``; it rides in SMEM and turns
+    the dequant into a gather.
     """
     rows = payload2d.shape[0]
+    er = enc_rows()
     li, lo = lanes_in(bits), lanes_out(bits)
-    assert payload2d.shape[1] == lo and rows % ENC_ROWS == 0
-    nb = rows // ENC_ROWS
+    assert payload2d.shape[1] == lo and rows % er == 0
+    nb = rows // er
     scales = jnp.asarray(scales, jnp.float32).reshape(-1)
     if tiles_per_scale:
         t = tiles_per_scale
         sspec = pl.BlockSpec((1,), lambda i: (i // t,))
     else:
         sspec = pl.BlockSpec((1,), lambda i: (0,))
+    if lut is not None:
+        return pl.pallas_call(
+            functools.partial(_decode_lut_body, kind=kind, bits=bits, k=k,
+                              out_dtype=out_dtype),
+            grid=(nb,),
+            in_specs=[pl.BlockSpec((er, lo), lambda i: (i, 0)), sspec,
+                      _lut_spec()],
+            out_specs=pl.BlockSpec((er, li), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows, li), out_dtype),
+            interpret=interpret,
+        )(payload2d, scales, jnp.asarray(lut, jnp.float32))
     return pl.pallas_call(
         functools.partial(_decode_body, kind=kind, bits=bits, k=k,
                           out_dtype=out_dtype),
         grid=(nb,),
-        in_specs=[pl.BlockSpec((ENC_ROWS, lo), lambda i: (i, 0)), sspec],
-        out_specs=pl.BlockSpec((ENC_ROWS, li), lambda i: (i, 0)),
+        in_specs=[pl.BlockSpec((er, lo), lambda i: (i, 0)), sspec],
+        out_specs=pl.BlockSpec((er, li), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, li), out_dtype),
         interpret=interpret,
     )(payload2d, scales)
@@ -275,27 +342,54 @@ def _ef_encode_body(x_ref, scale_ref, payload_ref, e_ref, *, kind, bits,
     e_ref[...] = x - _dequant(codes, s, kind=kind, k=k)
 
 
+def _ef_encode_lut_body(x_ref, scale_ref, lut_ref, payload_ref, e_ref, *,
+                        kind, bits, k, clip_abs):
+    """EF encode whose residual dequant gathers from the SMEM table (the
+    residual pays the same per-element exp2 as decode otherwise)."""
+    x = x_ref[...]
+    s = scale_ref[0]
+    codes = _quant(x, s, None, kind=kind, k=k, clip_abs=clip_abs)
+    payload_ref[...] = B.pack_lanes(codes, bits)
+    e_ref[...] = x - _dequant(codes, s, kind=kind, k=k, lut=lut_ref[...])
+
+
 def ef_encode_pallas(x2d: jax.Array, scale: jax.Array, kind: str,
-                     bits: int, k: int, *, clip_abs=None,
+                     bits: int, k: int, *, clip_abs=None, lut=None,
                      interpret: bool):
     """(x, scale) -> (packed payload, EF residual e' = x - deq(codes)),
     one launch. The codes never leave VMEM."""
     rows = x2d.shape[0]
+    er = enc_rows()
     li, lo = lanes_in(bits), lanes_out(bits)
-    assert x2d.shape[1] == li and rows % ENC_ROWS == 0
-    nb = rows // ENC_ROWS
+    assert x2d.shape[1] == li and rows % er == 0
+    nb = rows // er
+    scale = jnp.asarray(scale, jnp.float32).reshape(1)
+    out_specs = [pl.BlockSpec((er, lo), lambda i: (i, 0)),
+                 pl.BlockSpec((er, li), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((rows, lo), jnp.uint8),
+                 jax.ShapeDtypeStruct((rows, li), jnp.float32)]
+    if lut is not None:
+        return pl.pallas_call(
+            functools.partial(_ef_encode_lut_body, kind=kind, bits=bits,
+                              k=k, clip_abs=clip_abs),
+            grid=(nb,),
+            in_specs=[pl.BlockSpec((er, li), lambda i: (i, 0)),
+                      pl.BlockSpec((1,), lambda i: (0,)),
+                      _lut_spec()],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(x2d, scale, jnp.asarray(lut, jnp.float32))
     return pl.pallas_call(
         functools.partial(_ef_encode_body, kind=kind, bits=bits, k=k,
                           clip_abs=clip_abs),
         grid=(nb,),
-        in_specs=[pl.BlockSpec((ENC_ROWS, li), lambda i: (i, 0)),
+        in_specs=[pl.BlockSpec((er, li), lambda i: (i, 0)),
                   pl.BlockSpec((1,), lambda i: (0,))],
-        out_specs=[pl.BlockSpec((ENC_ROWS, lo), lambda i: (i, 0)),
-                   pl.BlockSpec((ENC_ROWS, li), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((rows, lo), jnp.uint8),
-                   jax.ShapeDtypeStruct((rows, li), jnp.float32)],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(x2d, jnp.asarray(scale, jnp.float32).reshape(1))
+    )(x2d, scale)
 
 
 # ---------------------------------------------------------------------------
@@ -342,13 +436,14 @@ def _pack_body(codes_ref, payload_ref, *, bits):
 def pack_pallas(codes2d: jax.Array, bits: int, *, interpret: bool):
     """(R, lanes_in) codes -> (R, lanes_out) uint8, one launch."""
     rows = codes2d.shape[0]
+    er = enc_rows()
     li, lo = lanes_in(bits), lanes_out(bits)
-    assert codes2d.shape[1] == li and rows % ENC_ROWS == 0
+    assert codes2d.shape[1] == li and rows % er == 0
     return pl.pallas_call(
         functools.partial(_pack_body, bits=bits),
-        grid=(rows // ENC_ROWS,),
-        in_specs=[pl.BlockSpec((ENC_ROWS, li), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((ENC_ROWS, lo), lambda i: (i, 0)),
+        grid=(rows // er,),
+        in_specs=[pl.BlockSpec((er, li), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((er, lo), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, lo), jnp.uint8),
         interpret=interpret,
     )(codes2d)
@@ -361,14 +456,15 @@ def _unpack_body(payload_ref, codes_ref, *, bits):
 
 def unpack_pallas(payload2d: jax.Array, bits: int, *, interpret: bool):
     rows = payload2d.shape[0]
+    er = enc_rows()
     li, lo = lanes_in(bits), lanes_out(bits)
-    assert payload2d.shape[1] == lo and rows % ENC_ROWS == 0
+    assert payload2d.shape[1] == lo and rows % er == 0
     dtype = jnp.int16 if bits == 16 else jnp.int8
     return pl.pallas_call(
         functools.partial(_unpack_body, bits=bits),
-        grid=(rows // ENC_ROWS,),
-        in_specs=[pl.BlockSpec((ENC_ROWS, lo), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((ENC_ROWS, li), lambda i: (i, 0)),
+        grid=(rows // er,),
+        in_specs=[pl.BlockSpec((er, lo), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((er, li), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, li), dtype),
         interpret=interpret,
     )(payload2d)

@@ -27,9 +27,21 @@ def main():
     ap.add_argument("--k-x", type=int, default=6)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache dir (default "
+                         "$REPRO_COMPILE_CACHE or ~/.cache/repro/xla)")
+    ap.add_argument("--no-compile-cache", action="store_true")
+    ap.add_argument("--aot-dir", default=None, metavar="DIR",
+                    help="AOT artifact dir for the compiled decode step "
+                         "(repro.perf.aot): warm restarts skip compilation")
     args = ap.parse_args()
 
     import jax
+    from repro import perf
+    if not args.no_compile_cache:
+        cache_dir = perf.enable_persistent_cache(args.compile_cache)
+        if cache_dir:
+            print(f"compile cache: {cache_dir}")
     import numpy as np
     from repro.configs import get_config
     from repro.models.model import Model
@@ -52,7 +64,8 @@ def main():
         print(f"arch={args.arch} params={fp_bytes / 1e6:.1f}MB fp32")
 
     session = ServeSession(model, params, slots=args.slots,
-                           max_seq=args.max_seq, seed=args.seed)
+                           max_seq=args.max_seq, seed=args.seed,
+                           aot_dir=args.aot_dir)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,
                                              size=args.prompt_len)),

@@ -67,11 +67,24 @@ def main():
                     help="restore the newest checkpoint under --ckpt-dir")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--history-out", default=None)
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache dir (default "
+                         "$REPRO_COMPILE_CACHE or ~/.cache/repro/xla)")
+    ap.add_argument("--no-compile-cache", action="store_true")
+    ap.add_argument("--aot-dir", default=None, metavar="DIR",
+                    help="AOT step-artifact dir: restart/resume loads the "
+                         "serialized compiled train step instead of "
+                         "tracing+compiling (repro.perf.aot)")
     args = ap.parse_args()
     if args.resume and not args.ckpt_dir:
         ap.error("--resume requires --ckpt-dir")
 
     import jax
+    from repro import perf
+    if not args.no_compile_cache:
+        cache_dir = perf.enable_persistent_cache(args.compile_cache)
+        if cache_dir:
+            print(f"compile cache: {cache_dir}")
     from repro.configs import get_config
     from repro.models.model import Model
     from repro.launch.mesh import make_local_mesh
@@ -104,7 +117,8 @@ def main():
     sc = SessionConfig(log_every=args.log_every, ckpt_every=args.ckpt_every,
                        ckpt_dir=args.ckpt_dir, ckpt_keep=args.ckpt_keep,
                        ckpt_codec=args.ckpt_codec,
-                       scan_chunk=args.scan_chunk, prefetch=args.prefetch)
+                       scan_chunk=args.scan_chunk, prefetch=args.prefetch,
+                       aot_dir=args.aot_dir)
     sess = TrainSession.from_artifacts(art, batches, sc,
                                        key=jax.random.PRNGKey(args.seed))
     try:

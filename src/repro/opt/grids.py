@@ -18,8 +18,11 @@ grids take pre-drawn uniforms so both backends consume identical bits.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def block_amax(x: jax.Array) -> jax.Array:
@@ -66,6 +69,41 @@ def log_dequantize(codes: jax.Array, scale: jax.Array, k_g: int) -> jax.Array:
     val = jnp.exp2(mag - (float(k_g) + 1.0))
     val = jnp.where(mag == 0, 0.0, val)
     return jnp.sign(c) * val * scale
+
+
+@functools.lru_cache(maxsize=None)
+def log_dequant_table(k_g: int, bits: int) -> np.ndarray:
+    """Scale-1 dequant values for every ``bits``-wide lane code, ordered by
+    raw lane value (index = code + 2^{bits-1}).
+
+    A k_g log grid has only 2k_g+3 representable values, so decode can be a
+    table gather instead of a per-element exp2. The table is built by
+    evaluating :func:`log_dequantize` itself rather than recomputing powers
+    of two host-side: XLA lowers exp2 as exp(x*ln2), which is off by an ulp
+    for large integral arguments, and bit-identity must hold for *every*
+    representable lane code, in-range or not.
+    """
+    n = 1 << bits
+    # first call may happen under an outer jit trace (the codec entry
+    # points build it lazily); force compile-time eval so the oracle runs
+    # concretely and the table is a plain host constant.
+    with jax.ensure_compile_time_eval():
+        codes = jnp.arange(-(n // 2), n // 2, dtype=jnp.int32)
+        table = log_dequantize(codes, jnp.float32(1.0), k_g)
+    return np.asarray(table)
+
+
+def log_dequantize_lut(codes: jax.Array, scale: jax.Array, lut: jax.Array) -> jax.Array:
+    """Table form of :func:`log_dequantize`: ``lut[code + n/2] * scale``.
+
+    Bit-identical to the oracle because the table holds ``sign(c) * val``
+    at scale 1 and the original associates as ``(sign(c) * val) * scale``.
+    ``lut`` comes from :func:`log_dequant_table`; codes must be lane-range
+    (|c| < 2^{bits-1}), which every packed payload guarantees.
+    """
+    lut = jnp.asarray(lut, dtype=jnp.float32)
+    idx = codes.astype(jnp.int32) + lut.shape[0] // 2
+    return jnp.take(lut, idx, axis=0, mode="clip") * scale
 
 
 # ---------------------------------------------------------------------------

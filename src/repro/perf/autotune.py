@@ -1,0 +1,64 @@
+"""Per-backend tile-width autotuning for the fused codec kernels.
+
+The fused kernels step their grid in ``comm.kernels.enc_rows()`` rows.
+The right value is backend-dependent (VMEM budget and VPU shape on TPU
+generations differ; interpret mode on CPU prefers fewer, fatter grid
+steps), so rather than bake one constant, :func:`tune_enc_rows` times a
+codec round-trip at each candidate and installs the winner via
+``comm.kernels.set_enc_rows`` for ``jax.default_backend()``.
+
+Retuning changes padded tile shapes, which keys fresh jit entries - by
+design the tuned value is installed once at startup (launchers /
+benchmarks), not flipped mid-run.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import codec as C
+from repro.comm import kernels as K
+
+CANDIDATE_ROWS = (8, 16, 32, 64)
+
+
+def _time_roundtrip(spec: str, numel: int, iters: int) -> float:
+    cd = C.get_codec(spec)
+    x = jax.random.normal(jax.random.PRNGKey(0), (numel,), jnp.float32)
+    wb = cd.encode(x, backend="pallas")
+    cd.decode(wb, backend="pallas").block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        wb = cd.encode(x, backend="pallas")
+        cd.decode(wb, backend="pallas").block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def tune_enc_rows(spec: str = "log:6", *, numel: int = 1 << 18,
+                  iters: int = 3,
+                  candidates: Sequence[int] = CANDIDATE_ROWS,
+                  backend: Optional[str] = None,
+                  install: bool = True) -> dict:
+    """Measure a fused encode+decode round-trip per candidate tile rows.
+
+    Returns ``{"timings_s": {rows: seconds}, "best": rows,
+    "installed": bool}``; with ``install=True`` the best value is left
+    installed for the active backend (otherwise the previous override is
+    restored).
+    """
+    key = backend or jax.default_backend()
+    prev = K._ENC_ROWS_OVERRIDE.get(key)
+    timings = {}
+    try:
+        for rows in candidates:
+            K.set_enc_rows(rows, backend=key)
+            timings[rows] = _time_roundtrip(spec, numel, iters)
+    finally:
+        K.set_enc_rows(prev, backend=key)
+    best = min(timings, key=timings.get)
+    if install:
+        K.set_enc_rows(best, backend=key)
+    return {"timings_s": timings, "best": best, "installed": install}

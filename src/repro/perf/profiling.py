@@ -1,0 +1,52 @@
+"""``jax.profiler`` trace harness for the benchmark suites.
+
+``benchmarks/run.py --trace`` wraps a whole suite in one
+:func:`trace` context and each bench in an :func:`annotate` scope, so
+the resulting TensorBoard/Perfetto timeline carries ``bench:<name>``
+markers around every kernel dispatch. This is the tool that makes a
+fused kernel spending its time in a per-element transcendental (the
+log-decode 0.23x regression) visible at authoring time instead of five
+PRs later.
+
+View a trace with ``tensorboard --logdir <dir>`` (Profile tab) or feed
+the ``*.xplane.pb`` / ``*.trace.json.gz`` under
+``<dir>/plugins/profile/<run>/`` to ui.perfetto.dev.
+"""
+from __future__ import annotations
+
+import contextlib
+import glob
+import os
+from typing import Iterator, Optional
+
+import jax
+
+DEFAULT_TRACE_DIR = os.path.join("results", "traces")
+
+
+@contextlib.contextmanager
+def trace(log_dir: Optional[str] = None, *,
+          enabled: bool = True) -> Iterator[Optional[str]]:
+    """Profile everything inside the context into ``log_dir``.
+
+    Yields the log dir (or None when ``enabled=False``, so callers can
+    wrap unconditionally: ``with trace(d, enabled=args.trace):``).
+    """
+    if not enabled:
+        yield None
+        return
+    log_dir = log_dir or DEFAULT_TRACE_DIR
+    os.makedirs(log_dir, exist_ok=True)
+    with jax.profiler.trace(log_dir):
+        yield log_dir
+
+
+def annotate(name: str):
+    """Named scope on the profiler timeline (``TraceAnnotation``)."""
+    return jax.profiler.TraceAnnotation(name)
+
+
+def trace_runs(log_dir: str) -> list:
+    """Profile run directories written under ``log_dir``, newest last."""
+    runs = glob.glob(os.path.join(log_dir, "plugins", "profile", "*"))
+    return sorted(runs, key=os.path.getmtime)

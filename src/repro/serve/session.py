@@ -41,6 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import ShardCtx
+from repro.perf import aot
+from repro.perf import cache as perf_cache
 from repro.serve.quantized import is_quantized, make_dequant_gather
 
 
@@ -88,13 +90,20 @@ class ServeSession:
         scheduler knows each slot's earliest possible finish step
         host-side and harvests only then - O(requests) syncs, never
         O(tokens); with an empty queue the steady-state loop never syncs.
+    aot_dir: AOT artifact directory (``repro.perf.aot``) for the compiled
+        decode step, keyed on (model config digest, slots, max_seq,
+        sample mode, quantization, arg signature). A warm dir makes the
+        first dispatch skip trace+lower+compile; local decode path only
+        (a mesh ``decode_fn`` closure can't be digested, so it falls back
+        to plain jit). ``stats`` records ``compilations`` vs
+        ``aot_loads``.
     """
 
     def __init__(self, model, params, *, slots: int = 8, max_seq: int = 256,
                  eos_id: Optional[int] = None,
                  decode_fn: Optional[Callable] = None,
                  base_key: Optional[jax.Array] = None, seed: int = 0,
-                 sync_interval: int = 8):
+                 sync_interval: int = 8, aot_dir: Optional[str] = None):
         cfg = model.cfg
         if cfg.input_mode != "tokens" or cfg.arch_type == "encdec":
             raise ValueError("ServeSession serves token-input decoder LMs")
@@ -121,6 +130,9 @@ class ServeSession:
         self._step_sample = jax.jit(self._build_step(sample=True),
                                     donate_argnums=(1,))
         self._admit_fn = jax.jit(self._build_admit(), donate_argnums=(0,))
+        self._aot_dir = aot_dir if self._local else None
+        self._step_ready: Dict[bool, Callable] = {}  # sample -> executable
+        perf_cache.ensure_persistent_cache()  # opt-in via env, see cache.py
         self._state = self._init_state()
         self._base_key = _raw_key(base_key if base_key is not None
                                   else jax.random.PRNGKey(seed))
@@ -133,7 +145,8 @@ class ServeSession:
         self._next_handle = 0
         self._admit_seq = 0             # admissions since the last reseed
         self._steps = 0
-        self.stats = {"dispatches": 0, "syncs": 0, "admitted": 0}
+        self.stats = {"dispatches": 0, "syncs": 0, "admitted": 0,
+                      "compilations": 0, "aot_loads": 0}
 
     # ------------------------------------------------------------------
     # device-side state + compiled programs
@@ -345,13 +358,30 @@ class ServeSession:
             self._hot.add(handle)
         self.stats["admitted"] += 1
 
+    def _step_callable(self, sample: bool) -> Callable:
+        """The ready-to-dispatch decode step: first use per variant loads
+        the AOT artifact (or compiles and exports one) - restarts with a
+        warm ``aot_dir`` never trace or compile the decode step."""
+        fn = self._step_ready.get(sample)
+        if fn is None:
+            jitted = self._step_sample if sample else self._step_greedy
+            facts = {"program": "serve_decode", "model_cfg": self.cfg,
+                     "slots": self.slots, "max_seq": self.max_seq,
+                     "eos": self.eos_id, "sample": sample,
+                     "quantized": is_quantized(self.params)}
+            fn = aot.load_or_compile(jitted, (self.params, self._state),
+                                     aot_dir=self._aot_dir, facts=facts,
+                                     stats=self.stats)
+            self._step_ready[sample] = fn
+        return fn
+
     def step(self):
         """One decode step for every slot (a single device dispatch). While
         the pending queue is non-empty, finished slots are harvested as
         soon as one *can* have finished (plus every ``sync_interval`` steps
         when an EOS may end a request early), so queued requests claim
         slots mid-flight without a per-token host sync."""
-        fn = self._step_sample if self._hot else self._step_greedy
+        fn = self._step_callable(bool(self._hot))
         self._state = fn(self.params, self._state)
         self.stats["dispatches"] += 1
         self._steps += 1

@@ -50,6 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import store
+from repro.perf import aot
+from repro.perf import cache as perf_cache
 
 
 @dataclasses.dataclass
@@ -68,6 +70,12 @@ class SessionConfig:
     scan_chunk: int = 1        # K steps per compiled dispatch
     prefetch: int = 2          # staged batches in flight; 0 = synchronous
     check_finite: bool = True  # raise on non-finite harvested loss
+    # AOT step artifacts (repro.perf.aot): serialized compiled train
+    # steps keyed on (config digest, mesh, mode, codec, arg signature).
+    # A warm dir skips trace+lower+compile entirely on restart; None
+    # keeps plain jit (which still hits the persistent XLA cache when
+    # REPRO_COMPILE_CACHE is set).
+    aot_dir: Optional[str] = None
 
 
 def stack_batches(batch_list):
@@ -124,6 +132,15 @@ class _DistProgram:
     def step_count(self, state):
         return state["count"]
 
+    def aot_facts(self):
+        """What the compiled step's machine code depends on beyond the
+        argument signature: the mode/codec config and mesh geometry."""
+        mesh = self.art.mesh
+        return {"program": "dist", "config": self.art.config,
+                "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+                "n_workers": self.art.n_workers,
+                "worker_axes": self.art.worker_axes}
+
 
 class _SingleProgram:
     """Single-machine path: a ``repro.core.qadam``-style Optimizer plus a
@@ -173,6 +190,13 @@ class _SingleProgram:
 
     def step_count(self, state):
         return state["opt"].count
+
+    def aot_facts(self):
+        return {"program": "single",
+                "opt": type(self.opt).__name__,
+                "opt_cfg": getattr(self.opt, "cfg", None),
+                "loss_fn": getattr(self.loss_fn, "__qualname__",
+                                   repr(self.loss_fn))}
 
 
 # ---------------------------------------------------------------------------
@@ -314,7 +338,14 @@ class TrainSession:
         self._step = 0                     # optimizer steps executed
         self._prefetch: Optional[_Prefetcher] = None
         self.history: List[Dict[str, Any]] = []
-        self.stats = {"dispatches": 0, "syncs": 0, "steps": 0, "ckpts": 0}
+        # compilations / aot_loads account for every step executable this
+        # session built vs loaded ready-made (tests assert a warm AOT dir
+        # means a zero-compilation session)
+        self.stats = {"dispatches": 0, "syncs": 0, "steps": 0, "ckpts": 0,
+                      "compilations": 0, "aot_loads": 0}
+        # opt-in persistent XLA cache (no-op unless REPRO_COMPILE_CACHE
+        # is set; the launchers enable it unconditionally)
+        perf_cache.ensure_persistent_cache()
         self._ckpt_q: Optional[queue.Queue] = None
         self._ckpt_thread: Optional[threading.Thread] = None
         self._ckpt_err: Optional[BaseException] = None
@@ -344,10 +375,15 @@ class TrainSession:
 
     # -- compiled step plumbing ----------------------------------------
 
-    def _built_step(self, k: int) -> Callable:
-        """Jitted ``(state, ring, slot, batch) -> (state, ring)`` for a
+    def _built_step(self, k: int, args: tuple) -> Callable:
+        """Compiled ``(state, ring, slot, batch) -> (state, ring)`` for a
         k-step dispatch; state and ring buffers are donated, the loss
-        lands in the ring INSIDE the compiled program (no host sync)."""
+        lands in the ring INSIDE the compiled program (no host sync).
+
+        With ``cfg.aot_dir`` the executable is loaded from / exported to
+        an AOT artifact keyed on the program facts + ``args`` signature
+        (see ``repro.perf.aot``); ``stats["compilations"]`` vs
+        ``stats["aot_loads"]`` records which path ran."""
         fn = self._steps_by_k.get(k)
         if fn is not None:
             return fn
@@ -370,7 +406,12 @@ class TrainSession:
         # step on the SECOND dispatch
         out_sh = (jax.tree.map(lambda x: x.sharding, self._state),
                   self._ring.sharding)
-        fn = jax.jit(wrapped, donate_argnums=(0, 1), out_shardings=out_sh)
+        jitted = jax.jit(wrapped, donate_argnums=(0, 1),
+                         out_shardings=out_sh)
+        facts = dict(self._program.aot_facts(), k=k, chunk=self.chunk,
+                     ring_len=self._ring_len)
+        fn = aot.load_or_compile(jitted, args, aot_dir=self.cfg.aot_dir,
+                                 facts=facts, stats=self.stats)
         self._steps_by_k[k] = fn
         return fn
 
@@ -522,8 +563,8 @@ class TrainSession:
             if self._slot + k > self._ring_len:
                 self._slot = 0
             sl, i0 = self._slot, self._step
-            self._state, self._ring = self._built_step(k)(
-                self._state, self._ring, sl, batch)
+            args = (self._state, self._ring, sl, batch)
+            self._state, self._ring = self._built_step(k, args)(*args)
             self._record_segment(i0 + 1, sl, k)
             self._slot += k
             self._step += k

@@ -200,6 +200,85 @@ class TestByteAccounting:
         assert payload.nbytes == n_rows * cd.payload_nbytes(c)
 
 
+class TestLogDequantLUT:
+    """The SMEM dequant table that replaced the fused decoder's
+    per-element exp2 (the PR-5 0.23x regression). The table is built by
+    evaluating ``grids.log_dequantize`` itself - XLA lowers exp2 as
+    exp(x*ln2), inexact for large integral exponents, so any
+    independently built table would diverge from the oracle by an ulp.
+    Every contract here is BITWISE."""
+
+    LOG_SPECS = [s for s in ALL_SPECS if s.startswith("log")]
+
+    @pytest.mark.parametrize("spec", LOG_SPECS)
+    def test_table_matches_oracle(self, spec):
+        """LUT[c + n/2] == log_dequantize(c, 1.0, k_g) for every code
+        the lane can carry, in and out of the nominal range - covers
+        the odd 3/6-bit lane widths (log:1/log:2, log:7)."""
+        cd = comm.get_codec(spec)
+        lut = grids.log_dequant_table(cd.k, cd.bits)
+        n = 1 << cd.bits
+        assert lut.shape == (n,)
+        codes = jnp.arange(-(n // 2), n // 2, dtype=jnp.int32)
+        oracle = grids.log_dequantize(codes, jnp.float32(1.0), cd.k)
+        assert (np.asarray(oracle, np.float32).tobytes()
+                == np.asarray(lut, np.float32).tobytes())
+
+    @pytest.mark.parametrize("spec", LOG_SPECS)
+    @pytest.mark.parametrize("scale", [0.5, 1.0, 3.724])
+    def test_lut_dequantize_matches_oracle(self, spec, scale):
+        cd = comm.get_codec(spec)
+        n = 1 << cd.bits
+        codes = jnp.arange(-(n // 2), n // 2, dtype=jnp.int8)
+        s = jnp.float32(scale)
+        via_lut = grids.log_dequantize_lut(
+            codes, s, grids.log_dequant_table(cd.k, cd.bits))
+        oracle = grids.log_dequantize(codes, s, cd.k)
+        assert (np.asarray(via_lut, np.float32).tobytes()
+                == np.asarray(oracle, np.float32).tobytes())
+
+    @pytest.mark.parametrize("spec", LOG_SPECS)
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_fused_decode_matches_legacy_chain(self, spec, backend):
+        """decode(encode(x)) through the LUT'd fused path (both
+        backends) == the legacy unpack-then-log_dequantize chain."""
+        cd = comm.get_codec(spec)
+        x = _x(4096, seed=11)
+        wb = cd.encode(x, key=jax.random.PRNGKey(0), backend="jnp")
+        fused = wb.decode(backend=backend)
+        codes = B.unpack_flat(wb.payload, cd.bits, x.shape[0])
+        legacy = grids.log_dequantize(codes, wb.scale, cd.k)
+        assert (np.asarray(fused, np.float32).tobytes()
+                == np.asarray(legacy, np.float32).tobytes())
+
+
+class TestEncRowsOverride:
+    def test_set_enc_rows_parity(self):
+        """A per-backend tile-width override changes tiling only: wire
+        payloads and decodes stay bitwise identical to the default."""
+        from repro.comm import kernels as K
+        cd = comm.get_codec("log:6")
+        x = _x(K.ENC_ROWS * K.LANES * 2 + 130, seed=5)
+        base = cd.encode(x, backend="pallas")
+        try:
+            K.set_enc_rows(K.ENC_ROWS * 2)
+            assert K.enc_rows() == K.ENC_ROWS * 2
+            wb = cd.encode(x, backend="pallas")
+            np.testing.assert_array_equal(np.asarray(base.payload),
+                                          np.asarray(wb.payload))
+            np.testing.assert_array_equal(
+                np.asarray(base.decode(backend="pallas")),
+                np.asarray(wb.decode(backend="pallas")))
+        finally:
+            K.set_enc_rows(None)
+        assert K.enc_rows() == K.ENC_ROWS
+
+    def test_set_enc_rows_validates(self):
+        from repro.comm import kernels as K
+        with pytest.raises(ValueError):
+            K.set_enc_rows(12)   # not a multiple of the f32 sublane
+
+
 class TestWireBufferPytree:
     def test_jit_through(self):
         """WireBuffer crosses jit boundaries as a pytree (static spec)."""
