@@ -44,6 +44,11 @@ RATIO_FLOORS = [
     ("comm_encode_speedup_", 1 / 1.5),
     ("startup_train_speedup", 1.0),       # warm must beat cold
     ("startup_serve_speedup", 1.0),
+    # longest prefix first: the nofuse row must not hit the gated rule
+    ("serve_session_qx6_nofuse", 1 / 1.5),
+    ("serve_session_qx6", 1.0),           # PR-7 headline: code-resident
+                                          # serving at least as fast as fp32
+    ("serve_fused_speedup", 1 / 1.5),     # fused vs unfused, noise grace
 ]
 
 

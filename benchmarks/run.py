@@ -130,11 +130,17 @@ def bench_opt_step(emit, k_steps=16):
         emit(f"opt_qadam_scan{k_steps}_{numel}", us, f"{numel}el_per_step")
 
 
-def bench_serve(emit, requests=8, slots=4, prompt_len=16, max_new=32):
-    """ServeSession decode throughput (tok/s), fp32- vs code-resident
-    weights, plus the measured residency ratio. Smoke-scale on CPU: the
-    numbers track the serving hot path (one fused jit step per token,
-    no per-token host sync), not TPU perf."""
+def bench_serve(emit, requests=8, slots=4, prompt_len=16, max_new=32,
+                rounds=3):
+    """ServeSession decode throughput (tok/s): fp32-resident vs
+    code-resident (k_x=6, packed) through the fused dequant-matmul, and
+    the same codes through the unfused dequantize-then-matmul path. The
+    three sessions are timed in interleaved rounds (medians per tag) so
+    machine noise hits every variant equally - the qx6/fp32 ratio is a
+    GATED compare.py floor (>= 1.0: residency must also be a speed win),
+    not just a report. Smoke-scale on CPU: the numbers track the serving
+    hot path (one fused jit step per token, no per-token host sync), not
+    TPU perf."""
     import jax
     from repro.configs import get_config
     from repro.models.model import Model
@@ -144,16 +150,23 @@ def bench_serve(emit, requests=8, slots=4, prompt_len=16, max_new=32):
     cfg = get_config("yi-6b", smoke=True)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    qparams = quantize_params(params, k_x=6, min_numel=2 ** 10)
+    qparams = quantize_params(params, k_x=6, min_numel=2 ** 10, pack=True)
     rng = np.random.default_rng(0)
 
-    def run(p, tag):
-        sess = ServeSession(model, p, slots=slots, max_seq=128, seed=0)
-        # compile warmup: same prompt length as the timed requests, so the
-        # per-length prefill executable is cached before the clock starts
-        h = sess.submit(Request(prompt=list(range(1, prompt_len + 1)),
-                                max_new_tokens=4))
+    sessions = {
+        "fp32": ServeSession(model, params, slots=slots, max_seq=128, seed=0),
+        "qx6": ServeSession(model, qparams, slots=slots, max_seq=128, seed=0),
+        "qx6_nofuse": ServeSession(model, qparams, slots=slots, max_seq=128,
+                                   seed=0, fused_matmul=False),
+    }
+    # compile warmup: same prompt length as the timed requests, so the
+    # per-length prefill executable is cached before the clock starts
+    for sess in sessions.values():
+        sess.submit(Request(prompt=list(range(1, prompt_len + 1)),
+                            max_new_tokens=4))
         sess.drain()
+
+    def one_round(sess):
         reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,
                                                  size=prompt_len)),
                         max_new_tokens=max_new) for _ in range(requests)]
@@ -161,12 +174,33 @@ def bench_serve(emit, requests=8, slots=4, prompt_len=16, max_new=32):
         hs = [sess.submit(r) for r in reqs]
         res = sess.drain()
         dt = time.perf_counter() - t0
-        toks = sum(len(res[h].tokens) for h in hs)
-        emit(f"serve_session_{tag}", dt / toks * 1e6,
-             f"{toks / dt:.1f}tok_s_{requests}req_{slots}slots")
+        return dt, sum(len(res[h].tokens) for h in hs)
 
-    run(params, "fp32")
-    run(qparams, "qx6")
+    times = {tag: [] for tag in sessions}
+    toks = 0
+    for _ in range(rounds):
+        for tag, sess in sessions.items():
+            dt, toks = one_round(sess)
+            times[tag].append(dt)
+    us = {tag: float(np.median(ts)) / toks * 1e6
+          for tag, ts in times.items()}
+
+    def tok_s(tag):
+        return 1e6 / us[tag]
+
+    emit("serve_session_fp32", us["fp32"],
+         f"{tok_s('fp32'):.1f}tok_s_{requests}req_{slots}slots")
+    # the headline: packed code-resident serving at least as fast as fp32
+    emit("serve_session_qx6", us["qx6"],
+         f"{tok_s('qx6'):.1f}tok_s_{us['fp32'] / us['qx6']:.2f}x_vs_fp32",
+         us["fp32"] / us["qx6"])
+    emit("serve_session_qx6_nofuse", us["qx6_nofuse"],
+         f"{tok_s('qx6_nofuse'):.1f}tok_s_"
+         f"{us['fp32'] / us['qx6_nofuse']:.2f}x_vs_fp32",
+         us["fp32"] / us["qx6_nofuse"])
+    emit("serve_fused_speedup_qx6", 0.0,
+         f"{us['qx6_nofuse'] / us['qx6']:.2f}x_vs_unfused",
+         us["qx6_nofuse"] / us["qx6"])
     emit("serve_resident_ratio", 0.0,
          f"{params_nbytes(qparams) / params_nbytes(params):.3f}x_fp32_measured",
          params_nbytes(qparams) / params_nbytes(params))

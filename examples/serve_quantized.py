@@ -4,8 +4,12 @@ continuous-batching serving demo.
 
 Loads a smoke-scale LM, serves the same requests fp32-resident and
 Q_x-code-resident through a ServeSession, asserts the *measured* device
-bytes drop ~4x (int8 codes + per-layer scales - not a printed
-theoretical "/4"), and checks greedy outputs stay consistent.
+bytes drop ~4x (packed codes + per-layer scales - not a printed
+theoretical "/4"), and checks greedy outputs stay consistent. Quantized
+projections contract straight from the codes (the fused dequant-matmul,
+``repro.comm.matmul``); the fused and unfused sessions are asserted
+token-identical, and a k_x=2 run shows the packed 4-bit lanes cutting
+residency well below the int8 ratio.
 
   PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -23,7 +27,7 @@ def main():
     cfg = get_config("yi-6b", smoke=True)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    qparams = quantize_params(params, k_x=6, min_numel=2 ** 10)
+    qparams = quantize_params(params, k_x=6, min_numel=2 ** 10, pack=True)
 
     fp_bytes = params_nbytes(params)
     q_bytes = params_nbytes(qparams)
@@ -32,6 +36,14 @@ def main():
           f"({q_bytes / fp_bytes:.2f}x of fp32, measured on the arrays)")
     assert q_bytes <= 0.30 * fp_bytes, (
         f"quantized residency regressed: {q_bytes} vs {fp_bytes} fp32")
+
+    # k_x=2 packs to the registry's 4-bit lanes: sub-int8 residency
+    q2params = quantize_params(params, k_x=2, min_numel=2 ** 10, pack=True)
+    q2_bytes = params_nbytes(q2params)
+    print(f"k_x=2 packed 4-bit lanes: {q2_bytes / 1e6:.2f}MB "
+          f"({q2_bytes / fp_bytes:.2f}x of fp32, measured)")
+    assert q2_bytes <= 0.16 * fp_bytes, (
+        f"packed 4-bit residency regressed: {q2_bytes} vs {fp_bytes} fp32")
 
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size, size=12)),
@@ -58,6 +70,21 @@ def main():
     # k_x=6 on random smoke weights drifts after a few tokens; the gate is
     # first-token agreement (with margin), not the full-sequence figure
     assert first >= 0.75, "quantized serving diverged from fp32 immediately"
+
+    # the fused dequant-matmul is bitwise-identical to dequantize-then-
+    # matmul, so fused vs unfused sessions must emit IDENTICAL tokens -
+    # at the aggressive k_x=2 lanes too, where any decode bug would show
+    def run(sess):
+        handles = [sess.submit(r) for r in reqs]
+        res = sess.drain()
+        return [res[h].tokens for h in handles]
+
+    for tag, p in (("qx6", qparams), ("qx2", q2params)):
+        tf = run(ServeSession(model, p, slots=4, max_seq=64))
+        tp = run(ServeSession(model, p, slots=4, max_seq=64,
+                              fused_matmul=False))
+        assert tf == tp, f"{tag}: fused tokens diverged from unfused"
+    print("fused dequant-matmul tokens identical to unfused (qx6 + qx2)")
 
 
 if __name__ == "__main__":

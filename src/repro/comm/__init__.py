@@ -7,6 +7,7 @@ and the ``repro.core.quantizers`` / ``repro.kernels`` compat shims.
   * :mod:`repro.comm.bits`    - lane packing math (2/3/4/6/8/16-bit)
   * :mod:`repro.comm.kernels` - fused single-launch Pallas kernels
   * :mod:`repro.comm.codec`   - the Codec registry + WireBuffer
+  * :mod:`repro.comm.matmul`  - fused dequant-matmul (code-resident serving)
 """
 from repro.comm.bits import (  # noqa: F401
     SUPPORTED_BITS,
@@ -36,4 +37,9 @@ from repro.comm.codec import (  # noqa: F401
     encode_rows_ef,
     get_codec,
     resolve_backend,
+)
+from repro.comm.matmul import (  # noqa: F401
+    dequant_matmul,
+    mm_cols,
+    set_mm_cols,
 )

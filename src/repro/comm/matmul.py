@@ -1,0 +1,261 @@
+"""Fused dequant-matmul for code-resident Q_x weights (the serving hot
+path).
+
+``QuantizedLeaf.dequantize()`` runs unpack + dequant as a separate
+memory-bound pass that materializes the full fp32 weight tensor before
+every projection. Here the contraction consumes the codes directly: the
+Pallas kernel tiles the OUTPUT columns, loads one packed code tile +
+the scale per grid step, unpacks and dequantizes in VMEM (sub-8-bit
+lanes gather from the PR-6 style SMEM dequant table instead of
+re-deriving values per element), and feeds the tile straight into
+``jnp.dot`` - the fp32 weight tensor never exists in HBM.
+
+Bit-exactness contract (asserted by ``tests/test_comm_matmul.py``):
+every backend returns *exactly* ``x @ leaf.dequantize().astype(dt)``.
+Two properties make that cheap to guarantee:
+
+  * tiling only the output columns keeps each output element's
+    k-reduction identical to the full dot (column tiles of a dot equal
+    the corresponding columns of the whole dot; splitting K would
+    reorder the accumulation and is therefore never done);
+  * uniform dequant is ``(codes / 2^k) * scale`` - the division is an
+    exact power of two, so the SMEM table (scale-1 values) followed by
+    one multiply rounds identically to the elementwise form.
+
+Backend dispatch mirrors ``repro.comm.codec``: Pallas on TPU for
+covered shapes, the jnp reference (one fused XLA program) everywhere
+else, and an explicit ``backend=`` always wins ("pallas" off TPU runs
+in interpret mode). Shapes the kernel doesn't cover - output width not
+a multiple of the tile, 1-element tiles, oversized activations - fall
+back to dequantize-then-matmul inside the same jit.
+
+``mm_cols()`` is the per-backend output-tile width;
+``repro.perf.autotune.tune_mm_cols`` measures candidates and installs
+the winner via ``set_mm_cols``, exactly like ``tune_enc_rows`` does for
+the codec kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.comm import bits as B
+from repro.comm import codec as C
+from repro.opt import grids
+
+# output columns per grid step (one N-tile of the result). 128 keeps the
+# packed tile a whole number of VREG lanes at every supported lane width
+# (group sizes divide it) and matches the MXU column width.
+MM_COLS = 128
+
+# per-backend tile-width override (autotuning hook), same shape as
+# kernels._ENC_ROWS_OVERRIDE: ``repro.perf.autotune.tune_mm_cols``
+# installs the measured winner for ``jax.default_backend()``.
+_MM_COLS_OVERRIDE: dict = {}
+
+# activations taller than this skip the Pallas path (the kernel holds
+# the whole (M, K) activation in VMEM for every grid step)
+_MAX_FUSED_ROWS = 1024
+
+
+def mm_cols() -> int:
+    """Output columns per fused dequant-matmul grid step."""
+    return _MM_COLS_OVERRIDE.get(jax.default_backend(), MM_COLS)
+
+
+def set_mm_cols(cols, backend: Optional[str] = None) -> None:
+    """Install (or, with ``cols=None``, clear) the output-tile width for
+    ``backend`` (default: the active one). Must be a positive multiple
+    of 128 so packed tiles stay whole byte groups and whole VREGs."""
+    key = backend or jax.default_backend()
+    if cols is None:
+        _MM_COLS_OVERRIDE.pop(key, None)
+        return
+    if cols % 128 != 0 or cols <= 0:
+        raise ValueError(f"mm_cols must be a positive multiple of 128: {cols}")
+    _MM_COLS_OVERRIDE[key] = int(cols)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# dequant helpers (both backends call the same repro.opt.grids math)
+# ---------------------------------------------------------------------------
+
+def _dequant_codes(codes, scale, *, k_x, w_dtype, cast_dtype, lut=None):
+    """Signed codes -> weights, replicating the unfused cast chain
+    ``dequantize() -> .astype(leaf.dtype) -> .astype(x.dtype)`` exactly
+    (collapsing it would change values when the leaf dtype is narrower
+    than the activation dtype)."""
+    if lut is not None:
+        w = grids.dequantize_lut(codes, scale, lut)
+    else:
+        w = grids.uniform_dequantize(codes, scale, k_x)
+    w = w.astype(jnp.dtype(w_dtype))
+    if cast_dtype is not None:
+        w = w.astype(jnp.dtype(cast_dtype))
+    return w
+
+
+def _unpack_tile(codes, pack_bits, n):
+    if pack_bits:
+        return B.unpack_lanes(codes, pack_bits, n)
+    return codes
+
+
+# ---------------------------------------------------------------------------
+# jnp reference backend (and universal fallback): dequantize-then-matmul
+# in ONE jit program - the oracle the Pallas kernel must match bitwise
+# ---------------------------------------------------------------------------
+
+def _matmul_jnp(x2, codes, scale, *, k_x, pack_bits, n, w_dtype,
+                cast_dtype, transpose):
+    full = B.unpack_rows(codes, pack_bits, n) if pack_bits else codes
+    w = _dequant_codes(full, scale, k_x=k_x, w_dtype=w_dtype,
+                       cast_dtype=cast_dtype)
+    return x2 @ (w.T if transpose else w)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels: grid over output-column tiles, full (M, K) activation
+# and one code tile per step; codes never leave VMEM unpacked
+# ---------------------------------------------------------------------------
+
+def _mm_body(x_ref, codes_ref, scale_ref, o_ref, *, k_x, pack_bits,
+             w_dtype, cast_dtype):
+    """One output tile: unpack + dequant the code tile, one MXU dot."""
+    codes = _unpack_tile(codes_ref[...], pack_bits, o_ref.shape[-1])
+    w = _dequant_codes(codes, scale_ref[0], k_x=k_x, w_dtype=w_dtype,
+                       cast_dtype=cast_dtype)
+    o_ref[...] = jnp.dot(x_ref[...], w)
+
+
+def _mm_lut_body(x_ref, codes_ref, scale_ref, lut_ref, o_ref, *, k_x,
+                 pack_bits, w_dtype, cast_dtype):
+    """Sub-8-bit lanes: dequant gathers from the SMEM scale-1 table (the
+    PR-6 ``dequant_lut`` pattern) instead of per-element arithmetic."""
+    codes = _unpack_tile(codes_ref[...], pack_bits, o_ref.shape[-1])
+    w = _dequant_codes(codes, scale_ref[0], k_x=k_x, w_dtype=w_dtype,
+                       cast_dtype=cast_dtype, lut=lut_ref[...])
+    o_ref[...] = jnp.dot(x_ref[...], w)
+
+
+def _mm_t_body(x_ref, codes_ref, scale_ref, o_ref, *, k_x, pack_bits, n,
+               w_dtype, cast_dtype):
+    """Transposed orientation (``x @ W.T``, tied embedding heads): the
+    grid tiles code ROWS; each step contracts x against a row tile of
+    the dequantized weight (= a column tile of W.T)."""
+    codes = _unpack_tile(codes_ref[...], pack_bits, n)
+    w = _dequant_codes(codes, scale_ref[0], k_x=k_x, w_dtype=w_dtype,
+                       cast_dtype=cast_dtype)
+    o_ref[...] = jax.lax.dot_general(x_ref[...], w,
+                                     (((1,), (1,)), ((), ())))
+
+
+def _lut_spec():
+    return pl.BlockSpec(memory_space=pltpu.SMEM)
+
+
+def _matmul_pallas(x2, codes, scale, *, k_x, pack_bits, n, w_dtype,
+                   cast_dtype, transpose, interpret):
+    M, K = x2.shape
+    tile = mm_cols()
+    scale = jnp.asarray(scale, jnp.float32).reshape(1)
+    out_dtype = jnp.result_type(x2.dtype,
+                                jnp.dtype(cast_dtype or w_dtype))
+    xspec = pl.BlockSpec((M, K), lambda i: (0, 0))
+    sspec = pl.BlockSpec((1,), lambda i: (0,))
+    if transpose:
+        rows = codes.shape[0]
+        cspec = pl.BlockSpec((tile, codes.shape[1]), lambda i: (i, 0))
+        body = functools.partial(_mm_t_body, k_x=k_x, pack_bits=pack_bits,
+                                 n=n, w_dtype=w_dtype, cast_dtype=cast_dtype)
+        return pl.pallas_call(
+            body,
+            grid=(rows // tile,),
+            in_specs=[xspec, cspec, sspec],
+            out_specs=pl.BlockSpec((M, tile), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((M, rows), out_dtype),
+            interpret=interpret,
+        )(x2, codes, scale)
+    # normal orientation: tile the n output columns; a tile of `tile`
+    # codes is `tile * bits / 8` payload bytes (tile is a multiple of
+    # every group size, so tiles land on byte-group boundaries)
+    cw = tile * pack_bits // 8 if pack_bits else tile
+    cspec = pl.BlockSpec((K, cw), lambda i: (0, i))
+    operands = [x2, codes, scale]
+    in_specs = [xspec, cspec, sspec]
+    if pack_bits:
+        body = functools.partial(_mm_lut_body, k_x=k_x, pack_bits=pack_bits,
+                                 w_dtype=w_dtype, cast_dtype=cast_dtype)
+        in_specs.append(_lut_spec())
+        operands.append(jnp.asarray(
+            grids.uniform_dequant_table(k_x, pack_bits), jnp.float32))
+    else:
+        body = functools.partial(_mm_body, k_x=k_x, pack_bits=pack_bits,
+                                 w_dtype=w_dtype, cast_dtype=cast_dtype)
+    return pl.pallas_call(
+        body,
+        grid=(n // tile,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((M, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((M, n), out_dtype),
+        interpret=interpret,
+    )(*operands)
+
+
+def _pallas_covers(x2, codes, *, pack_bits, n, transpose) -> bool:
+    tile = mm_cols()
+    if x2.shape[0] > _MAX_FUSED_ROWS:
+        return False
+    if transpose:
+        return codes.shape[0] % tile == 0
+    if n % tile != 0:
+        return False
+    # packed rows carry tail-group padding only when n isn't a whole
+    # number of groups; n % tile == 0 already guarantees alignment
+    return True
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def dequant_matmul(x, codes, scale, *, k_x: int, n: int, pack_bits: int = 0,
+                   w_dtype: str = "float32", cast_dtype: Optional[str] = None,
+                   transpose: bool = False,
+                   backend: Optional[str] = None) -> jax.Array:
+    """``x @ W`` (or ``x @ W.T``) where W exists only as integer codes.
+
+    x: (..., K) activations ((..., d) against code rows for
+        ``transpose=True``).
+    codes: (K, payload|n) - packed uint8 rows (``pack_bits`` set) or raw
+        int8/int16 codes; for ``transpose`` the roles flip ((rows, ...)
+        codes contract along their unpacked width).
+    scale: per-tensor () amax scale (per-layer stacks are vmapped by the
+        caller, one scalar per layer).
+    n: the LOGICAL last-dim length of the weight (the codes' aux shape -
+        packed payloads and scan-sliced stacked leaves can't tell).
+    w_dtype / cast_dtype: the leaf's dtype and the pending ``astype``
+        target - the unfused cast chain, replicated exactly.
+
+    Bitwise identical to ``x @ dequantize-then-cast`` on every backend.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    bk = C.resolve_backend(backend, codes.size, tile=x2.shape[1] * mm_cols())
+    kw = dict(k_x=k_x, pack_bits=pack_bits, n=n, w_dtype=w_dtype,
+              cast_dtype=cast_dtype, transpose=transpose)
+    if bk == "pallas" and _pallas_covers(x2, codes, pack_bits=pack_bits,
+                                         n=n, transpose=transpose):
+        out2 = _matmul_pallas(x2, codes, scale, interpret=_interpret(), **kw)
+    else:
+        out2 = _matmul_jnp(x2, codes, scale, **kw)
+    return out2.reshape(lead + (out2.shape[-1],))

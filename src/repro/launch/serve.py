@@ -23,8 +23,15 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--quantized", action="store_true",
-                    help="code-resident Q_x weights (int8 codes + scales)")
+                    help="code-resident Q_x weights (packed codes + scales;"
+                         " projections run the fused dequant-matmul)")
     ap.add_argument("--k-x", type=int, default=6)
+    ap.add_argument("--no-pack", action="store_true",
+                    help="keep codes unpacked (one int8/int16 per code)"
+                         " instead of the registry's 3/4/6-bit lanes")
+    ap.add_argument("--no-fused-matmul", action="store_true",
+                    help="dequantize-then-matmul instead of contracting"
+                         " straight from codes (debug/perf comparison)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--compile-cache", default=None, metavar="DIR",
@@ -55,7 +62,8 @@ def main():
     params = model.init(jax.random.PRNGKey(args.seed))
     fp_bytes = params_nbytes(params)
     if args.quantized:
-        params = quantize_params(params, k_x=args.k_x)
+        params = quantize_params(params, k_x=args.k_x,
+                                 pack=not args.no_pack)
         q_bytes = params_nbytes(params)
         print(f"arch={args.arch} params={fp_bytes / 1e6:.1f}MB fp32 -> "
               f"{q_bytes / 1e6:.1f}MB resident codes "
@@ -65,7 +73,8 @@ def main():
 
     session = ServeSession(model, params, slots=args.slots,
                            max_seq=args.max_seq, seed=args.seed,
-                           aot_dir=args.aot_dir)
+                           aot_dir=args.aot_dir,
+                           fused_matmul=not args.no_fused_matmul)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,
                                              size=args.prompt_len)),

@@ -52,6 +52,26 @@ class ShardCtx:
 
 
 # ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def code_resident(w) -> bool:
+    """True for code-resident quantized weights (duck-typed on
+    ``dequantize()`` so the model layers never import the serve stack;
+    see ``repro.serve.quantized.QuantizedLeaf``)."""
+    return hasattr(w, "dequantize")
+
+
+def pmatmul(x, w):
+    """Weight projection ``x @ w`` in x's dtype - the model's single
+    contraction choke point. ``w`` is a float array, or a code-resident
+    ``QuantizedLeaf`` whose ``__rmatmul__`` dispatches to the fused
+    dequant-matmul (``repro.comm.matmul``) so the fp32 weight tensor is
+    never materialized; both paths are bitwise identical."""
+    return x @ w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Norms
 # ---------------------------------------------------------------------------
 
@@ -222,13 +242,12 @@ def decode_attention(q, k_cache, v_cache, *, total_len, window=0,
 # ---------------------------------------------------------------------------
 
 def mlp(params, x, act="silu"):
-    dt = x.dtype
     if act == "gelu":  # whisper: non-gated
-        h = jax.nn.gelu(x @ params["w_up"].astype(dt), approximate=True)
-        return h @ params["w_down"].astype(dt)
-    h = (jax.nn.silu(x @ params["w_gate"].astype(dt))
-         * (x @ params["w_up"].astype(dt)))
-    return h @ params["w_down"].astype(dt)
+        h = jax.nn.gelu(pmatmul(x, params["w_up"]), approximate=True)
+        return pmatmul(h, params["w_down"])
+    h = (jax.nn.silu(pmatmul(x, params["w_gate"]))
+         * pmatmul(x, params["w_up"]))
+    return pmatmul(h, params["w_down"])
 
 
 # ---------------------------------------------------------------------------
@@ -245,7 +264,7 @@ def moe(params, x, mcfg: MoEConfig, ctx: ShardCtx = ShardCtx()):
     n_dev = ctx.cp_size if ctx.sharded else 1
     E_loc = E // n_dev
 
-    logits = (xt @ params["router"].astype(xt.dtype)).astype(jnp.float32)
+    logits = pmatmul(xt, params["router"]).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, gate_idx = jax.lax.top_k(probs, mcfg.top_k)    # (T, k)
     gate_vals = gate_vals / jnp.maximum(
@@ -500,7 +519,7 @@ def mamba2_mix(params, x, scfg: SSMConfig, d_model: int,
     H = di // Pd
     conv_dim = di + 2 * G * N
 
-    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    zxbcdt = pmatmul(x, params["in_proj"])
     z, xbc, dt = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
@@ -546,5 +565,5 @@ def mamba2_mix(params, x, scfg: SSMConfig, d_model: int,
     y = y + xs * params["D"].astype(xs.dtype)[None, None, :, None]
     y = y.reshape(B, S, di)
     y = rmsnorm(y * jax.nn.silu(z), params["norm_w"])
-    out = y @ params["out_proj"].astype(y.dtype)
+    out = pmatmul(y, params["out_proj"])
     return out, {"ssm": new_ssm, "conv": new_conv_tail}

@@ -202,14 +202,14 @@ class Model:
         cfg = self.cfg
         B, S, d = h.shape
         H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
-        q = h @ p["q"].astype(h.dtype)
+        q = L.pmatmul(h, p["q"])
         if cfg.qkv_bias:
             q = q + p["bq"].astype(h.dtype)
         q = q.reshape(B, S, H, hd)
         if kv_override is None:
             kh = h
-            k = kh @ p["k"].astype(h.dtype)
-            v = kh @ p["v"].astype(h.dtype)
+            k = L.pmatmul(kh, p["k"])
+            v = L.pmatmul(kh, p["v"])
             if cfg.qkv_bias:
                 k = k + p["bk"].astype(h.dtype)
                 v = v + p["bv"].astype(h.dtype)
@@ -245,12 +245,12 @@ class Model:
                 causal=causal, window=window,
                 softcap=cfg.attn_softcap, meta_tokens=cfg.meta_tokens,
                 ctx=ShardCtx())  # already gathered
-            out = out.reshape(B, S, H * hd) @ p["o"].astype(h.dtype)
+            out = L.pmatmul(out.reshape(B, S, H * hd), p["o"])
             return (out, (k, v)) if return_kv else out
         out = L.attention(q, k, v, q_pos=q_pos, causal=causal,
                           window=window, softcap=cfg.attn_softcap,
                           meta_tokens=cfg.meta_tokens, ctx=ctx)
-        out = out.reshape(B, S, H * hd) @ p["o"].astype(h.dtype)
+        out = L.pmatmul(out.reshape(B, S, H * hd), p["o"])
         return (out, (k, v)) if return_kv else out
 
     # ---------------- decoder-only forward ----------------
@@ -258,6 +258,9 @@ class Model:
         cfg = self.cfg
         if cfg.input_mode == "embeddings":
             x = batch["embeds"].astype(_dt(cfg))
+        elif L.code_resident(params["embed"]):
+            # code-resident table: gather only the hit rows' codes
+            x = params["embed"].astype(_dt(cfg)).take(batch["tokens"])
         else:
             x = params["embed"].astype(_dt(cfg))[batch["tokens"]]
         if cfg.emb_scale:
@@ -355,9 +358,13 @@ class Model:
     def _head(self, params, x):
         cfg = self.cfg
         if cfg.tie_embeddings:
-            logits = x @ params["embed"].astype(x.dtype).T
+            w = params["embed"]
+            if L.code_resident(w):
+                logits = w.astype(x.dtype).matmul_t(x)
+            else:
+                logits = x @ w.astype(x.dtype).T
         else:
-            logits = x @ params["unembed"].astype(x.dtype)
+            logits = L.pmatmul(x, params["unembed"])
         logits = logits.astype(jnp.float32)
         if cfg.final_softcap:
             logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
@@ -405,9 +412,9 @@ class Model:
                                       theta=cfg.rope_theta, ctx=ctx)
             x = x + out
             hx = L.apply_norm(x, p["ln_x"], cfg)
-            ek = (enc @ p["xattn"]["k"].astype(enc.dtype)).reshape(
+            ek = L.pmatmul(enc, p["xattn"]["k"]).reshape(
                 B, enc.shape[1], K, hd)
-            ev = (enc @ p["xattn"]["v"].astype(enc.dtype)).reshape(
+            ev = L.pmatmul(enc, p["xattn"]["v"]).reshape(
                 B, enc.shape[1], K, hd)
             xout = self._attn_sublayer(p["xattn"], hx, q_pos=q_pos, window=0,
                                        theta=cfg.rope_theta, ctx=ctx,
@@ -470,8 +477,8 @@ class Model:
 
         def fill(p):
             p = ctx.gather(p, "blocks")
-            ck = (enc @ p["xattn"]["k"].astype(enc.dtype)).reshape(B, Sa, K, hd)
-            cv = (enc @ p["xattn"]["v"].astype(enc.dtype)).reshape(B, Sa, K, hd)
+            ck = L.pmatmul(enc, p["xattn"]["k"]).reshape(B, Sa, K, hd)
+            cv = L.pmatmul(enc, p["xattn"]["v"]).reshape(B, Sa, K, hd)
             return ck, cv
 
         ck, cv = jax.vmap(fill)(params["blocks"])
@@ -494,6 +501,8 @@ class Model:
         params = ctx.gather(params, "static")
         if cfg.input_mode == "embeddings":
             x = inputs["embeds"].astype(_dt(cfg))
+        elif L.code_resident(params["embed"]):
+            x = params["embed"].astype(_dt(cfg)).take(inputs["token"])
         else:
             x = params["embed"].astype(_dt(cfg))[inputs["token"]]
         if cfg.emb_scale:
@@ -532,12 +541,12 @@ class Model:
 
             # self-attention against the cache
             pa = p["attn"]
-            q = h @ pa["q"].astype(h.dtype)
+            q = L.pmatmul(h, pa["q"])
             if cfg.qkv_bias:
                 q = q + pa["bq"].astype(h.dtype)
             q = q.reshape(B, 1, H, hd)
-            k = h @ pa["k"].astype(h.dtype)
-            v = h @ pa["v"].astype(h.dtype)
+            k = L.pmatmul(h, pa["k"])
+            v = L.pmatmul(h, pa["v"])
             if cfg.qkv_bias:
                 k = k + pa["bk"].astype(h.dtype)
                 v = v + pa["bv"].astype(h.dtype)
@@ -582,7 +591,7 @@ class Model:
                 q, kc, vc, total_len=pos + 1, window=window,
                 softcap=cfg.attn_softcap, q_pos=pos, ctx=ctx,
                 meta_kv=meta_kv)
-            attn_out = attn_out.reshape(B, 1, H * hd) @ pa["o"].astype(h.dtype)
+            attn_out = L.pmatmul(attn_out.reshape(B, 1, H * hd), pa["o"])
 
             if cfg.arch_type == "hybrid":
                 ssm_out, st = L.mamba2_mix(

@@ -128,6 +128,27 @@ def uniform_dequantize(codes: jax.Array, scale: jax.Array, k_x: int) -> jax.Arra
     return codes.astype(jnp.float32) / n * scale
 
 
+@functools.lru_cache(maxsize=None)
+def uniform_dequant_table(k_x: int, bits: int) -> np.ndarray:
+    """Scale-1 uniform dequant values per ``bits``-wide lane code, ordered
+    by raw lane value (index = code + 2^{bits-1}) - the uniform-grid twin
+    of :func:`log_dequant_table`, built by evaluating the oracle itself.
+    ``codes / 2^k`` is an exact power-of-two division, so the gathered
+    value times ``scale`` rounds identically to the elementwise form.
+    """
+    n = 1 << bits
+    with jax.ensure_compile_time_eval():
+        codes = jnp.arange(-(n // 2), n // 2, dtype=jnp.int32)
+        table = uniform_dequantize(codes, jnp.float32(1.0), k_x)
+    return np.asarray(table)
+
+
+# the gather is grid-agnostic: it applies any scale-1 lane table and
+# multiplies by scale. Alias it under a neutral name for uniform-grid
+# callers (repro.comm.matmul).
+dequantize_lut = log_dequantize_lut
+
+
 # ---------------------------------------------------------------------------
 # ternary grid (TernGrad baseline)
 # ---------------------------------------------------------------------------

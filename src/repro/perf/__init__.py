@@ -12,7 +12,8 @@ restarts:
   * :mod:`repro.perf.aot`       - ahead-of-time export/load of compiled
     train/decode steps keyed on (config digest, mesh, mode, codec);
   * :mod:`repro.perf.autotune`  - per-backend tile-width tuning for the
-    fused codec kernels (installs ``comm.kernels.set_enc_rows``).
+    fused kernels (installs ``comm.kernels.set_enc_rows`` and
+    ``comm.matmul.set_mm_cols``).
 """
 from repro.perf import aot, autotune, cache, profiling
 from repro.perf.aot import load_or_compile, step_key

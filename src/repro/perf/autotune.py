@@ -1,4 +1,5 @@
-"""Per-backend tile-width autotuning for the fused codec kernels.
+"""Per-backend tile-width autotuning for the fused Pallas kernels
+(codec encode/decode rows, dequant-matmul output columns).
 
 The fused kernels step their grid in ``comm.kernels.enc_rows()`` rows.
 The right value is backend-dependent (VMEM budget and VPU shape on TPU
@@ -21,8 +22,11 @@ import jax.numpy as jnp
 
 from repro.comm import codec as C
 from repro.comm import kernels as K
+from repro.comm import matmul as MM
+from repro.opt import engine
 
 CANDIDATE_ROWS = (8, 16, 32, 64)
+CANDIDATE_COLS = (128, 256, 512)
 
 
 def _time_roundtrip(spec: str, numel: int, iters: int) -> float:
@@ -61,4 +65,52 @@ def tune_enc_rows(spec: str = "log:6", *, numel: int = 1 << 18,
     best = min(timings, key=timings.get)
     if install:
         K.set_enc_rows(best, backend=key)
+    return {"timings_s": timings, "best": best, "installed": install}
+
+
+def _time_dequant_matmul(m: int, k: int, n: int, k_x: int,
+                         iters: int) -> float:
+    from repro import comm
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n), jnp.float32)
+    codes, scale = engine.quantize_uniform(w, k_x, absolute=False)
+    pack_bits = comm.UniformCodec(k_x=k_x, absolute=False).bits
+    if pack_bits < 8:
+        codes = comm.pack_rows(codes, pack_bits)
+    else:
+        pack_bits = 0
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k), jnp.float32)
+    fn = jax.jit(lambda x, c, s: MM.dequant_matmul(
+        x, c, s, k_x=k_x, n=n, pack_bits=pack_bits, backend="pallas"))
+    fn(x, codes, scale).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(x, codes, scale).block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def tune_mm_cols(*, m: int = 8, k: int = 1 << 10, n: int = 1 << 10,
+                 k_x: int = 6, iters: int = 3,
+                 candidates: Sequence[int] = CANDIDATE_COLS,
+                 backend: Optional[str] = None,
+                 install: bool = True) -> dict:
+    """Measure the fused dequant-matmul (``repro.comm.matmul``) per
+    candidate output-tile width and install the winner via
+    ``set_mm_cols`` - :func:`tune_enc_rows` for the serving matmul path.
+    (m, k, n) defaults model a decode-step projection: a few activation
+    rows against a square-ish weight.
+    """
+    key = backend or jax.default_backend()
+    prev = MM._MM_COLS_OVERRIDE.get(key)
+    timings = {}
+    try:
+        for cols in candidates:
+            if n % cols != 0:
+                continue  # tile must cover the output width exactly
+            MM.set_mm_cols(cols, backend=key)
+            timings[cols] = _time_dequant_matmul(m, k, n, k_x, iters)
+    finally:
+        MM.set_mm_cols(prev, backend=key)
+    best = min(timings, key=timings.get)
+    if install:
+        MM.set_mm_cols(best, backend=key)
     return {"timings_s": timings, "best": best, "installed": install}

@@ -12,10 +12,13 @@ codes themselves resident:
     ``blocks`` leaves get one amax scale *per layer* (shape ``(L,)``), so
     ``lax.scan`` slices codes and scale together and each layer dequantizes
     independently.
-  * ``make_dequant_gather()`` is a ``ShardCtx.param_gather`` hook: the model
-    dequantizes each block's leaves *inside* the layer scan, at use - only
-    one layer's fp weights are ever live, the resident footprint is the
-    codes (``params_nbytes`` measures it: ~fp32/4 at k_x<=6).
+  * ``make_dequant_gather()`` is a ``ShardCtx.param_gather`` hook: matmul-
+    shaped leaves (projections, embeddings) stay as CODES end to end -
+    their contractions run the fused dequant-matmul in
+    :mod:`repro.comm.matmul` via ``QuantizedLeaf.__rmatmul__``/``take``,
+    never materializing the fp tensor - and the remaining leaves
+    dequantize *inside* the layer scan, at use. The resident footprint is
+    the codes (``params_nbytes`` measures it: ~fp32/4 at k_x<=6).
 
 Quantization itself goes through ``repro.opt.engine`` (Pallas kernels on
 TPU, the same ``repro.opt.grids`` math everywhere else), and the packed
@@ -56,22 +59,33 @@ class QuantizedLeaf:
     shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
     dtype: str = dataclasses.field(metadata=dict(static=True))
     pack_bits: int = dataclasses.field(default=0, metadata=dict(static=True))
+    # pending ``astype`` target: leaves routed through the fused matmul
+    # record the activation-dtype cast here instead of materializing it,
+    # and the kernel replicates the dequant->dtype->cast chain exactly
+    cast: Optional[str] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     def tree_flatten(self):
         return ((self.codes, self.scale),
-                (self.k_x, self.shape, self.dtype, self.pack_bits))
+                (self.k_x, self.shape, self.dtype, self.pack_bits,
+                 self.cast))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         codes, scale = children
-        k_x, shape, dtype, pack_bits = aux
+        k_x, shape, dtype, pack_bits, cast = aux
         return cls(codes=codes, scale=scale, k_x=k_x, shape=shape,
-                   dtype=dtype, pack_bits=pack_bits)
+                   dtype=dtype, pack_bits=pack_bits, cast=cast)
 
     @property
     def nbytes(self) -> int:
         """Actual resident bytes (codes + scales)."""
         return int(self.codes.nbytes) + int(self.scale.nbytes)
+
+    def astype(self, dt) -> "QuantizedLeaf":
+        """Defer a dtype cast (models call ``w.astype(x.dtype)`` on every
+        projection); applied after dequant by every consuming path."""
+        return dataclasses.replace(self, cast=jnp.dtype(dt).name)
 
     def dequantize(self) -> jax.Array:
         """Codes -> float tensor (called per-layer inside the model scan,
@@ -86,8 +100,54 @@ class QuantizedLeaf:
         scale = self.scale
         if scale.ndim:
             scale = scale.reshape(scale.shape + (1,) * (codes.ndim - scale.ndim))
-        return grids.uniform_dequantize(codes, scale, self.k_x).astype(
+        out = grids.uniform_dequantize(codes, scale, self.k_x).astype(
             jnp.dtype(self.dtype))
+        return out.astype(jnp.dtype(self.cast)) if self.cast else out
+
+    # -- fused contraction surface (repro.comm.matmul) ------------------
+    # ``x @ leaf`` reflects to __rmatmul__ (jax arrays return
+    # NotImplemented for unknown rhs types), so models' existing
+    # ``x @ w.astype(x.dtype)`` projections dispatch here unchanged.
+
+    def _mm(self, x, *, transpose: bool = False,
+            backend: Optional[str] = None) -> jax.Array:
+        kw = dict(k_x=self.k_x, n=self.shape[-1], pack_bits=self.pack_bits,
+                  w_dtype=self.dtype, cast_dtype=self.cast,
+                  transpose=transpose, backend=backend)
+        if self.codes.ndim == 3:
+            # stacked (L, ...) leaf used outside the scan: one fused call
+            # per layer (each layer has its own scalar scale)
+            return jnp.stack([
+                comm.dequant_matmul(x[l], self.codes[l], self.scale[l], **kw)
+                for l in range(self.codes.shape[0])])
+        return comm.dequant_matmul(x, self.codes, self.scale, **kw)
+
+    def matmul(self, x, backend: Optional[str] = None) -> jax.Array:
+        """``x @ W`` without materializing W (fused dequant-matmul)."""
+        return self._mm(x, backend=backend)
+
+    def matmul_t(self, x, backend: Optional[str] = None) -> jax.Array:
+        """``x @ W.T`` (tied-embedding logit heads) from codes."""
+        return self._mm(x, transpose=True, backend=backend)
+
+    def __rmatmul__(self, x) -> jax.Array:
+        return self._mm(x)
+
+    def take(self, idx) -> jax.Array:
+        """Row lookup (embedding tables): gather only the requested code
+        rows and dequantize those - bitwise identical to indexing the
+        full ``dequantize()`` (elementwise dequant commutes with gather),
+        without ever decoding the whole table."""
+        codes = self.codes[idx]
+        if self.pack_bits:
+            lead = codes.shape[:-1]
+            flat = codes.reshape((-1, codes.shape[-1]))
+            numel = self.shape[-1]
+            codes = comm.unpack_rows(flat, self.pack_bits, numel).reshape(
+                lead + (numel,))
+        out = grids.uniform_dequantize(codes, self.scale, self.k_x).astype(
+            jnp.dtype(self.dtype))
+        return out.astype(jnp.dtype(self.cast)) if self.cast else out
 
 
 def _is_qleaf(x) -> bool:
@@ -150,26 +210,62 @@ def is_quantized(params) -> bool:
                jax.tree.leaves(params, is_leaf=_is_qleaf))
 
 
-def make_dequant_gather(inner=None):
-    """A ``ShardCtx.param_gather`` hook that dequantizes ``QuantizedLeaf``
-    leaves at use. The "static" pass leaves scan-stacked subtrees quantized
-    so ``lax.scan`` carries the codes and each layer dequantizes only its
-    own slice; every other kind dequantizes the (sliced) subtree whole.
+# Leaf names whose contraction the model expresses as ``x @ w`` (or an
+# embed lookup / tied ``x @ w.T``): these stay code-resident through the
+# gather and dispatch to repro.comm.matmul. Everything else (conv taps,
+# MoE expert stacks, meta-token banks, norms) is consumed elementwise or
+# via einsum and still dequantizes whole.
+_MATMUL_KEYS = frozenset({
+    "q", "k", "v", "o", "w_gate", "w_up", "w_down", "router",
+    "in_proj", "out_proj", "embed", "unembed",
+})
+
+
+def _path_name(path) -> Optional[str]:
+    if not path:
+        return None
+    k = path[-1]
+    return getattr(k, "key", getattr(k, "name", None))
+
+
+def _fused_ok(path, leaf, kind: str) -> bool:
+    """True when this quantized leaf can stay as codes for the fused
+    matmul: a known projection name AND 2-D logical weight. Inside the
+    scan ("blocks"/"enc_blocks") codes arrive sliced but the aux shape is
+    still the stacked (L, K, N), so 2-D-when-sliced means len(shape) == 3;
+    higher-rank stacks (MoE experts, meta banks) fall through to
+    ``dequantize()``."""
+    if _path_name(path) not in _MATMUL_KEYS:
+        return False
+    want = 2 if kind == "static" else 3
+    return len(leaf.shape) == want
+
+
+def make_dequant_gather(inner=None, fused: bool = True):
+    """A ``ShardCtx.param_gather`` hook for code-resident params. The
+    "static" pass leaves scan-stacked subtrees quantized so ``lax.scan``
+    carries the codes and each layer decodes only its own slice.
+
+    With ``fused`` (the default since the fused dequant-matmul landed),
+    matmul-shaped leaves - attention/MLP/SSM projections, routers,
+    embed/unembed - are ALSO left as codes and their ``x @ w`` sites
+    dispatch to ``repro.comm.matmul.dequant_matmul``; only conv taps,
+    expert stacks, and other non-matmul leaves are materialized. Pass
+    ``fused=False`` for the pre-PR-7 dequantize-everything semantics.
     ``inner``: optional downstream gather to compose with (mesh serving).
     """
     def deq(leaf):
         return leaf.dequantize() if _is_qleaf(leaf) else leaf
 
     def gather(subtree, kind: str):
-        if kind == "static":
-            def one(path, leaf):
-                if _path_head(path) in _STACKED_KEYS:
-                    return leaf  # dequantized per-layer inside the scan
-                return deq(leaf)
-            out = jax.tree_util.tree_map_with_path(one, subtree,
-                                                   is_leaf=_is_qleaf)
-        else:
-            out = jax.tree.map(deq, subtree, is_leaf=_is_qleaf)
+        def one(path, leaf):
+            if kind == "static" and _path_head(path) in _STACKED_KEYS:
+                return leaf  # decoded per-layer inside the scan
+            if fused and _is_qleaf(leaf) and _fused_ok(path, leaf, kind):
+                return leaf  # codes feed the fused matmul directly
+            return deq(leaf)
+        out = jax.tree_util.tree_map_with_path(one, subtree,
+                                               is_leaf=_is_qleaf)
         return inner(out, kind) if inner is not None else out
 
     return gather

@@ -103,7 +103,8 @@ class ServeSession:
                  eos_id: Optional[int] = None,
                  decode_fn: Optional[Callable] = None,
                  base_key: Optional[jax.Array] = None, seed: int = 0,
-                 sync_interval: int = 8, aot_dir: Optional[str] = None):
+                 sync_interval: int = 8, aot_dir: Optional[str] = None,
+                 fused_matmul: bool = True):
         cfg = model.cfg
         if cfg.input_mode != "tokens" or cfg.arch_type == "encdec":
             raise ValueError("ServeSession serves token-input decoder LMs")
@@ -112,7 +113,12 @@ class ServeSession:
         self.sync_interval = max(1, sync_interval)
         self.params = params
         self._local = decode_fn is None
-        self._ctx = (ShardCtx(param_gather=make_dequant_gather())
+        # fused_matmul: quantized projections contract straight from codes
+        # (repro.comm.matmul); False restores dequantize-then-matmul.
+        # Bitwise-identical tokens either way - this is a perf knob.
+        self.fused_matmul = bool(fused_matmul) and is_quantized(params)
+        self._ctx = (ShardCtx(param_gather=make_dequant_gather(
+                         fused=fused_matmul))
                      if is_quantized(params) else ShardCtx())
         if decode_fn is None:
             ctx = self._ctx
@@ -368,7 +374,8 @@ class ServeSession:
             facts = {"program": "serve_decode", "model_cfg": self.cfg,
                      "slots": self.slots, "max_seq": self.max_seq,
                      "eos": self.eos_id, "sample": sample,
-                     "quantized": is_quantized(self.params)}
+                     "quantized": is_quantized(self.params),
+                     "fused_matmul": self.fused_matmul}
             fn = aot.load_or_compile(jitted, (self.params, self._state),
                                      aot_dir=self._aot_dir, facts=facts,
                                      stats=self.stats)

@@ -223,6 +223,20 @@ class TestAutotune:
         assert set(res["timings_s"]) == {8, 16}
         assert K.enc_rows() == K.ENC_ROWS   # override not left behind
 
+    def test_tune_mm_cols_restores_when_not_installed(self):
+        from repro.comm import matmul as MM
+        res = perf.autotune.tune_mm_cols(candidates=(128, 256), iters=1,
+                                         m=4, k=256, n=256, install=False)
+        # 256 % 128 == 0 and 256 % 256 == 0: both candidates measured
+        assert res["best"] in (128, 256)
+        assert set(res["timings_s"]) == {128, 256}
+        assert MM.mm_cols() == MM.MM_COLS   # override not left behind
+
+    def test_tune_mm_cols_skips_non_covering_tiles(self):
+        res = perf.autotune.tune_mm_cols(candidates=(128, 512), iters=1,
+                                         m=4, k=256, n=256, install=False)
+        assert set(res["timings_s"]) == {128}  # 512 can't tile n=256
+
 
 def _compare_mod():
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

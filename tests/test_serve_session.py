@@ -82,6 +82,28 @@ class TestGreedyParity:
         assert run(quantize_params(params, k_x=6, min_numel=256))[0] \
             == full[0]
 
+    @pytest.mark.parametrize("k_x,pack", [(6, True), (2, True), (6, False)])
+    def test_fused_matmul_tokens_identical_to_unfused(self, yi, k_x, pack):
+        """The fused dequant-matmul path (codes contracted in the kernel,
+        the default) must emit tokens IDENTICAL to the unfused session
+        (dequantize-then-matmul) - the end-to-end form of the bitwise
+        kernel contract, covering packed sub-8-bit lanes as served."""
+        cfg, model, params = yi
+        qparams = quantize_params(params, k_x=k_x, min_numel=256, pack=pack)
+        prompts = [[5, 6, 7, 8], [9, 10, 11, 12], [3, 14, 15, 16]]
+
+        def run(**kw):
+            s = ServeSession(model, qparams, slots=3, max_seq=48, **kw)
+            hs = [s.submit(Request(prompt=p, max_new_tokens=6))
+                  for p in prompts]
+            res = s.drain()
+            return [res[h].tokens for h in hs], s
+
+        fused_toks, fused_sess = run()
+        plain_toks, plain_sess = run(fused_matmul=False)
+        assert fused_sess.fused_matmul and not plain_sess.fused_matmul
+        assert fused_toks == plain_toks
+
 
 class TestContinuousBatching:
     @pytest.mark.parametrize("arch", ["yi-6b", "mamba2-2.7b", "gemma2-2b"])
