@@ -49,6 +49,10 @@ RATIO_FLOORS = [
     ("serve_session_qx6", 1.0),           # PR-7 headline: code-resident
                                           # serving at least as fast as fp32
     ("serve_fused_speedup", 1 / 1.5),     # fused vs unfused, noise grace
+    # PR-8 headline: the adaptive wire must spend <= 0.6x the fixed
+    # k_g=6 bytes/step while holding final loss within 1%
+    ("adapt_bytes_reduction", 1 / 0.6),
+    ("adapt_loss_parity", 0.99),
 ]
 
 

@@ -603,6 +603,42 @@ def bench_fig34(emit, steps=120):
         emit(f"fig34_{name}", 0.0, "curve=" + "|".join(map(str, curve)))
 
 
+def bench_adapt(emit, steps=250, seeds=2, workers=4, replan_every=25,
+                budget=0.6):
+    """Runtime-adaptive bit allocation (repro.adapt) vs the paper's
+    fixed k_g=6 wire on the multi-worker protocol: measured payload
+    bytes/step and final test loss for each arm. The two ratio rows are
+    GATED compare.py floors: the adaptive wire must come in at or under
+    ``budget``x the fixed bytes (adapt_bytes_reduction >= 1/budget)
+    while holding final loss within 1% (adapt_loss_parity >= 0.99)."""
+    import jax
+    sys.path.insert(0, os.path.join(ROOT, "examples"))
+    import paper_repro as pr
+    from repro.data.pipeline import ClsDataConfig, classification_dataset
+
+    data = classification_dataset(ClsDataConfig(seed=1))
+    arms = {}
+    for name, adaptive in (("fixed_kg6", False), ("adaptive", True)):
+        losses, bps = [], []
+        t0 = time.perf_counter()
+        for s in range(seeds):
+            _, info = pr.run_quantized(
+                steps, data, jax.random.PRNGKey(s), seed=s * 100,
+                n_workers=workers, adaptive=adaptive, budget_ratio=budget,
+                replan_every=replan_every)
+            losses.append(info["final_test_loss"])
+            bps.append(info["bytes_per_step"])
+        us = (time.perf_counter() - t0) * 1e6 / max(1, seeds)
+        arms[name] = (float(np.mean(losses)), float(np.mean(bps)))
+        emit(f"adapt_{name}", us,
+             f"loss={arms[name][0]:.4f}_{arms[name][1] / 1e3:.1f}KB_step")
+    (fl, fb), (al, ab) = arms["fixed_kg6"], arms["adaptive"]
+    emit("adapt_bytes_reduction", 0.0,
+         f"{fb / ab:.3f}x_fewer_bytes_budget{budget}", fb / ab)
+    emit("adapt_loss_parity", 0.0,
+         f"fixed{fl:.4f}_vs_adaptive{al:.4f}", fl / al)
+
+
 def bench_roofline(emit):
     path = os.path.join(ROOT, "results", "dryrun_single.jsonl")
     if not os.path.exists(path):
@@ -631,6 +667,7 @@ BENCHES = {
     "table2_cifar100_analogue": bench_table2,
     "table3_cifar10_analogue": bench_table3,
     "fig34_convergence": bench_fig34,
+    "adapt": bench_adapt,
     "roofline": bench_roofline,
 }
 
@@ -641,6 +678,7 @@ SUITES = {
     "comm": ["comm_codec", "comm_cost"],
     "kernels": ["kernels", "comm_codec", "comm_cost"],
     "startup": ["startup"],
+    "adapt": ["adapt"],
     "paper": ["table2_cifar100_analogue", "table3_cifar10_analogue",
               "fig34_convergence", "comm_cost"],
     "all": list(BENCHES),

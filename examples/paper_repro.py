@@ -109,6 +109,203 @@ def wire_bits(name):
             "blockwise": 1}.get(name, 32)
 
 
+# ---------------------------------------------------------------------------
+# --adaptive: fixed k_g vs runtime-adaptive per-leaf bit allocation
+# (repro.adapt) under the same multi-worker protocol, measured bytes/step.
+# ---------------------------------------------------------------------------
+
+def _leaf_payload_bytes(numel, spec):
+    """Measured wire bytes for one worker's payload of one leaf: encode
+    a real tensor and take ``.nbytes`` (no hand-rolled formulas)."""
+    from repro import comm
+    codec = comm.get_codec(spec)
+    x = jnp.linspace(-1.0, 1.0, numel, dtype=jnp.float32)
+    if isinstance(codec, comm.BlockwiseCodec):
+        from repro.opt import engine
+        codes2d, _ = engine.quantize_blockwise(x, codec.block)
+        rows = comm.pad_rows(codes2d.reshape(-1)[:numel], 1)
+        return comm.pack_rows(rows, codec.bits).nbytes
+    payload, _ = comm.encode_rows(x, codec, 1, key=jax.random.PRNGKey(0))
+    return payload.nbytes
+
+
+def run_quantized(steps, data, key, *, batch=128, seed=0, n_workers=8,
+                  adaptive=False, budget_ratio=0.6, replan_every=25,
+                  fixed_spec="log:6", ema_decay=0.8):
+    """The Algorithm-2 worker protocol with the quantizer hoisted out of
+    the optimizer: every worker sends Q(delta + e) per leaf with its own
+    EF residual, the server applies the worker mean. ``adaptive`` swaps
+    the per-leaf codecs every ``replan_every`` steps from the
+    repro.adapt allocator fed by observed (amax, meansq) EMAs; otherwise
+    every leaf stays on ``fixed_spec`` (the paper's fixed k_g). Returns
+    ``(params, info)`` with measured bytes/step and the plan log."""
+    from repro import comm
+    from repro.adapt import allocate as A
+    from repro.adapt import stats as S
+    from repro.opt import engine
+
+    xtr, ytr, xte, yte = data
+    params = mlp_init(key, xtr.shape[1], 256, int(ytr.max()) + 1)
+    opt = qadam(QAdamConfig(alpha=2e-3, grad_q=None, weight_q=None))
+    state0 = opt.init(params)
+    wkeys = jax.vmap(lambda i: jax.random.fold_in(state0.key, i))(
+        jnp.arange(n_workers))
+    sstack = jax.vmap(lambda k: state0._replace(key=k))(wkeys)
+    es = jax.tree.map(
+        lambda p: jnp.zeros((n_workers,) + p.shape, jnp.float32), params)
+    names = sorted(params)
+
+    def make_step(plan):
+        codecs = {k: comm.get_codec(s) for k, s in zip(names, plan)}
+
+        @jax.jit
+        def step(params, sstack, es, xs, ys):
+            def worker(st, e, x, y):
+                fp = opt.forward_params(params, st)
+                loss, g = jax.value_and_grad(loss_fn)(fp, x, y)
+                upd, st2 = opt.update(g, st, params)
+                q, e2, rows = {}, {}, []
+                for k in names:
+                    send = upd[k] + e[k]
+                    c = codecs[k]
+                    if isinstance(c, comm.BlockwiseCodec):
+                        codes, scales = engine.quantize_blockwise(
+                            send.reshape(-1), c.block)
+                        deq = (codes.astype(jnp.float32) * scales[:, None]
+                               ).reshape(-1)[:send.size].reshape(send.shape)
+                    else:
+                        scale = c.compute_scale(send)
+                        deq = c.dequantize(c.quantize(send, scale), scale)
+                    q[k] = deq
+                    e2[k] = send - deq
+                    rows.append(jnp.stack([jnp.max(jnp.abs(send)),
+                                           jnp.mean(send * send)]))
+                return q, st2, e2, jnp.stack(rows), loss
+
+            q, sstack2, es2, rows, losses = jax.vmap(worker)(
+                sstack, es, xs, ys)
+            mean_upd = jax.tree.map(lambda u: jnp.mean(u, axis=0), q)
+            stats = jnp.concatenate(
+                [jnp.max(rows[:, :, :1], axis=0),
+                 jnp.mean(rows[:, :, 1:], axis=0)], axis=1)
+            return (apply_updates(params, mean_upd), sstack2, es2, stats,
+                    jnp.mean(losses))
+        return step
+
+    def plan_bytes(plan):
+        return n_workers * sum(_leaf_payload_bytes(params[k].size, s)
+                               for k, s in zip(names, plan))
+
+    ema = S.StatsEMA(len(names), ema_decay)
+    plan = tuple(fixed_spec for _ in names)
+    steps_cache = {}
+    its = [classification_batches(xtr, ytr, batch, seed=seed + w)
+           for w in range(n_workers)]
+    plan_log = [{"step": 0, "plan": list(plan),
+                 "bytes_per_step": plan_bytes(plan)}]
+    total_bytes = 0
+    curve = []   # (cumulative bytes, train loss)
+    t = 0
+    while t < steps:
+        k = min(replan_every, steps - t) if adaptive else steps - t
+        step = steps_cache.setdefault(plan, make_step(plan))
+        window_rows = []
+        pb = plan_log[-1]["bytes_per_step"]
+        for _ in range(k):
+            pairs = [next(it) for it in its]
+            xs = jnp.stack([p[0] for p in pairs])
+            ys = jnp.stack([p[1] for p in pairs])
+            params, sstack, es, stats, loss = step(params, sstack, es,
+                                                   xs, ys)
+            window_rows.append(stats)
+            total_bytes += pb
+            curve.append((total_bytes, loss))
+        t += k
+        if adaptive and t < steps:
+            for r in np.asarray(jnp.stack(window_rows)):
+                ema.update(np.concatenate(
+                    [r, np.zeros((len(names), 1))], axis=1))
+            snap = ema.snapshot()
+            groups = [A.Group(name=k, numel=params[k].size,
+                              c=params[k].size, amax=float(snap[i, 0]),
+                              meansq=float(snap[i, 1]))
+                      for i, k in enumerate(names)]
+            budget = int(budget_ratio *
+                         A.baseline_cost(groups, n_workers, width=4))
+            new = A.allocate_specs(groups, budget, n_workers)
+            if new != plan:
+                plan = new
+                plan_log.append({"step": t, "plan": list(plan),
+                                 "bytes_per_step": plan_bytes(plan)})
+    curve = [(int(b), float(l)) for b, l in curve]
+    return params, {"bytes_per_step": total_bytes / steps,
+                    "total_bytes": total_bytes, "plan_log": plan_log,
+                    "final_test_loss": float(loss_fn(params, xte, yte)),
+                    "curve": curve}
+
+
+def run_adaptive_compare(args, data):
+    xte, yte = data[2], data[3]
+    arms = {"fixed k_g=6 (log:6)": False, "adaptive": True}
+    results = {}
+    for name, adaptive in arms.items():
+        losses, accs, infos = [], [], []
+        for s in range(args.seeds):
+            p, info = run_quantized(
+                args.steps, data, jax.random.PRNGKey(s), seed=s * 100,
+                n_workers=args.workers, adaptive=adaptive,
+                budget_ratio=args.budget, replan_every=args.replan_every)
+            losses.append(info["final_test_loss"])
+            accs.append(accuracy(p, xte, yte))
+            infos.append(info)
+        results[name] = {
+            "loss": float(np.mean(losses)), "loss_std": float(np.std(losses)),
+            "acc": float(np.mean(accs)),
+            "bytes_per_step": float(np.mean(
+                [i["bytes_per_step"] for i in infos])),
+            "plan_log": infos[0]["plan_log"],
+            "curve": infos[0]["curve"]}
+        print(f"{name:22s} loss {np.mean(losses):.4f} "
+              f"+/- {np.std(losses):.4f}  acc {np.mean(accs)*100:.2f}%  "
+              f"{np.mean([i['bytes_per_step'] for i in infos])/1e3:.1f}"
+              f"KB/step")
+    fx, ad = results["fixed k_g=6 (log:6)"], results["adaptive"]
+    summary = {"bytes_ratio": ad["bytes_per_step"] / fx["bytes_per_step"],
+               "loss_parity": fx["loss"] / ad["loss"]}
+    print(f"adaptive/fixed bytes: {summary['bytes_ratio']:.3f}x  "
+          f"loss parity (fixed/adaptive): {summary['loss_parity']:.4f}")
+    for e in ad["plan_log"]:
+        lanes = {}
+        for s in e["plan"]:
+            lanes[s] = lanes.get(s, 0) + 1
+        print(f"  plan @{e['step']}: "
+              + " ".join(f"{s}x{n}" for s, n in sorted(lanes.items()))
+              + f"  ({e['bytes_per_step']/1e3:.1f}KB/step)")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results, "summary": summary}, f, indent=1)
+    fig = args.out and args.out.rsplit(".", 1)[0] + ".png"
+    if fig:
+        try:
+            import matplotlib
+            matplotlib.use("Agg")
+            import matplotlib.pyplot as plt
+        except ImportError:
+            print("matplotlib not installed; skipping figure")
+            return
+        plt.figure(figsize=(6, 4))
+        for name, r in results.items():
+            b, l = zip(*r["curve"])
+            plt.plot(np.asarray(b) / 1e6, l, label=name)
+        plt.xlabel("cumulative wire MB (all workers)")
+        plt.ylabel("train loss")
+        plt.legend()
+        plt.title(f"fixed vs adaptive wire at budget {args.budget}x")
+        plt.tight_layout()
+        plt.savefig(fig, dpi=120)
+        print(f"wrote {fig}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=400)
@@ -119,11 +316,21 @@ def main():
                          "quantizes the broadcast update, with its own EF")
     ap.add_argument("--server-q", default="log:2",
                     help="efadam server->worker codec spec")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="compare fixed k_g=6 vs repro.adapt runtime bit "
+                         "allocation at matched loss, measured bytes/step")
+    ap.add_argument("--budget", type=float, default=0.6,
+                    help="--adaptive: byte budget vs the fixed wire")
+    ap.add_argument("--replan-every", type=int, default=25)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     data = classification_dataset(ClsDataConfig(seed=1))
     xte, yte = data[2], data[3]
+
+    if args.adaptive:
+        run_adaptive_compare(args, data)
+        return
 
     if args.mode == "efadam":
         sq = args.server_q

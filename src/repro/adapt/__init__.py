@@ -1,0 +1,41 @@
+"""repro.adapt - runtime-adaptive, accuracy-aware quantization.
+
+Three layers, host-driven, zero steady-state host syncs:
+
+  * :mod:`repro.adapt.stats`     - device-resident per-leaf gradient
+    statistics (amax / mean-square EMAs) accumulated inside the jitted
+    train step into a TrainSession stats ring.
+  * :mod:`repro.adapt.allocate`  - bit-allocation policy: per-leaf lane
+    widths from the 2/3/4/6/8/16 set under a total wire-byte budget,
+    minimizing expected quantization distortion.
+  * :mod:`repro.adapt.controller`- host replan loop: harvest stats,
+    re-solve the plan, swap codecs at replan boundaries with each plan
+    keyed into the AOT/compile cache and EF residuals carried bitwise
+    across the switch.
+
+``controller`` pulls in the dist/train stack, which itself imports the
+``adaptive`` mode plugin (-> this package), so it is loaded lazily via
+``__getattr__`` to keep the import graph acyclic.
+"""
+from repro.adapt import allocate, stats  # noqa: F401
+from repro.adapt.allocate import (  # noqa: F401
+    Group,
+    WIDTH_SPECS,
+    WIDTHS,
+    allocate_specs,
+    baseline_cost,
+    expected_distortion,
+    plan_cost,
+)
+from repro.adapt.stats import N_FIELDS, STAT_FIELDS, StatsEMA  # noqa: F401
+
+_CONTROLLER_NAMES = ("AdaptConfig", "AdaptiveController", "plan_for_model",
+                     "leaf_groups_for", "measured_exchange_bytes")
+
+
+def __getattr__(name):
+    if name in _CONTROLLER_NAMES or name == "controller":
+        from repro.adapt import controller
+        return controller if name == "controller" else getattr(controller,
+                                                               name)
+    raise AttributeError(f"module 'repro.adapt' has no attribute {name!r}")

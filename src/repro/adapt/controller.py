@@ -1,0 +1,244 @@
+"""Host-side replan loop for adaptive quantization.
+
+The controller owns a ``TrainSession`` running the ``adaptive`` mode
+and, every ``replan_every`` steps:
+
+  1. harvests the device stats ring (ONE host sync per window - the
+     same sync discipline as the loss ring, zero added steady-state
+     syncs),
+  2. folds the rows into a :class:`repro.adapt.stats.StatsEMA`,
+  3. re-solves the bit plan (:mod:`repro.adapt.allocate`) under the
+     byte budget from the observed amax/meansq history,
+  4. on a plan change, rebuilds the step artifacts with the new
+     ``TrainConfig.bit_plan`` and ``swap_artifacts``-s them in. The
+     state buffers (masters, Adam moments, EF residuals) carry over
+     bitwise - a replan changes only the wire - and the new plan's
+     executable is keyed separately into the jit/AOT cache (TrainConfig
+     rides in the AOT facts), so a revisited plan never recompiles.
+
+``measured_exchange_bytes`` re-derives the a2a figure from real encoded
+payload ``.nbytes`` per leaf - the verification hook behind
+``--adapt-verify`` and the accounting tests: at every replan the
+registry-sourced ``comm_bytes_per_step`` must equal it exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import comm
+from repro.adapt import allocate as A
+from repro.adapt import stats as S
+
+
+@dataclasses.dataclass
+class AdaptConfig:
+    budget_ratio: float = 0.6   # a2a byte budget vs fixed log:6 (k_g=6)
+    replan_every: int = 25      # steps between replan boundaries
+    ema_decay: float = 0.8      # StatsEMA decay per harvested step
+    baseline_width: int = 4     # the fixed lane the budget is quoted vs
+
+
+def _leaf_names(layout) -> List[str]:
+    flat = jax.tree_util.tree_flatten_with_path(layout._leaves)[0]
+    return [jax.tree_util.keystr(path) for path, _ in flat]
+
+
+def leaf_groups_for(art, ema: Optional[S.StatsEMA] = None,
+                    ) -> List[A.Group]:
+    """Allocation groups for the artifacts' state leaves (metas_flat
+    order). Without an EMA (pre-run planning, dryrun) a uniform prior
+    is used: every leaf amax=1, meansq=1 - allocation then splits on
+    wire geometry alone."""
+    from repro.dist.step import _leaf_meta
+    metas = _leaf_meta(art.layout, art.n_workers)
+    leaves = jax.tree_util.tree_leaves(
+        metas, is_leaf=lambda x: type(x).__name__ == "LeafMeta")
+    names = _leaf_names(art.layout)
+    snap = ema.snapshot() if ema is not None else None
+    groups = []
+    for i, m in enumerate(leaves):
+        amax, meansq = (1.0, 1.0) if snap is None \
+            else (float(snap[i, 0]), float(snap[i, 1]))
+        groups.append(A.Group(name=names[i], numel=m.numel, c=m.c,
+                              amax=amax, meansq=meansq))
+    return groups
+
+
+def solve_plan(groups: List[A.Group], n_workers: int,
+               acfg: AdaptConfig) -> Tuple[Tuple[str, ...], int, int]:
+    """(specs, budget_bytes, baseline_bytes) for one replan."""
+    baseline = A.baseline_cost(groups, n_workers, acfg.baseline_width)
+    budget = int(acfg.budget_ratio * baseline)
+    return A.allocate_specs(groups, budget, n_workers), budget, baseline
+
+
+def plan_report(groups: List[A.Group], specs: Tuple[str, ...],
+                n_workers: int) -> List[Dict[str, Any]]:
+    """Per-leaf rows for logs/dryrun: spec, width, exact a2a bytes."""
+    rows = []
+    for g, spec in zip(groups, specs):
+        codec = comm.get_codec(spec)
+        rows.append({"leaf": g.name, "numel": g.numel, "c": g.c,
+                     "spec": spec, "bits": codec.bits,
+                     "a2a_bytes": n_workers * codec.payload_nbytes(g.c)})
+    return rows
+
+
+def plan_for_model(model, mesh, tc, *, budget_ratio: float = 0.6,
+                   ema: Optional[S.StatsEMA] = None):
+    """One-shot (pre-run) plan: build adaptive artifacts, solve under
+    the uniform prior (or a supplied EMA), return ``(tc2, art2,
+    report)`` with ``tc2.bit_plan`` set and ``art2`` compiled-ready
+    artifacts for it. Dryrun's ``--adaptive`` path."""
+    from repro.dist.step import make_train_step
+    acfg = AdaptConfig(budget_ratio=budget_ratio)
+    tc1 = dataclasses.replace(tc, mode="adaptive", bit_plan=None)
+    art1 = make_train_step(model, mesh, tc1)
+    groups = leaf_groups_for(art1, ema)
+    specs, budget, baseline = solve_plan(groups, art1.n_workers, acfg)
+    tc2 = dataclasses.replace(tc1, bit_plan=specs)
+    art2 = make_train_step(model, mesh, tc2)
+    report = plan_report(groups, specs, art2.n_workers)
+    return tc2, art2, {"rows": report, "budget_bytes": budget,
+                       "baseline_bytes": baseline,
+                       "plan_bytes": sum(r["a2a_bytes"] for r in report)}
+
+
+def measured_exchange_bytes(art, tc) -> int:
+    """Measured per-device a2a payload bytes: encode a real tensor per
+    leaf with its plan codec and sum the payload ``.nbytes`` - the
+    ground truth ``comm_bytes_per_step`` must match exactly."""
+    from repro.dist.modes import get_mode
+    from repro.dist.step import _leaf_meta
+    mode = get_mode(tc.mode)
+    metas = _leaf_meta(art.layout, art.n_workers)
+    leaves = jax.tree_util.tree_leaves(
+        metas, is_leaf=lambda x: type(x).__name__ == "LeafMeta")
+    total = 0
+    for i, m in enumerate(leaves):
+        codec = mode.leaf_codec(tc, i)
+        x = jnp.linspace(-1.0, 1.0, m.numel, dtype=jnp.float32)
+        if isinstance(codec, comm.IdentityCodec):
+            total += art.n_workers * m.c * 4
+        elif isinstance(codec, comm.BlockwiseCodec):
+            from repro.opt import engine
+            codes2d, _ = engine.quantize_blockwise(x, codec.block)
+            rows = comm.pad_rows(codes2d.reshape(-1)[:m.numel],
+                                 art.n_workers)
+            total += comm.pack_rows(rows, codec.bits).nbytes
+        else:
+            key = jax.random.PRNGKey(0)
+            payload, _ = comm.encode_rows(x, codec, art.n_workers,
+                                          key=key)
+            total += payload.nbytes
+    return total
+
+
+def verify_accounting(art, tc) -> Dict[str, int]:
+    """Assert registry accounting == measured payload bytes; returns
+    both figures (raises AssertionError on mismatch)."""
+    from repro.train.loop import comm_bytes_per_step
+    accounted = comm_bytes_per_step(art, tc)["update_exchange_bytes"]
+    measured = measured_exchange_bytes(art, tc)
+    assert accounted == measured, \
+        f"accounted {accounted} != measured {measured} a2a bytes"
+    return {"accounted": accounted, "measured": measured}
+
+
+class AdaptiveController:
+    """Drives an adaptive ``TrainSession``: windowed run / harvest /
+    replan. Use exactly like a session::
+
+        ctl = AdaptiveController(model, mesh, tc, batches, acfg, scfg)
+        ctl.run(steps)
+        ctl.close()
+
+    ``plan_log`` records one entry per plan segment: the step it took
+    effect, the specs, and the registry accounting at that plan.
+    """
+
+    def __init__(self, model, mesh, tc, batches, acfg: AdaptConfig,
+                 scfg=None, *, key=None, log=print, verify: bool = False):
+        from repro.dist.step import make_train_step
+        from repro.train.loop import comm_bytes_per_step
+        from repro.train.session import SessionConfig, TrainSession
+        self._comm_bytes = comm_bytes_per_step
+        self._make_step = make_train_step
+        self.model, self.mesh = model, mesh
+        self.acfg = acfg
+        self.verify = verify
+        self._log = log
+        self.tc = dataclasses.replace(tc, mode="adaptive")
+        self.art = make_train_step(model, mesh, self.tc)
+        scfg = scfg or SessionConfig(log_every=0)
+        scfg = dataclasses.replace(
+            scfg, stats_ring=max(scfg.stats_ring, acfg.replan_every))
+        self.session = TrainSession.from_artifacts(self.art, batches,
+                                                   scfg, key=key, log=log)
+        n_leaves = len(jax.tree_util.tree_leaves(self.art.layout._leaves))
+        self.ema = S.StatsEMA(n_leaves, acfg.ema_decay)
+        self.plan_log: List[Dict[str, Any]] = []
+        self.replans = 0
+        self._record_plan(0)
+
+    def _record_plan(self, step: int):
+        entry = {"step": step, "bit_plan": self.tc.bit_plan,
+                 "comm": self._comm_bytes(self.art, self.tc)}
+        if self.verify:
+            entry["verify"] = verify_accounting(self.art, self.tc)
+        self.plan_log.append(entry)
+
+    def replan(self) -> bool:
+        """Re-solve from the EMA; swap artifacts when the plan moved.
+        Returns True when a swap happened."""
+        if self.ema.count <= 0.0:
+            return False
+        groups = leaf_groups_for(self.art, self.ema)
+        specs, _, _ = solve_plan(groups, self.art.n_workers, self.acfg)
+        if specs == self.tc.bit_plan:
+            return False
+        self.tc = dataclasses.replace(self.tc, bit_plan=specs)
+        self.art = self._make_step(self.model, self.mesh, self.tc)
+        self.session.swap_artifacts(self.art)
+        self.replans += 1
+        self._record_plan(self.session.step)
+        self._log(f"  replan @{self.session.step}: "
+                  f"{self.plan_log[-1]['comm']['update_exchange_bytes']} "
+                  f"a2a B/step")
+        return True
+
+    def run(self, steps: int):
+        """Run ``steps`` optimizer steps with a replan boundary every
+        ``acfg.replan_every`` steps."""
+        done = 0
+        while done < steps:
+            k = min(self.acfg.replan_every, steps - done)
+            self.session.run(k)
+            done += k
+            for _, rows in self.session.harvest_stats():
+                self.ema.update(rows)
+            if done < steps:
+                self.replan()
+        return self.session.history
+
+    @property
+    def state(self):
+        return self.session.state
+
+    @property
+    def stats(self):
+        return self.session.stats
+
+    def close(self):
+        self.session.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,114 @@
+"""Device-resident gradient statistics for adaptive quantization.
+
+Per-leaf statistics are computed **inside** the jitted train step (the
+``adaptive`` mode's updater emits one row per leaf) and written into a
+device stats ring managed by ``TrainSession`` exactly like the loss
+ring: rows accumulate on device and are harvested in one transfer at
+log/replan boundaries, so steady state adds zero host syncs.
+
+Row layout (``STAT_FIELDS`` order, float32):
+
+  ====  ==========  ==================================================
+  col   field       reduction across mesh
+  ====  ==========  ==================================================
+  0     ``amax``    pmax  - max |delta + e| over workers/shards
+  1     ``meansq``  pmean - mean (delta + e)^2 (quantizer input power)
+  2     ``gsq``     pmean - mean g^2 (raw gradient power)
+  ====  ==========  ==================================================
+
+``local_stats`` / ``reduce_stats`` are traced jnp code; ``StatsEMA``
+is the host-side history the controller feeds to the allocator.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+STAT_FIELDS: Tuple[str, ...] = ("amax", "meansq", "gsq")
+N_FIELDS = len(STAT_FIELDS)
+
+
+def local_stats(de: jax.Array, g: jax.Array) -> jax.Array:
+    """One ``(N_FIELDS,)`` float32 row for this worker's leaf chunk.
+
+    ``de`` is the quantizer input (delta + EF residual) - the tensor
+    whose amax/power actually drive grid selection; ``g`` the raw
+    gradient chunk.
+    """
+    de32 = de.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    return jnp.stack([jnp.max(jnp.abs(de32)),
+                      jnp.mean(de32 * de32),
+                      jnp.mean(g32 * g32)])
+
+
+def reduce_stats(rows: jax.Array, axes: Sequence[str]) -> jax.Array:
+    """Reduce stacked ``(n_leaves, N_FIELDS)`` local rows over mesh axes.
+
+    amax reduces with pmax; the power columns with pmean (chunks are
+    equal-size padded slices, so the mean of chunk means is the mean).
+    """
+    axes = tuple(axes)
+    amax = jax.lax.pmax(rows[:, :1], axes)
+    power = jax.lax.pmean(rows[:, 1:], axes)
+    return jnp.concatenate([amax, power], axis=1)
+
+
+class StatsEMA:
+    """Host-side debiased EMA over harvested stats rows.
+
+    amax tracks a peak-hold EMA (max of decayed history and the new
+    observation) so transient spikes do not immediately shrink the
+    grid range; the power columns use plain debiased EMAs.
+    """
+
+    def __init__(self, n_leaves: int, decay: float = 0.8):
+        if not 0.0 <= decay < 1.0:
+            raise ValueError(f"decay must be in [0, 1), got {decay}")
+        self.decay = float(decay)
+        self._ema = np.zeros((n_leaves, N_FIELDS), np.float64)
+        self._amax_peak = np.zeros(n_leaves, np.float64)
+        self._weight = 0.0
+
+    @property
+    def count(self) -> float:
+        return self._weight
+
+    def update(self, rows: np.ndarray) -> None:
+        rows = np.asarray(rows, np.float64)
+        if rows.shape != self._ema.shape:
+            raise ValueError(
+                f"stats row shape {rows.shape} != {self._ema.shape}")
+        d = self.decay
+        self._ema = d * self._ema + (1.0 - d) * rows
+        self._weight = d * self._weight + (1.0 - d)
+        self._amax_peak = np.maximum(d * self._amax_peak, rows[:, 0])
+
+    def _debiased(self) -> np.ndarray:
+        if self._weight <= 0.0:
+            raise RuntimeError("StatsEMA.update never called")
+        return self._ema / self._weight
+
+    @property
+    def amax(self) -> np.ndarray:
+        """Peak-held amax per leaf (never below the debiased EMA)."""
+        return np.maximum(self._debiased()[:, 0], self._amax_peak)
+
+    @property
+    def meansq(self) -> np.ndarray:
+        return self._debiased()[:, 1]
+
+    @property
+    def gsq(self) -> np.ndarray:
+        return self._debiased()[:, 2]
+
+    def snapshot(self) -> Optional[np.ndarray]:
+        """Debiased ``(n_leaves, N_FIELDS)`` view, or None before data."""
+        if self._weight <= 0.0:
+            return None
+        out = self._debiased().copy()
+        out[:, 0] = np.maximum(out[:, 0], self._amax_peak)
+        return out

@@ -12,10 +12,11 @@ from repro.dist.modes.base import (  # noqa: F401
     identity_codec,
     worker_mean,
 )
-from repro.dist.modes import qadam, dp_adam, terngrad, ef_sgd, efadam
+from repro.dist.modes import (qadam, dp_adam, terngrad, ef_sgd, efadam,
+                              adaptive)
 
 MODES = {m.SPEC.name: m.SPEC
-         for m in (qadam, dp_adam, terngrad, ef_sgd, efadam)}
+         for m in (qadam, dp_adam, terngrad, ef_sgd, efadam, adaptive)}
 
 
 def get_mode(name: str) -> ModeSpec:

@@ -6,10 +6,14 @@ A mode is a ~50-line plugin: it owns the per-leaf optimizer math (via the
 worker-step template (weight broadcast -> fwd/bwd -> engine update ->
 update exchange).
 
-Updater contract: ``updater(g, m, v, e, chunk, meta, a_t, th_t, key)``
-with the flat per-shard gradient/moments, this worker's master chunk and
-its LeafMeta, the scheduled scalars, and a per-(leaf, worker, step) PRNG
-key; returns ``(new_chunk, m', v', e')``.
+Updater contract: ``updater(g, m, v, e, chunk, meta, a_t, th_t, key,
+idx)`` with the flat per-shard gradient/moments, this worker's master
+chunk and its LeafMeta, the scheduled scalars, a per-(leaf, worker,
+step) PRNG key, and the leaf's flat index (``metas_flat`` order - what
+per-leaf wire plans key on); returns ``(new_chunk, m', v', e')``, or
+``(new_chunk, m', v', e', stats_row)`` when the mode sets
+``emits_stats`` (one ``adapt.stats`` row per leaf, reduced and ringed
+by the step template).
 """
 from __future__ import annotations
 
@@ -40,6 +44,13 @@ class ModeSpec:
     collectives actually move. ``extra_state`` adds chunk-sized state
     leaves; ``broadcast_ef`` turns on server-side error feedback on the
     weight-broadcast channel (the ``efadam`` mode).
+
+    ``per_leaf`` (adaptive modes) maps ``(tc, leaf_idx) -> Codec`` so
+    different leaves ride different lanes; ``leaf_codec`` /
+    ``leaf_wire_nbytes`` are the indexed entry points every accounting
+    and bucketing path goes through - they fall back to the uniform
+    ``wire_codec`` when no per-leaf plan is declared. ``emits_stats``
+    marks updaters returning a trailing ``adapt.stats`` row.
     """
     name: str
     chunk_sharded_moments: bool
@@ -47,11 +58,23 @@ class ModeSpec:
     wire_codec: Callable            # (grad_k) -> comm.Codec
     extra_state: Tuple[str, ...] = ()
     broadcast_ef: bool = False
+    per_leaf: Optional[Callable] = None   # (tc, leaf_idx) -> comm.Codec
+    emits_stats: bool = False
 
     def wire_nbytes(self, c: int, n_workers: int, grad_k=None) -> int:
         """Per-device, per-leaf update-exchange payload bytes - the
         single source of truth, derived from the declared codec."""
         return n_workers * self.wire_codec(grad_k).payload_nbytes(c)
+
+    def leaf_codec(self, tc, idx: int) -> comm.Codec:
+        """Wire codec for leaf ``idx`` (metas_flat order)."""
+        if self.per_leaf is not None:
+            return self.per_leaf(tc, idx)
+        return self.wire_codec(tc.grad_k)
+
+    def leaf_wire_nbytes(self, tc, idx: int, c: int, n_workers: int) -> int:
+        """Per-device update-exchange payload bytes for leaf ``idx``."""
+        return n_workers * self.leaf_codec(tc, idx).payload_nbytes(c)
 
 
 def identity_codec(grad_k=None) -> comm.Codec:

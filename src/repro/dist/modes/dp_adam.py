@@ -12,7 +12,7 @@ from repro.opt import engine
 
 
 def make_updater(tc, ctx: WorkerCtx):
-    def upd(g, m, v, e, chunk, meta, a_t, th_t, key):
+    def upd(g, m, v, e, chunk, meta, a_t, th_t, key, idx):
         rows = SH.flatten_pad(g, ctx.n_workers)
         if ctx.worker_axes:
             rows = jax.lax.psum(rows, ctx.worker_axes)

@@ -20,7 +20,7 @@ def wire_codec(grad_k=None) -> comm.Codec:
 def make_updater(tc, ctx: WorkerCtx):
     codec = wire_codec()
 
-    def upd(g, m, v, e, chunk, meta, a_t, th_t, key):
+    def upd(g, m, v, e, chunk, meta, a_t, th_t, key, idx):
         m2 = tc.beta * m + g
         de = a_t * m2 + e
         n = de.shape[0]

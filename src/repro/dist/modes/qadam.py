@@ -23,7 +23,7 @@ def wire_codec(grad_k=None) -> comm.Codec:
 def make_updater(tc, ctx: WorkerCtx):
     codec = wire_codec(tc.grad_k)
 
-    def upd(g, m, v, e, chunk, meta, a_t, th_t, key):
+    def upd(g, m, v, e, chunk, meta, a_t, th_t, key, idx):
         m2, v2, de = engine.adam_ef_moments(
             g, m, v, e, a_t, tc.beta, th_t, tc.eps, backend=ctx.backend)
         if tc.grad_k is None:

@@ -14,7 +14,7 @@ def wire_codec(grad_k=None) -> comm.Codec:
 def make_updater(tc, ctx: WorkerCtx):
     codec = wire_codec()
 
-    def upd(g, m, v, e, chunk, meta, a_t, th_t, key):
+    def upd(g, m, v, e, chunk, meta, a_t, th_t, key, idx):
         payload, scale = comm.encode_rows(g, codec, ctx.n_workers,
                                           key=key, backend=ctx.backend)
         recv = C.exchange_decode(payload, scale, codec, meta.c,

@@ -44,6 +44,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import comm
+from repro.adapt import stats as astats
 from repro.core.qadam import QAdamConfig, _alpha_t, _theta_t
 from repro.dist import sharding as SH
 from repro.dist import collectives as C
@@ -70,6 +71,11 @@ class TrainConfig:
     weight_q_min_numel: int = 2 ** 14   # small leaves skip Q_x (biases/norms)
     error_feedback: bool = True
     mode: str = "qadam"                 # any repro.dist.modes name
+    # per-leaf wire plan (adaptive mode): one registry codec spec per
+    # state leaf in metas_flat order, e.g. ("log:6", "blockwise:256",
+    # ...). TrainConfig is a static jit argument and rides in the AOT
+    # facts, so every distinct plan is its own compiled/cached step.
+    bit_plan: Optional[Tuple[str, ...]] = None
     # update-exchange bucketing: leaves are fenced (optimization_barrier)
     # and dispatched to the wire in buckets of about this many payload
     # bytes instead of behind one whole-tree end-of-step barrier, so XLA
@@ -156,7 +162,7 @@ def _exchange_buckets(metas_flat, mode, tc, n_workers):
     buckets, cur, cur_bytes = [], [], 0
     for i, meta in enumerate(metas_flat):
         cur.append(i)
-        cur_bytes += mode.wire_nbytes(meta.c, n_workers, tc.grad_k)
+        cur_bytes += mode.leaf_wire_nbytes(tc, i, meta.c, n_workers)
         if cur_bytes >= tc.exchange_bucket_bytes:
             buckets.append(cur)
             cur, cur_bytes = [], 0
@@ -332,6 +338,10 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
 
     treedef = jax.tree_util.tree_structure(layout._leaves)
     metas_flat = treedef.flatten_up_to(metas)
+    if tc.bit_plan is not None and len(tc.bit_plan) != len(metas_flat):
+        raise ValueError(
+            f"bit_plan has {len(tc.bit_plan)} specs for "
+            f"{len(metas_flat)} state leaves")
     buckets = _exchange_buckets(metas_flat, mode, tc, n_workers)
     chunk_sharded = mode.chunk_sharded_moments  # moments chunked vs full-shard
     state_spec = P(*worker_axes, MODEL_AXIS, None) if model_in_mesh \
@@ -484,11 +494,16 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
         # 3+4. per-worker engine update + per-mode quantized exchange
         base = jax.random.fold_in(jax.random.PRNGKey(tc.seed), t)
         widx = C.worker_index(worker_axes, wsizes)
-        new_m, new_mm, new_vv, new_ee = [], [], [], []
+        new_m, new_mm, new_vv, new_ee, stat_rows = [], [], [], [], []
         for i, meta in enumerate(metas_flat):
             key = jax.random.fold_in(jax.random.fold_in(base, i), widx)
-            nc, nm, nv, ne = updater(gs[i], ms_[i], vs_[i], es_[i],
-                                     masters[i], meta, a_t, th_t, key)
+            out = updater(gs[i], ms_[i], vs_[i], es_[i],
+                          masters[i], meta, a_t, th_t, key, i)
+            if mode.emits_stats:
+                nc, nm, nv, ne, row = out
+                stat_rows.append(row)
+            else:
+                nc, nm, nv, ne = out
             lead = (1,) * (len(worker_axes) + 1)
             new_m.append(nc.reshape(lead + (meta.c,)))
             new_mm.append(nm.reshape(lead + (_state_x(meta),)))
@@ -503,7 +518,12 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
             new_state["es"] = unf([
                 es.reshape(lead + (m.c,))
                 for es, m in zip(new_es, metas_flat)])
-        return new_state, {"loss": loss}
+        metrics = {"loss": loss}
+        if mode.emits_stats:
+            rows = jnp.stack(stat_rows)          # (n_leaves, N_FIELDS)
+            metrics["gstats"] = (astats.reduce_stats(rows, all_axes)
+                                 if all_axes else rows)
+        return new_state, metrics
 
     def step_fn(state, batch):
         Wb, cp = _batch_geometry(batch, Nm, worker_axes, n_workers,
@@ -514,9 +534,12 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
         for k in ("m", "v", "e") + mode.extra_state:
             sspec[k] = jax.tree.map(lambda _: state_spec, layout._leaves)
         bspec = _batch_specs(batch, Wb, cp)
+        mspec = {"loss": P()}
+        if mode.emits_stats:
+            mspec["gstats"] = P()
         fn = shard_map(functools.partial(_impl, cp=cp), mesh=mesh,
                        in_specs=(sspec, bspec),
-                       out_specs=(sspec, {"loss": P()}),
+                       out_specs=(sspec, mspec),
                        check_rep=False)
         return fn(state, batch)
 

@@ -278,7 +278,8 @@ def build_and_compile(arch: str, shape_name: str, multi_pod: bool,
                       mesh_override=None, smoke: bool = False,
                       train_overrides: Optional[dict] = None,
                       model_overrides: Optional[dict] = None,
-                      calibrate: bool = True) -> Dict:
+                      calibrate: bool = True, adaptive: bool = False,
+                      adapt_budget: float = 0.6) -> Dict:
     import jax
 
     from repro.configs import get_config, INPUT_SHAPES, shape_applicable
@@ -325,7 +326,20 @@ def build_and_compile(arch: str, shape_name: str, multi_pod: bool,
         from repro.dist.step import make_train_step, TrainConfig
         from repro.train.loop import comm_bytes_per_step
         tc = TrainConfig(worker_axes=W, **(train_overrides or {}))
-        train_art = make_train_step(Model(cfg), mesh, tc)
+        if adaptive:
+            # solve the bit plan under the uniform prior (no gradient
+            # history pre-run) and lower the planned step; the per-leaf
+            # report and the registry accounting both come from the
+            # allocator output, not hand-rolled formulas. Calibration
+            # is forced off: it re-lowers with n_layers 2/3, whose leaf
+            # counts no longer match the plan length.
+            from repro.adapt.controller import plan_for_model
+            tc, train_art, rep = plan_for_model(
+                Model(cfg), mesh, tc, budget_ratio=adapt_budget)
+            result["bit_plan"] = rep
+            calibrate = False
+        else:
+            train_art = make_train_step(Model(cfg), mesh, tc)
         result["comm_accounting"] = comm_bytes_per_step(train_art, tc)
 
     lowered = _lower_one(cfg, kind, mesh, gbatch, seq, enc_seq, W,
@@ -420,6 +434,12 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced configs (test harness)")
     ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="train shapes: solve the repro.adapt bit plan "
+                         "and report per-leaf lanes + projected wire "
+                         "bytes (implies --no-calibrate for them)")
+    ap.add_argument("--adapt-budget", type=float, default=0.6,
+                    help="a2a byte budget vs the fixed log-grid wire")
     ap.add_argument("--train-overrides", default=None,
                     help="json dict of TrainConfig overrides")
     ap.add_argument("--model-overrides", default=None,
@@ -454,7 +474,9 @@ def main():
                         arch, shape, mp, mesh_override=mesh_override,
                         smoke=args.smoke, train_overrides=overrides,
                         model_overrides=m_overrides,
-                        calibrate=not args.no_calibrate)
+                        calibrate=not args.no_calibrate,
+                        adaptive=args.adaptive,
+                        adapt_budget=args.adapt_budget)
                     res["multi_pod"] = mp
                     if overrides:
                         res["train_overrides"] = overrides
@@ -473,6 +495,19 @@ def main():
                             f" x={r['collective_s']:.4f}s) "
                             f"useful={res['useful_flops_ratio'] and round(res['useful_flops_ratio'], 3)} "
                             f"compile={res['compile_s']}s", flush=True)
+                        if res.get("bit_plan"):
+                            bp = res["bit_plan"]
+                            lanes = {}
+                            for row in bp["rows"]:
+                                lanes[row["spec"]] = \
+                                    lanes.get(row["spec"], 0) + 1
+                            print(
+                                f"     bit plan: "
+                                + " ".join(f"{s}x{n}" for s, n
+                                           in sorted(lanes.items()))
+                                + f" | a2a {bp['plan_bytes']}B/step "
+                                f"(budget {bp['budget_bytes']}B, fixed "
+                                f"{bp['baseline_bytes']}B)", flush=True)
                 except Exception as ex:  # noqa
                     res = {"arch": arch, "shape": shape, "multi_pod": mp,
                            "error": f"{type(ex).__name__}: {ex}"}

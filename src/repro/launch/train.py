@@ -24,6 +24,80 @@ import json
 import numpy as np
 
 
+def _run_adaptive(args, model, mesh, tc):
+    """--adaptive path: drive the run through the repro.adapt
+    controller (stats ring -> bit allocation -> codec swaps at replan
+    boundaries) instead of a plain session."""
+    import jax
+    import math
+    from repro.adapt.controller import AdaptConfig, AdaptiveController
+    from repro.configs import get_config
+    from repro.data.pipeline import batch_for_model
+    from repro.train.session import SessionConfig
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    batches = batch_for_model(cfg, args.seq, args.global_batch,
+                              seed=args.seed)
+    sc = SessionConfig(log_every=args.log_every,
+                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+                       ckpt_keep=args.ckpt_keep, ckpt_codec=args.ckpt_codec,
+                       scan_chunk=args.scan_chunk, prefetch=args.prefetch,
+                       aot_dir=args.aot_dir)
+    acfg = AdaptConfig(budget_ratio=args.adapt_budget,
+                       replan_every=args.replan_every,
+                       ema_decay=args.adapt_ema)
+    ctl = AdaptiveController(model, mesh, tc, batches, acfg, sc,
+                             key=jax.random.PRNGKey(args.seed),
+                             verify=args.adapt_verify)
+    print(f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"workers={ctl.art.n_workers}")
+    try:
+        ctl.run(args.steps)
+        windows = math.ceil(args.steps / args.replan_every)
+        if args.adapt_verify:
+            # every plan already passed accounted == measured (see
+            # AdaptiveController verify); here: the only host syncs are
+            # the per-window stats harvests + the log-boundary loss
+            # harvests - nothing per step.
+            expected = windows if args.log_every == 0 else None
+            if expected is not None:
+                assert ctl.stats["syncs"] == expected, \
+                    (f"{ctl.stats['syncs']} syncs != {expected} "
+                     f"replan windows: a per-step host sync crept in")
+            print(f"adapt-verify OK: {len(ctl.plan_log)} plans exact, "
+                  f"{ctl.stats['syncs']} syncs / {windows} windows")
+        losses = [h for h in ctl.session.history if "loss" in h]
+        if not losses:
+            losses = [{"step": s, "loss": v}
+                      for s, v in ctl.session.harvest_losses()]
+    finally:
+        ctl.close()
+    print(f"session stats: {ctl.stats}")
+    for e in ctl.plan_log:
+        a2a = e["comm"]["update_exchange_bytes"]
+        print(f"plan @{e['step']}: a2a {a2a/1e6:.3f}MB/step "
+              f"({'initial log grid' if e['bit_plan'] is None else ''}"
+              f"{'' if e['bit_plan'] is None else _plan_summary(e['bit_plan'])})")
+    if args.history_out:
+        with open(args.history_out, "w") as f:
+            json.dump({"arch": args.arch, "history": ctl.session.history,
+                       "plan_log": [
+                           {"step": e["step"], "comm": e["comm"],
+                            "bit_plan": (list(e["bit_plan"])
+                                         if e["bit_plan"] else None)}
+                           for e in ctl.plan_log],
+                       "stats": ctl.stats}, f, indent=1)
+    if losses:
+        print("final loss:", losses[-1]["loss"])
+
+
+def _plan_summary(plan):
+    counts = {}
+    for spec in plan:
+        counts[spec] = counts.get(spec, 0) + 1
+    return " ".join(f"{s}x{n}" for s, n in sorted(counts.items()))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -50,7 +124,20 @@ def main():
     ap.add_argument("--no-ef", action="store_true")
     ap.add_argument("--mode", default="qadam",
                     choices=["qadam", "efadam", "dp_adam", "terngrad",
-                             "ef_sgd"])
+                             "ef_sgd", "adaptive"])
+    ap.add_argument("--adaptive", action="store_true",
+                    help="runtime-adaptive per-leaf bit allocation "
+                         "(repro.adapt): stats-driven replans every "
+                         "--replan-every steps under --adapt-budget")
+    ap.add_argument("--adapt-budget", type=float, default=0.6,
+                    help="a2a byte budget as a fraction of the fixed "
+                         "log:6 wire")
+    ap.add_argument("--replan-every", type=int, default=25)
+    ap.add_argument("--adapt-ema", type=float, default=0.8,
+                    help="stats EMA decay per step")
+    ap.add_argument("--adapt-verify", action="store_true",
+                    help="assert exact byte accounting at every plan "
+                         "and zero steady-state host syncs")
     ap.add_argument("--scan-chunk", type=int, default=1,
                     help=">1: lax.scan this many steps per compiled call")
     ap.add_argument("--prefetch", type=int, default=2,
@@ -78,6 +165,10 @@ def main():
     args = ap.parse_args()
     if args.resume and not args.ckpt_dir:
         ap.error("--resume requires --ckpt-dir")
+    args.adaptive = args.adaptive or args.mode == "adaptive"
+    if args.adaptive and args.resume:
+        ap.error("--adaptive does not support --resume yet (the bit "
+                 "plan is not checkpointed)")
 
     import jax
     from repro import perf
@@ -104,7 +195,11 @@ def main():
         weight_absolute=args.weight_absolute,
         model_gather_quant=args.model_gather_quant or None,
         error_feedback=not args.no_ef,
-        worker_axes=("pod", "data"), mode=args.mode)
+        worker_axes=("pod", "data"),
+        mode="adaptive" if args.adaptive else args.mode)
+    if args.adaptive:
+        _run_adaptive(args, model, mesh, tc)
+        return
     art = make_train_step(model, mesh, tc)
     comm = comm_bytes_per_step(art, tc)
     print(f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "

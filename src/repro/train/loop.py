@@ -46,15 +46,19 @@ def comm_bytes_per_step(art: StepArtifacts, tc: TrainConfig) -> Dict[str, float]
     assert the figures agree byte-for-byte with the packed payload
     arrays the collectives actually move
     (``tests/test_comm_accounting.py``). The f32 scale side-channels
-    (one scalar per leaf per worker; per-256-block for ef_sgd, ~6% of
-    its 2-bit payload) are excluded."""
+    (one scalar per leaf per worker; per-256-block for ef_sgd and the
+    adaptive blockwise lanes, ~6% of their 2-bit payload) are excluded.
+
+    Per-leaf wire plans (``tc.bit_plan``, the adaptive mode) are exact
+    too: the sum goes through ``ModeSpec.leaf_wire_nbytes`` in
+    metas_flat order, so the figure tracks every replan."""
     mode = get_mode(tc.mode)
     metas = _leaf_meta(art.layout, art.n_workers)
     leaves = jax.tree.leaves(
         metas, is_leaf=lambda x: type(x).__name__ == "LeafMeta")
     shard_numel = sum(int(np.prod(m.shp)) for m in leaves)
-    a2a = sum(mode.wire_nbytes(m.c, art.n_workers, tc.grad_k)
-              for m in leaves)
+    a2a = sum(mode.leaf_wire_nbytes(tc, i, m.c, art.n_workers)
+              for i, m in enumerate(leaves))
     bcast = sum(
         art.n_workers * weight_wire_codec(tc, m.full_numel).payload_nbytes(m.c)
         for m in leaves)

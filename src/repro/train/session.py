@@ -70,6 +70,11 @@ class SessionConfig:
     scan_chunk: int = 1        # K steps per compiled dispatch
     prefetch: int = 2          # staged batches in flight; 0 = synchronous
     check_finite: bool = True  # raise on non-finite harvested loss
+    # stats-ring coverage in steps (modes with ``emits_stats``, e.g. the
+    # adaptive controller's replan window). The per-step gradient-stats
+    # rows stay device-resident for at least this many steps between
+    # ``harvest_stats()`` calls; 0 sizes the ring off log_every alone.
+    stats_ring: int = 0
     # AOT step artifacts (repro.perf.aot): serialized compiled train
     # steps keyed on (config digest, mesh, mode, codec, arg signature).
     # A warm dir skips trace+lower+compile entirely on restart; None
@@ -132,6 +137,22 @@ class _DistProgram:
     def step_count(self, state):
         return state["count"]
 
+    def stats_shape(self):
+        """``(n_leaves, N_FIELDS)`` when the mode emits per-leaf stats
+        rows (adaptive), else None (no stats ring allocated)."""
+        from repro.dist.modes import get_mode
+        if not get_mode(self.art.config.mode).emits_stats:
+            return None
+        from repro.adapt import stats as astats
+        n_leaves = len(jax.tree_util.tree_leaves(self.art.layout._leaves))
+        return (n_leaves, astats.N_FIELDS)
+
+    def step_token(self):
+        """Hashable token the compiled-step cache keys on besides k: the
+        TrainConfig, so swapping artifacts (a new adaptive bit plan)
+        never reuses the previous plan's executable."""
+        return self.art.config
+
     def aot_facts(self):
         """What the compiled step's machine code depends on beyond the
         argument signature: the mode/codec config and mesh geometry."""
@@ -190,6 +211,12 @@ class _SingleProgram:
 
     def step_count(self, state):
         return state["opt"].count
+
+    def stats_shape(self):
+        return None
+
+    def step_token(self):
+        return None
 
     def aot_facts(self):
         return {"program": "single",
@@ -322,8 +349,9 @@ class TrainSession:
                     f"scan_chunk={self.chunk}")
         # device loss ring: sized so every unharvested step since the
         # last log boundary stays resident (one extra chunk of slack for
-        # boundary-misaligned tails)
-        cover = max(self.cfg.log_every, 1)
+        # boundary-misaligned tails). Stats-emitting modes share the
+        # slot geometry, so the cover also spans the stats window.
+        cover = max(self.cfg.log_every, self.cfg.stats_ring, 1)
         self._ring_len = self.chunk * (math.ceil(cover / self.chunk) + 1)
         # committed placement (replicated over the program's mesh): an
         # uncommitted jnp.zeros ring would differ from the (committed)
@@ -332,9 +360,17 @@ class TrainSession:
         self._ring = jax.device_put(jnp.zeros((self._ring_len,),
                                               jnp.float32),
                                     program.ring_sharding())
+        # device stats ring (modes with ``emits_stats``): per-step
+        # (n_leaves, N_FIELDS) rows written inside the compiled step,
+        # harvested in one sync at replan/log boundaries
+        sshape = program.stats_shape()
+        self._sring = None if sshape is None else jax.device_put(
+            jnp.zeros((self._ring_len,) + tuple(sshape), jnp.float32),
+            program.ring_sharding())
         self._slot = 0
         self._segments: List[tuple] = []   # (first_step, slot, k) pending
-        self._steps_by_k: Dict[int, Callable] = {}
+        self._stat_segments: List[tuple] = []
+        self._steps_by_k: Dict[Any, Callable] = {}
         self._step = 0                     # optimizer steps executed
         self._prefetch: Optional[_Prefetcher] = None
         self.history: List[Dict[str, Any]] = []
@@ -376,22 +412,35 @@ class TrainSession:
     # -- compiled step plumbing ----------------------------------------
 
     def _built_step(self, k: int, args: tuple) -> Callable:
-        """Compiled ``(state, ring, slot, batch) -> (state, ring)`` for a
-        k-step dispatch; state and ring buffers are donated, the loss
-        lands in the ring INSIDE the compiled program (no host sync).
+        """Compiled ``(state, ring[, sring], slot, batch) -> (state,
+        ring[, sring])`` for a k-step dispatch; state and ring buffers
+        are donated, the loss (and, for stats-emitting modes, the
+        per-leaf stats row) lands in its ring INSIDE the compiled
+        program (no host sync).
 
-        With ``cfg.aot_dir`` the executable is loaded from / exported to
-        an AOT artifact keyed on the program facts + ``args`` signature
+        The cache key carries the program's ``step_token`` (the dist
+        TrainConfig), so a ``swap_artifacts`` plan switch builds a new
+        executable instead of reusing the old plan's. With
+        ``cfg.aot_dir`` the executable is loaded from / exported to an
+        AOT artifact keyed on the program facts + ``args`` signature
         (see ``repro.perf.aot``); ``stats["compilations"]`` vs
         ``stats["aot_loads"]`` records which path ran."""
-        fn = self._steps_by_k.get(k)
+        ckey = (k, self._program.step_token())
+        fn = self._steps_by_k.get(ckey)
         if fn is not None:
             return fn
         step_fn = self._program.step_fn()
+        with_stats = self._sring is not None
         if k == 1 and self.chunk == 1:
             def wrapped(state, ring, slot, batch):
                 state, metrics = step_fn(state, batch)
                 return state, ring.at[slot].set(metrics["loss"])
+
+            def wrapped_s(state, ring, sring, slot, batch):
+                state, metrics = step_fn(state, batch)
+                sring = jax.lax.dynamic_update_slice(
+                    sring, metrics["gstats"][None], (slot, 0, 0))
+                return state, ring.at[slot].set(metrics["loss"]), sring
         else:
             def wrapped(state, ring, slot, batches):
                 def body(s, b):
@@ -400,19 +449,34 @@ class TrainSession:
                 state, losses = jax.lax.scan(body, state, batches)
                 return state, jax.lax.dynamic_update_slice(
                     ring, losses, (slot,))
+
+            def wrapped_s(state, ring, sring, slot, batches):
+                def body(s, b):
+                    s2, m = step_fn(s, b)
+                    return s2, (m["loss"], m["gstats"])
+                state, (losses, rows) = jax.lax.scan(body, state, batches)
+                ring = jax.lax.dynamic_update_slice(ring, losses, (slot,))
+                sring = jax.lax.dynamic_update_slice(
+                    sring, rows, (slot, 0, 0))
+                return state, ring, sring
         # pin the output shardings to the input state's: on small meshes
         # GSPMD canonicalizes size-1-axis specs to replicated on the way
         # out, and the sharding flip would silently recompile the whole
         # step on the SECOND dispatch
-        out_sh = (jax.tree.map(lambda x: x.sharding, self._state),
-                  self._ring.sharding)
-        jitted = jax.jit(wrapped, donate_argnums=(0, 1),
-                         out_shardings=out_sh)
+        state_sh = jax.tree.map(lambda x: x.sharding, self._state)
+        if with_stats:
+            out_sh = (state_sh, self._ring.sharding, self._sring.sharding)
+            jitted = jax.jit(wrapped_s, donate_argnums=(0, 1, 2),
+                             out_shardings=out_sh)
+        else:
+            out_sh = (state_sh, self._ring.sharding)
+            jitted = jax.jit(wrapped, donate_argnums=(0, 1),
+                             out_shardings=out_sh)
         facts = dict(self._program.aot_facts(), k=k, chunk=self.chunk,
                      ring_len=self._ring_len)
         fn = aot.load_or_compile(jitted, args, aot_dir=self.cfg.aot_dir,
                                  facts=facts, stats=self.stats)
-        self._steps_by_k[k] = fn
+        self._steps_by_k[ckey] = fn
         return fn
 
     def _sync(self, x):
@@ -421,11 +485,21 @@ class TrainSession:
 
     # -- loss ring ------------------------------------------------------
 
-    def _record_segment(self, first_step: int, slot: int, k: int):
+    @staticmethod
+    def _push_segment(segments: List[tuple], first_step: int, slot: int,
+                      k: int) -> List[tuple]:
         lo, hi = slot, slot + k
-        self._segments = [s for s in self._segments
-                          if s[1] + s[2] <= lo or s[1] >= hi]
-        self._segments.append((first_step, slot, k))
+        segments = [s for s in segments
+                    if s[1] + s[2] <= lo or s[1] >= hi]
+        segments.append((first_step, slot, k))
+        return segments
+
+    def _record_segment(self, first_step: int, slot: int, k: int):
+        self._segments = self._push_segment(self._segments, first_step,
+                                            slot, k)
+        if self._sring is not None:
+            self._stat_segments = self._push_segment(
+                self._stat_segments, first_step, slot, k)
 
     def harvest_losses(self) -> List[tuple]:
         """Pull every still-resident per-step loss off the device in ONE
@@ -445,6 +519,39 @@ class TrainSession:
                 if not np.isfinite(v):
                     raise FloatingPointError(f"loss diverged at step {s}")
         return out
+
+    def harvest_stats(self) -> List[tuple]:
+        """Pull every still-resident per-step gradient-stats row off the
+        device in ONE host sync; returns ``[(step, (n_leaves, N_FIELDS)
+        ndarray), ...]`` sorted by step and clears the pending stats
+        segments. Empty for modes without ``emits_stats``."""
+        if self._sring is None or not self._stat_segments:
+            return []
+        vals = self._sync(self._sring)
+        out = []
+        for first, slot, k in self._stat_segments:
+            for j in range(k):
+                out.append((first + j, np.asarray(vals[slot + j])))
+        self._stat_segments.clear()
+        out.sort(key=lambda t: t[0])
+        return out
+
+    # -- adaptive replans ----------------------------------------------
+
+    def swap_artifacts(self, art):
+        """Swap in new ``StepArtifacts`` (same model/mesh/state layout,
+        different TrainConfig - the adaptive controller's new bit plan)
+        at a dispatch boundary. The live state buffers carry over
+        untouched - masters, moments and EF residuals continue bitwise
+        from the previous plan - and the next dispatch compiles (or
+        AOT-loads) the new plan's executable under its own cache key."""
+        if not isinstance(self._program, _DistProgram):
+            raise ValueError("swap_artifacts requires a dist session")
+        old = self._program.art
+        if (art.mesh is not old.mesh or art.n_workers != old.n_workers
+                or art.worker_axes != old.worker_axes):
+            raise ValueError("swap_artifacts cannot change mesh geometry")
+        self._program.art = art
 
     # -- checkpointing --------------------------------------------------
 
@@ -563,8 +670,13 @@ class TrainSession:
             if self._slot + k > self._ring_len:
                 self._slot = 0
             sl, i0 = self._slot, self._step
-            args = (self._state, self._ring, sl, batch)
-            self._state, self._ring = self._built_step(k, args)(*args)
+            if self._sring is None:
+                args = (self._state, self._ring, sl, batch)
+                self._state, self._ring = self._built_step(k, args)(*args)
+            else:
+                args = (self._state, self._ring, self._sring, sl, batch)
+                self._state, self._ring, self._sring = \
+                    self._built_step(k, args)(*args)
             self._record_segment(i0 + 1, sl, k)
             self._slot += k
             self._step += k

@@ -1,0 +1,231 @@
+"""repro.adapt: allocator invariants, stats EMA, and the adaptive
+controller end to end (device stats ring -> replan -> codec swap).
+
+The allocator properties (budget respected, monotone in budget, legal
+lane widths only) run twice: a deterministic seeded sweep that always
+executes, and a hypothesis fuzz that engages wherever hypothesis is
+installed (requirements-dev.txt; CI runs it).
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adapt import allocate as A
+from repro.adapt import stats as S
+from repro.comm import bits as B
+
+
+def _rand_groups(rng, n):
+    return [A.Group(name=f"g{i}",
+                    numel=int(rng.integers(1, 5000)),
+                    c=int(rng.integers(1, 5000)),
+                    amax=float(rng.uniform(1e-6, 10.0)),
+                    meansq=float(rng.uniform(1e-12, 1.0)))
+            for i in range(n)]
+
+
+def _check_alloc(groups, budget, n_workers):
+    widths = A.allocate(groups, budget, n_workers)
+    assert len(widths) == len(groups)
+    assert all(w in A.WIDTHS for w in widths)
+    cost = A.plan_cost(groups, widths, n_workers)
+    floor = sum(A._hull_chain(g, n_workers)[0][0] for g in groups)
+    # budget respected whenever it is satisfiable at all
+    assert cost <= max(budget, floor)
+    return widths, cost
+
+
+class TestAllocator:
+    def test_width_specs_cover_supported_lanes(self):
+        assert set(A.WIDTH_SPECS) == set(B.SUPPORTED_BITS)
+        from repro import comm
+        for w, spec in A.WIDTH_SPECS.items():
+            assert comm.get_codec(spec).bits == w, spec
+
+    def test_distortion_decreases_with_width(self):
+        for amax, meansq in ((1.0, 0.1), (3.0, 0.5), (1e-3, 1e-7)):
+            ds = [A.expected_distortion(w, amax, meansq)
+                  for w in (3, 4, 6, 8)]
+            assert all(a >= b for a, b in zip(ds, ds[1:])), ds
+
+    def test_rich_budget_gives_widest_lanes(self):
+        groups = _rand_groups(np.random.default_rng(0), 6)
+        widths = A.allocate(groups, 10 ** 12, n_workers=4)
+        # unconstrained: every group sits at its hull's best vertex
+        for g, w in zip(groups, widths):
+            assert w == A._hull_chain(g, 4)[-1][2]
+
+    def test_deterministic(self):
+        groups = _rand_groups(np.random.default_rng(1), 8)
+        a = A.allocate(groups, 10_000, 4)
+        assert a == A.allocate(groups, 10_000, 4)
+
+    def test_seeded_sweep_budget_and_monotone(self):
+        """Always-on stand-in for the hypothesis fuzz."""
+        rng = np.random.default_rng(42)
+        for trial in range(25):
+            groups = _rand_groups(rng, int(rng.integers(1, 10)))
+            n_workers = int(rng.integers(1, 9))
+            budgets = sorted(int(rng.integers(0, 200_000))
+                             for _ in range(4))
+            prev = None
+            for budget in budgets:
+                widths, _ = _check_alloc(groups, budget, n_workers)
+                if prev is not None:
+                    # more budget never narrows any lane
+                    assert all(w2 >= w1 for w1, w2 in zip(prev, widths)), \
+                        (prev, widths, budget)
+                prev = widths
+
+    def test_specs_match_widths(self):
+        groups = _rand_groups(np.random.default_rng(3), 5)
+        widths = A.allocate(groups, 50_000, 2)
+        specs = A.allocate_specs(groups, 50_000, 2)
+        assert specs == tuple(A.WIDTH_SPECS[w] for w in widths)
+
+    def test_empty_groups(self):
+        assert A.allocate([], 100, 2) == ()
+
+
+# hypothesis fuzz: runs wherever the package is installed
+# (requirements-dev.txt -> CI); the seeded sweep above always runs.
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
+
+if st is not None:
+    group_st = st.builds(
+        A.Group,
+        name=st.just("g"),
+        numel=st.integers(1, 100_000),
+        c=st.integers(1, 100_000),
+        amax=st.floats(1e-9, 100.0, allow_nan=False,
+                       allow_infinity=False),
+        meansq=st.floats(1e-15, 10.0, allow_nan=False,
+                         allow_infinity=False))
+
+    class TestAllocatorFuzz:
+        @settings(max_examples=60, deadline=None)
+        @given(groups=st.lists(group_st, min_size=1, max_size=8),
+               budget=st.integers(0, 10 ** 7),
+               n_workers=st.integers(1, 16))
+        def test_budget_respected_and_legal(self, groups, budget,
+                                            n_workers):
+            _check_alloc(groups, budget, n_workers)
+
+        @settings(max_examples=60, deadline=None)
+        @given(groups=st.lists(group_st, min_size=1, max_size=6),
+               b1=st.integers(0, 10 ** 6), extra=st.integers(0, 10 ** 6),
+               n_workers=st.integers(1, 8))
+        def test_monotone_in_budget(self, groups, b1, extra, n_workers):
+            w1 = A.allocate(groups, b1, n_workers)
+            w2 = A.allocate(groups, b1 + extra, n_workers)
+            assert all(a <= b for a, b in zip(w1, w2))
+
+
+class TestStatsEMA:
+    def test_debias_single_update(self):
+        ema = S.StatsEMA(2, decay=0.9)
+        rows = np.array([[1.0, 0.5, 0.25], [2.0, 1.0, 0.5]])
+        ema.update(rows)
+        np.testing.assert_allclose(ema.snapshot(), rows)
+
+    def test_peak_hold_amax(self):
+        ema = S.StatsEMA(1, decay=0.5)
+        ema.update(np.array([[8.0, 1.0, 1.0]]))
+        ema.update(np.array([[1.0, 1.0, 1.0]]))
+        # one small observation must not collapse the held peak
+        assert ema.amax[0] >= 4.0
+        assert ema.snapshot()[0, 0] == ema.amax[0]
+
+    def test_shape_validated(self):
+        ema = S.StatsEMA(3)
+        with pytest.raises(ValueError):
+            ema.update(np.zeros((2, S.N_FIELDS)))
+
+    def test_local_and_reduce_stats(self):
+        de = jnp.array([1.0, -3.0, 0.5])
+        g = jnp.array([2.0, 2.0, 2.0])
+        row = S.local_stats(de, g)
+        np.testing.assert_allclose(
+            np.asarray(row), [3.0, np.mean([1, 9, 0.25]), 4.0], rtol=1e-6)
+
+
+class TestController:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        from repro.configs import get_config
+        from repro.models.model import Model
+        from repro.dist.step import TrainConfig
+        model = Model(get_config("yi-6b", smoke=True))
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        tc = TrainConfig(worker_axes=("data",), mode="adaptive")
+        return model, mesh, tc
+
+    def _batches(self, model):
+        k = jax.random.PRNGKey(0)
+        v = model.cfg.vocab_size
+        while True:
+            k, s = jax.random.split(k)
+            tok = jax.random.randint(s, (2, 16), 0, v)
+            yield {"tokens": tok, "targets": tok}
+
+    def test_controller_replans_and_accounts(self, setup):
+        from repro.adapt.controller import AdaptConfig, AdaptiveController
+        model, mesh, tc = setup
+        acfg = AdaptConfig(replan_every=2)
+        ctl = AdaptiveController(model, mesh, tc, self._batches(model),
+                                 acfg, key=jax.random.PRNGKey(0),
+                                 log=lambda *_: None, verify=True)
+        try:
+            ctl.run(6)
+            # stats ring discipline: one harvest sync per replan window
+            assert ctl.stats["syncs"] == math.ceil(6 / 2)
+            assert ctl.replans >= 1
+            # every recorded plan passed accounted == measured (verify=True)
+            assert all("verify" in e for e in ctl.plan_log)
+            # the adaptive plan actually shrinks the wire vs the log grid
+            first = ctl.plan_log[0]["comm"]["update_exchange_bytes"]
+            last = ctl.plan_log[-1]["comm"]["update_exchange_bytes"]
+            assert last < first
+            losses = ctl.session.harvest_losses()
+            assert losses and all(np.isfinite(v) for _, v in losses)
+        finally:
+            ctl.close()
+
+    def test_swap_preserves_state_bitwise(self, setup):
+        """A replan changes only the wire: state before the swap equals
+        state after (the swap itself moves no buffers)."""
+        from repro.adapt.controller import AdaptConfig, AdaptiveController
+        model, mesh, tc = setup
+        ctl = AdaptiveController(model, mesh, tc, self._batches(model),
+                                 AdaptConfig(replan_every=2),
+                                 key=jax.random.PRNGKey(1),
+                                 log=lambda *_: None)
+        try:
+            ctl.session.run(2)
+            for _, rows in ctl.session.harvest_stats():
+                ctl.ema.update(rows)
+            before = jax.tree.map(np.asarray, ctl.state)
+            assert ctl.replan()
+            after = jax.tree.map(np.asarray, ctl.state)
+            jax.tree.map(np.testing.assert_array_equal, before, after)
+        finally:
+            ctl.close()
+
+    def test_plan_for_model_uniform_prior(self, setup):
+        from repro.adapt.controller import plan_for_model
+        model, mesh, tc = setup
+        tc2, art2, rep = plan_for_model(model, mesh, tc, budget_ratio=0.6)
+        assert tc2.bit_plan is not None
+        assert len(tc2.bit_plan) == len(rep["rows"])
+        assert rep["plan_bytes"] <= rep["budget_bytes"]
+        assert rep["budget_bytes"] == int(0.6 * rep["baseline_bytes"])
+        from repro.train.loop import comm_bytes_per_step
+        assert comm_bytes_per_step(art2, tc2)["update_exchange_bytes"] \
+            == rep["plan_bytes"]
