@@ -53,6 +53,11 @@ RATIO_FLOORS = [
     # k_g=6 bytes/step while holding final loss within 1%
     ("adapt_bytes_reduction", 1 / 0.6),
     ("adapt_loss_parity", 0.99),
+    # PR-9 headline: the 2x4 hierarchical topology must ship <= 0.27x
+    # flat's inter-node wire bytes (accounting says exactly 0.25x), and
+    # the tuned exchange bucket must never lose to the config default
+    ("dist_hier_inter_bytes", 1 / 0.27),
+    ("dist_bucket_tuned", 1.0),
 ]
 
 

@@ -639,6 +639,71 @@ def bench_adapt(emit, steps=250, seeds=2, workers=4, replan_every=25,
          f"fixed{fl:.4f}_vs_adaptive{al:.4f}", fl / al)
 
 
+def bench_dist(emit, steps=6, warmup=2):
+    """Flat vs hierarchical parameter-server topology on a simulated
+    2-node x 4-device mesh (needs
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``). Two rows
+    are GATED compare.py floors: ``dist_hier_inter_bytes`` (the 2x4
+    hierarchy must ship <= 0.27x flat's inter-node wire bytes; the
+    registry accounting says exactly 1/devices_per_node = 0.25x) and
+    ``dist_bucket_tuned`` (the bucket the exchange tuner picks must not
+    lose to the config default - the incumbent joins the sweep, so
+    >= 1.0 by construction)."""
+    import jax
+    if jax.device_count() < 8:
+        emit("dist_skipped", 0.0,
+             f"needs_8_devices_have_{jax.device_count()}")
+        return
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.dist import topology as T
+    from repro.dist.step import make_train_step, TrainConfig
+    from repro.models.model import Model
+    from repro.perf.autotune import tune_exchange_buckets
+    from repro.train.loop import comm_bytes_per_step
+
+    model = Model(get_config("yi-6b", smoke=True))
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:8]).reshape(2, 4, 1),
+        ("pod", "data", "model"))
+    rng = np.random.default_rng(0)
+    tok = jnp.asarray(rng.integers(0, model.cfg.vocab_size,
+                                   size=(8, 32)).astype(np.int32))
+    batch = {"tokens": tok, "targets": tok}
+
+    cfgs, times = {}, {}
+    for name, topo in (("flat", T.FlatTopology()),
+                       ("hier", T.HierarchicalTopology(2, 4))):
+        tc = TrainConfig(worker_axes=("pod", "data"), topology=topo)
+        art = make_train_step(model, mesh, tc)
+        state = art.init_state(jax.random.PRNGKey(0))
+        step = jax.jit(art.step_fn, donate_argnums=(0,))
+        for _ in range(warmup):
+            state, metrics = step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, metrics = step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        times[name] = (time.perf_counter() - t0) / steps * 1e6
+        cfgs[name] = (art, tc)
+        del state
+
+    fb = comm_bytes_per_step(*cfgs["flat"])["tiers"]["inter"]["total"]
+    hb = comm_bytes_per_step(*cfgs["hier"])["tiers"]["inter"]["total"]
+    emit("dist_step_flat_2x4", times["flat"], "smoke_8dev")
+    emit("dist_step_hier_2x4", times["hier"],
+         f"{times['flat'] / times['hier']:.2f}x_vs_flat")
+    emit("dist_hier_inter_bytes", 0.0,
+         f"hier{hb}B_vs_flat{fb}B_per_step", fb / hb)
+    rep = tune_exchange_buckets(model, mesh, cfgs["hier"][1], batch,
+                                candidates=(0, 1 << 20), steps=3,
+                                warmup=1)
+    emit("dist_bucket_tuned", rep["timings_s"][rep["best"]] * 1e6,
+         f"bucket{rep['best']}B_{rep['speedup']:.2f}x_vs_default",
+         rep["speedup"])
+
+
 def bench_roofline(emit):
     path = os.path.join(ROOT, "results", "dryrun_single.jsonl")
     if not os.path.exists(path):
@@ -668,6 +733,7 @@ BENCHES = {
     "table3_cifar10_analogue": bench_table3,
     "fig34_convergence": bench_fig34,
     "adapt": bench_adapt,
+    "dist": bench_dist,
     "roofline": bench_roofline,
 }
 
@@ -679,6 +745,7 @@ SUITES = {
     "kernels": ["kernels", "comm_codec", "comm_cost"],
     "startup": ["startup"],
     "adapt": ["adapt"],
+    "dist": ["dist"],
     "paper": ["table2_cifar100_analogue", "table3_cifar10_analogue",
               "fig34_convergence", "comm_cost"],
     "all": list(BENCHES),

@@ -30,12 +30,17 @@ from repro.adapt.allocate import (  # noqa: F401
 from repro.adapt.stats import N_FIELDS, STAT_FIELDS, StatsEMA  # noqa: F401
 
 _CONTROLLER_NAMES = ("AdaptConfig", "AdaptiveController", "plan_for_model",
-                     "leaf_groups_for", "measured_exchange_bytes")
+                     "leaf_groups_for", "measured_exchange_bytes",
+                     "measured_tier_bytes", "verify_accounting")
 
 
 def __getattr__(name):
     if name in _CONTROLLER_NAMES or name == "controller":
-        from repro.adapt import controller
+        # importlib, not ``from repro.adapt import controller``: the
+        # from-import form probes this attribute again via hasattr()
+        # before the submodule lands on the package and recurses.
+        import importlib
+        controller = importlib.import_module("repro.adapt.controller")
         return controller if name == "controller" else getattr(controller,
                                                                name)
     raise AttributeError(f"module 'repro.adapt' has no attribute {name!r}")

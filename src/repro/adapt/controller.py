@@ -109,45 +109,115 @@ def plan_for_model(model, mesh, tc, *, budget_ratio: float = 0.6,
                        "plan_bytes": sum(r["a2a_bytes"] for r in report)}
 
 
+def _hier_tiers(art, mode):
+    """The artifacts' tiers when the mode actually exchanges over them
+    (None for flat topologies and non-tiered modes like dp_adam)."""
+    tiers = getattr(art, "tiers", None)
+    if mode.tiered and tiers is not None and tiers.intra_axes:
+        return tiers
+    return None
+
+
+def _leaf_payload_nbytes(art, tc, mode, m, i, n_src: int) -> int:
+    """Measured exchange payload bytes for one leaf: encode a real
+    tensor with its plan codec and slice to the ``n_src`` rows that
+    actually cross the exchange tier (all ``n_workers`` rows flat,
+    ``tiers.n_inter`` hierarchical - rows are byte-aligned so the slice
+    is exactly the wire array)."""
+    codec = mode.leaf_codec(tc, i)
+    x = jnp.linspace(-1.0, 1.0, m.numel, dtype=jnp.float32)
+    if isinstance(codec, comm.IdentityCodec):
+        return n_src * m.c * 4
+    if isinstance(codec, comm.BlockwiseCodec):
+        from repro.opt import engine
+        codes2d, _ = engine.quantize_blockwise(x, codec.block)
+        rows = comm.pad_rows(codes2d.reshape(-1)[:m.numel],
+                             art.n_workers)
+        return comm.pack_rows(rows, codec.bits)[:n_src].nbytes
+    key = jax.random.PRNGKey(0)
+    payload, _ = comm.encode_rows(x, codec, art.n_workers, key=key)
+    return payload[:n_src].nbytes
+
+
 def measured_exchange_bytes(art, tc) -> int:
-    """Measured per-device a2a payload bytes: encode a real tensor per
-    leaf with its plan codec and sum the payload ``.nbytes`` - the
-    ground truth ``comm_bytes_per_step`` must match exactly."""
+    """Measured per-device a2a payload bytes on the *exchange tier*:
+    encode a real tensor per leaf with its plan codec and sum the wire
+    array ``.nbytes`` - the ground truth
+    ``comm_bytes_per_step(...)["update_exchange_bytes"]`` must match
+    exactly. On a hierarchical topology only ``tiers.n_inter`` rows per
+    leaf cross the slow tier, and so only those are counted."""
     from repro.dist.modes import get_mode
     from repro.dist.step import _leaf_meta
     mode = get_mode(tc.mode)
+    tiers = _hier_tiers(art, mode)
+    n_src = tiers.n_inter if tiers is not None else art.n_workers
     metas = _leaf_meta(art.layout, art.n_workers)
     leaves = jax.tree_util.tree_leaves(
         metas, is_leaf=lambda x: type(x).__name__ == "LeafMeta")
-    total = 0
+    return sum(_leaf_payload_nbytes(art, tc, mode, m, i, n_src)
+               for i, m in enumerate(leaves))
+
+
+def measured_tier_bytes(art, tc) -> Dict[str, Dict[str, int]]:
+    """Measured per-tier wire bytes from real buffer ``.nbytes`` - the
+    ground-truth counterpart of ``comm_bytes_per_step(...)["tiers"]``.
+
+    inter.update_exchange re-encodes every leaf (see
+    :func:`measured_exchange_bytes`); intra.grad_reduce materializes the
+    fast-tier fp32 gather buffer (``n_intra`` per-worker gradient rows);
+    the broadcast figures encode one real chunk per leaf with the
+    weight-wire codec and scale by the per-tier fan-out of the
+    inter-first gather."""
+    from repro.dist.modes import get_mode
+    from repro.dist.step import _leaf_meta, weight_wire_codec
+    mode = get_mode(tc.mode)
+    tiers = _hier_tiers(art, mode)
+    n_src = tiers.n_inter if tiers is not None else art.n_workers
+    metas = _leaf_meta(art.layout, art.n_workers)
+    leaves = jax.tree_util.tree_leaves(
+        metas, is_leaf=lambda x: type(x).__name__ == "LeafMeta")
+    ex_inter = ex_intra = bc_inter = bc_intra = 0
     for i, m in enumerate(leaves):
-        codec = mode.leaf_codec(tc, i)
-        x = jnp.linspace(-1.0, 1.0, m.numel, dtype=jnp.float32)
-        if isinstance(codec, comm.IdentityCodec):
-            total += art.n_workers * m.c * 4
-        elif isinstance(codec, comm.BlockwiseCodec):
-            from repro.opt import engine
-            codes2d, _ = engine.quantize_blockwise(x, codec.block)
-            rows = comm.pad_rows(codes2d.reshape(-1)[:m.numel],
-                                 art.n_workers)
-            total += comm.pack_rows(rows, codec.bits).nbytes
+        ex_inter += _leaf_payload_nbytes(art, tc, mode, m, i, n_src)
+        if tiers is not None:
+            ex_intra += np.zeros((tiers.n_intra, m.numel),
+                                 np.float32).nbytes
+        wc = weight_wire_codec(tc, m.full_numel)
+        if isinstance(wc, comm.IdentityCodec):
+            p = m.c * 4
         else:
-            key = jax.random.PRNGKey(0)
-            payload, _ = comm.encode_rows(x, codec, art.n_workers,
-                                          key=key)
-            total += payload.nbytes
-    return total
+            payload, _ = comm.encode_rows(
+                jnp.linspace(-1.0, 1.0, m.c, dtype=jnp.float32), wc, 1,
+                key=jax.random.PRNGKey(0))
+            p = payload.nbytes
+        if tiers is not None:
+            bc_inter += tiers.n_inter * p
+            bc_intra += tiers.n_intra * tiers.n_inter * p
+        else:
+            bc_inter += art.n_workers * p
+    return {"inter": {"update_exchange": ex_inter,
+                      "weight_broadcast": bc_inter,
+                      "total": ex_inter + bc_inter},
+            "intra": {"grad_reduce": ex_intra,
+                      "weight_broadcast": bc_intra,
+                      "total": ex_intra + bc_intra}}
 
 
-def verify_accounting(art, tc) -> Dict[str, int]:
-    """Assert registry accounting == measured payload bytes; returns
-    both figures (raises AssertionError on mismatch)."""
+def verify_accounting(art, tc) -> Dict[str, Any]:
+    """Assert registry accounting == measured payload bytes - the a2a
+    headline figure and every per-tier entry; returns both figure sets
+    (raises AssertionError on mismatch)."""
     from repro.train.loop import comm_bytes_per_step
-    accounted = comm_bytes_per_step(art, tc)["update_exchange_bytes"]
+    booked = comm_bytes_per_step(art, tc)
+    accounted = booked["update_exchange_bytes"]
     measured = measured_exchange_bytes(art, tc)
     assert accounted == measured, \
         f"accounted {accounted} != measured {measured} a2a bytes"
-    return {"accounted": accounted, "measured": measured}
+    mtiers = measured_tier_bytes(art, tc)
+    assert booked["tiers"] == mtiers, \
+        f"accounted tiers {booked['tiers']} != measured {mtiers}"
+    return {"accounted": accounted, "measured": measured,
+            "tiers": mtiers}
 
 
 class AdaptiveController:
@@ -185,6 +255,53 @@ class AdaptiveController:
         self.plan_log: List[Dict[str, Any]] = []
         self.replans = 0
         self._record_plan(0)
+        self._sync_ckpt_extra()
+
+    def _sync_ckpt_extra(self):
+        """Mirror the live plan + EMA into ``session.ckpt_extra`` so
+        every checkpoint (sync or async) carries them; ``resume`` reads
+        them back and replans from the same history an uninterrupted
+        run would have had."""
+        self.session.ckpt_extra["bit_plan"] = (
+            list(self.tc.bit_plan) if self.tc.bit_plan else None)
+        self.session.ckpt_extra["adapt_ema"] = (
+            self.ema.state_dict() if self.ema.count > 0.0 else None)
+
+    def resume(self, ckpt_dir: Optional[str] = None) -> int:
+        """Restore an adaptive run: read the checkpointed bit plan +
+        stats EMA from the manifest extra, rebuild artifacts for the
+        restored plan (a plan the run compiled before warm-loads from
+        the AOT cache - ``bit_plan`` rides in ``TrainConfig``, the
+        cache key), swap them in, then restore state/stream position
+        via ``TrainSession.resume``. Returns the restored step (0 when
+        no checkpoint exists). Must precede ``run()``."""
+        from repro.checkpoint import store
+        d = ckpt_dir or self.session.cfg.ckpt_dir
+        if not d:
+            raise ValueError("no checkpoint directory given")
+        found = store.latest_step(d)
+        if found is None:
+            return 0
+        extra = store.read_extra(d, step=found)
+        plan = extra.get("bit_plan")
+        plan = tuple(plan) if plan else None
+        if plan != self.tc.bit_plan:
+            self.tc = dataclasses.replace(self.tc, bit_plan=plan)
+            self.art = self._make_step(self.model, self.mesh, self.tc)
+            self.session.swap_artifacts(self.art)
+            self._record_plan(found)
+        if extra.get("adapt_ema"):
+            self.ema = S.StatsEMA.from_state(extra["adapt_ema"])
+        out = self.session.resume(d, step=found)
+        # Re-solve at the resume boundary: when the checkpoint sits on a
+        # replan boundary, an uninterrupted run replans right after the
+        # window harvest the checkpoint carries - the restored plan is
+        # the segment BEFORE that boundary. Mid-window checkpoints
+        # re-solve from the same EMA and land on the same plan (no-op),
+        # so this keeps boundary-aligned resumes bit-identical.
+        self.replan()
+        self._sync_ckpt_extra()
+        return out
 
     def _record_plan(self, step: int):
         entry = {"step": step, "bit_plan": self.tc.bit_plan,
@@ -207,6 +324,7 @@ class AdaptiveController:
         self.session.swap_artifacts(self.art)
         self.replans += 1
         self._record_plan(self.session.step)
+        self._sync_ckpt_extra()
         self._log(f"  replan @{self.session.step}: "
                   f"{self.plan_log[-1]['comm']['update_exchange_bytes']} "
                   f"a2a B/step")
@@ -222,6 +340,7 @@ class AdaptiveController:
             done += k
             for _, rows in self.session.harvest_stats():
                 self.ema.update(rows)
+            self._sync_ckpt_extra()
             if done < steps:
                 self.replan()
         return self.session.history

@@ -112,3 +112,26 @@ class StatsEMA:
         out = self._debiased().copy()
         out[:, 0] = np.maximum(out[:, 0], self._amax_peak)
         return out
+
+    def state_dict(self) -> dict:
+        """JSON-serializable full state - rides in the checkpoint
+        manifest ``extra`` so an adaptive resume replans from the same
+        history it would have had uninterrupted."""
+        return {"decay": self.decay,
+                "ema": self._ema.tolist(),
+                "amax_peak": self._amax_peak.tolist(),
+                "weight": self._weight}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "StatsEMA":
+        ema = np.asarray(state["ema"], np.float64)
+        if ema.ndim != 2 or ema.shape[1] != N_FIELDS:
+            raise ValueError(f"bad EMA state shape {ema.shape}")
+        obj = cls(ema.shape[0], float(state["decay"]))
+        obj._ema = ema
+        obj._amax_peak = np.asarray(state["amax_peak"], np.float64)
+        if obj._amax_peak.shape != (ema.shape[0],):
+            raise ValueError(
+                f"bad amax_peak shape {obj._amax_peak.shape}")
+        obj._weight = float(state["weight"])
+        return obj

@@ -2,9 +2,11 @@
 and the parameter-server train/serve steps.
 
   sharding     - parameter layout: model-axis shard dims + worker chunking
+  topology     - pluggable link-tier topologies (flat / hierarchical)
   collectives  - the quantized wire (packed uint8 exchange / broadcast)
   modes        - per-mode optimizer plugins (qadam/dp_adam/terngrad/ef_sgd)
   step         - make_train_step: the mode-independent worker-step template
   serve        - make_serve_step: the sharded serving step
 """
-from repro.dist import sharding, collectives, modes, step, serve  # noqa: F401
+from repro.dist import (sharding, topology, collectives, modes, step,  # noqa: F401
+                        serve)

@@ -105,6 +105,55 @@ def exchange_decode(payload_rows: jax.Array, scale, codec: comm.Codec,
     return comm.decode_rows(recv, scales, codec, c, backend=backend)
 
 
+# ---------------------------------------------------------------------------
+# per-tier channels (repro.dist.topology): flat tiers route through the
+# legacy collectives above op-for-op; hierarchical tiers keep the slow
+# (inter/node) links to n_inter rows per leaf
+# ---------------------------------------------------------------------------
+
+def exchange_rows_tiered(rows: jax.Array, tiers) -> jax.Array:
+    """Tier-aware ``exchange_rows``. Flat: all_to_all over every worker
+    axis, unchanged. Hierarchical: gradients were intra-reduced first,
+    so every device of a node holds bit-identical rows - each device
+    slices the ``n_inter`` rows destined for its intra position
+    (``w = node * n_intra + intra``, row-major) and all-to-alls them
+    across the node axes only. The slow tier moves ``n_inter`` rows per
+    leaf instead of ``n_workers``; the result's row ``k`` is node
+    ``k``'s row for this worker's chunk."""
+    if not tiers.intra_axes:
+        return exchange_rows(rows, tiers.inter_axes, tiers.inter_sizes)
+    j = worker_index(tiers.intra_axes, tiers.intra_sizes)
+    grid = rows.reshape((tiers.n_inter, tiers.n_intra) + rows.shape[1:])
+    mine = jax.lax.dynamic_index_in_dim(grid, j, axis=1, keepdims=False)
+    return exchange_rows(mine, tiers.inter_axes, tiers.inter_sizes)
+
+
+def exchange_decode_tiered(payload_rows: jax.Array, scale,
+                           codec: comm.Codec, c: int, tiers,
+                           *, backend: Optional[str] = None) -> jax.Array:
+    """Tier-aware ``exchange_decode``: payload all-to-all over the
+    exchange (inter) tier, source scales gathered over the same tier.
+    Returns ``(n_inter, c)`` dequantized rows - one row per exchange
+    peer (``n_inter == n_workers`` on a flat topology)."""
+    assert payload_rows.dtype == jnp.uint8
+    recv = exchange_rows_tiered(payload_rows, tiers)
+    scales = gather_rows(scale, tiers.inter_axes)
+    return comm.decode_rows(recv, scales, codec, c, backend=backend)
+
+
+def gather_rows_tiered(x: jax.Array, tiers) -> jax.Array:
+    """Tier-aware ``gather_rows``: (n_workers, *x.shape) in flat worker
+    order. Hierarchical topologies gather the inter (node) axes first -
+    only ``n_inter`` rows cross the slow tier - then fan the stacked
+    rows out within each node over the fast links."""
+    if not tiers.intra_axes:
+        return gather_rows(x, tiers.inter_axes)
+    r = gather_rows(x, tiers.inter_axes)     # (n_inter, ...)
+    r = gather_rows(r, tiers.intra_axes)     # (n_intra, n_inter, ...)
+    r = jnp.swapaxes(r, 0, 1)                # flat (node, intra) order
+    return r.reshape((tiers.n_inter * tiers.n_intra,) + x.shape)
+
+
 def broadcast_decode(payload: jax.Array, scale, codec: comm.Codec, c: int,
                      axes: Sequence[str],
                      *, backend: Optional[str] = None) -> jax.Array:
@@ -114,6 +163,20 @@ def broadcast_decode(payload: jax.Array, scale, codec: comm.Codec, c: int,
     assert payload.dtype == jnp.uint8
     rows = gather_rows(payload, axes)
     scales = gather_rows(scale, axes)
+    return comm.decode_rows(rows, scales, codec, c, backend=backend)
+
+
+def broadcast_decode_tiered(payload: jax.Array, scale, codec: comm.Codec,
+                            c: int, tiers,
+                            *, backend: Optional[str] = None) -> jax.Array:
+    """Tier-aware ``broadcast_decode``: hierarchical topologies run the
+    payload/scale gathers inter-first (``gather_rows_tiered``), so each
+    chunk's packed codes cross the slow tier once per node instead of
+    once per device. Returns ``(n_workers, c)`` dequantized rows in flat
+    worker order either way."""
+    assert payload.dtype == jnp.uint8
+    rows = gather_rows_tiered(payload, tiers)
+    scales = gather_rows_tiered(scale, tiers)
     return comm.decode_rows(rows, scales, codec, c, backend=backend)
 
 

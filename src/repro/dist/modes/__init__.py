@@ -9,7 +9,10 @@ Adding a mode = one new module exporting a ``SPEC`` (see
 from repro.dist.modes.base import (  # noqa: F401
     ModeSpec,
     WorkerCtx,
+    blockwise_exchange,
+    ctx_tiers,
     identity_codec,
+    tier_grad_mean,
     worker_mean,
 )
 from repro.dist.modes import (qadam, dp_adam, terngrad, ef_sgd, efadam,

@@ -20,15 +20,15 @@ the first replan.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro import comm
 from repro.adapt import stats as astats
 from repro.dist import collectives as C
 from repro.dist.modes import qadam
-from repro.dist.modes.base import ModeSpec, WorkerCtx, worker_mean
-from repro.opt import engine, grids
+from repro.dist.modes.base import (ModeSpec, WorkerCtx, blockwise_exchange,
+                                   ctx_tiers, tier_grad_mean, worker_mean)
+from repro.opt import engine
 
 
 def leaf_codec(tc, idx: int) -> comm.Codec:
@@ -37,50 +37,27 @@ def leaf_codec(tc, idx: int) -> comm.Codec:
     return qadam.wire_codec(tc.grad_k if tc.grad_k is not None else 6)
 
 
-def _blockwise_exchange(de, e, codec, meta, ctx):
-    """ef_sgd's wire (sign codes + per-block scale gather), EF residual
-    against this worker's own dequantized codes."""
-    n = de.shape[0]
-    block = codec.block
-    codes2d, scale_b = engine.quantize_blockwise(de, block,
-                                                 backend=ctx.backend)
-    deq_own = grids.blockwise_dequantize(codes2d, scale_b).reshape(-1)[:n]
-    e2 = de - deq_own
-    rows = comm.pad_rows(codes2d.reshape(-1)[:n], ctx.n_workers)
-    payload = comm.pack_rows(rows, codec.bits)
-    codes_rows = comm.unpack_rows(
-        C.exchange_rows(payload, ctx.worker_axes, ctx.wsizes),
-        codec.bits, meta.c)
-    scales = C.gather_rows(scale_b, ctx.worker_axes)       # (nw, nb)
-    elem = jnp.repeat(scales, block, axis=1)               # (nw, nb*block)
-    c = meta.c
-    total = ctx.n_workers * c
-    if elem.shape[1] < total:
-        elem = jnp.pad(elem, ((0, 0), (0, total - elem.shape[1])))
-    w = C.worker_index(ctx.worker_axes, ctx.wsizes)
-    scale_cols = jax.lax.dynamic_slice(
-        elem, (jnp.int32(0), w * c), (ctx.n_workers, c))
-    recv = codes_rows.astype(jnp.float32) * scale_cols
-    return recv, e2
-
-
 def make_updater(tc, ctx: WorkerCtx):
+    tiers = ctx_tiers(ctx)
+
     def upd(g, m, v, e, chunk, meta, a_t, th_t, key, idx):
         codec = leaf_codec(tc, idx)
+        g = tier_grad_mean(g, tiers)
         m2, v2, de = engine.adam_ef_moments(
             g, m, v, e, a_t, tc.beta, th_t, tc.eps, backend=ctx.backend)
         if isinstance(codec, comm.BlockwiseCodec):
-            recv, e2 = _blockwise_exchange(de, e, codec, meta, ctx)
+            recv, e2 = blockwise_exchange(de, codec, meta, ctx, tiers)
         else:
             scale = codec.compute_scale(de)
             payload, e2 = comm.encode_rows_ef(de, scale, codec,
                                               ctx.n_workers,
                                               backend=ctx.backend)
-            recv = C.exchange_decode(payload, scale, codec, meta.c,
-                                     ctx.worker_axes, ctx.wsizes,
-                                     backend=ctx.backend)
+            recv = C.exchange_decode_tiered(payload, scale, codec, meta.c,
+                                            tiers, backend=ctx.backend)
         if not tc.error_feedback:
             e2 = jnp.zeros_like(e)
+        # stats see the node-mean gradient under a hierarchical
+        # topology - the quantity the wire actually carries.
         row = astats.local_stats(de, g)
         return chunk - worker_mean(recv), m2, v2, e2, row
     return upd

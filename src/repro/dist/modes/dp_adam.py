@@ -1,5 +1,10 @@
 """fp32 data-parallel Adam baseline: gradients all-reduced over the
-worker axes, moments chunk-sharded (ZeRO-style), no quantized wire."""
+worker axes, moments chunk-sharded (ZeRO-style), no quantized wire.
+
+Declared ``tiered=False``: the psum below is one reduction over all
+worker axes, which the runtime already executes hierarchically on any
+physical topology - an explicit intra-tier pre-mean would double-count
+node contributions. Accounting keeps its f32 wire on the inter tier."""
 from __future__ import annotations
 
 import jax
@@ -28,4 +33,5 @@ def make_updater(tc, ctx: WorkerCtx):
 
 
 SPEC = ModeSpec(name="dp_adam", chunk_sharded_moments=True,
-                make_updater=make_updater, wire_codec=identity_codec)
+                make_updater=make_updater, wire_codec=identity_codec,
+                tiered=False)

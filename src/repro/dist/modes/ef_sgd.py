@@ -1,14 +1,13 @@
 """Blockwise-EF momentum SGD baseline (Zheng et al. '19): sign codes with
-per-256-block mean-|.| scales, error feedback on the residual."""
+per-256-block mean-|.| scales, error feedback on the residual. The wire
+itself (shared with the adaptive 2-bit lanes) lives in
+``base.blockwise_exchange`` and is topology-aware: hierarchical tiers
+ship one sign-code row per node."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro import comm
-from repro.dist import collectives as C
-from repro.dist.modes.base import ModeSpec, WorkerCtx, worker_mean
-from repro.opt import engine, grids
+from repro.dist.modes.base import (ModeSpec, WorkerCtx, blockwise_exchange,
+                                   ctx_tiers, tier_grad_mean, worker_mean)
 
 BLOCK = 256
 
@@ -19,33 +18,13 @@ def wire_codec(grad_k=None) -> comm.Codec:
 
 def make_updater(tc, ctx: WorkerCtx):
     codec = wire_codec()
+    tiers = ctx_tiers(ctx)
 
     def upd(g, m, v, e, chunk, meta, a_t, th_t, key, idx):
+        g = tier_grad_mean(g, tiers)
         m2 = tc.beta * m + g
         de = a_t * m2 + e
-        n = de.shape[0]
-        codes2d, scale_b = engine.quantize_blockwise(de, BLOCK,
-                                                     backend=ctx.backend)
-        deq_own = grids.blockwise_dequantize(codes2d,
-                                             scale_b).reshape(-1)[:n]
-        e2 = de - deq_own
-        # wire: codec-packed 2-bit sign rows; the per-block scale
-        # side-channel is gathered whole and column-sliced below.
-        rows = comm.pad_rows(codes2d.reshape(-1)[:n], ctx.n_workers)
-        payload = comm.pack_rows(rows, codec.bits)
-        codes_rows = comm.unpack_rows(
-            C.exchange_rows(payload, ctx.worker_axes, ctx.wsizes),
-            codec.bits, meta.c)
-        scales = C.gather_rows(scale_b, ctx.worker_axes)   # (nw, nb)
-        elem = jnp.repeat(scales, BLOCK, axis=1)           # (nw, nb*BLOCK)
-        c = meta.c
-        total = ctx.n_workers * c
-        if elem.shape[1] < total:
-            elem = jnp.pad(elem, ((0, 0), (0, total - elem.shape[1])))
-        w = C.worker_index(ctx.worker_axes, ctx.wsizes)
-        scale_cols = jax.lax.dynamic_slice(
-            elem, (jnp.int32(0), w * c), (ctx.n_workers, c))
-        recv = codes_rows.astype(jnp.float32) * scale_cols
+        recv, e2 = blockwise_exchange(de, codec, meta, ctx, tiers)
         return chunk - worker_mean(recv), m2, v, e2
     return upd
 

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 from repro import comm
 from repro.dist import collectives as C
 from repro.dist import sharding as SH
-from repro.dist.modes.base import ModeSpec, WorkerCtx, worker_mean
+from repro.dist.modes.base import (ModeSpec, WorkerCtx, ctx_tiers,
+                                   tier_grad_mean, worker_mean)
 from repro.opt import engine, grids
 
 
@@ -22,13 +23,17 @@ def wire_codec(grad_k=None) -> comm.Codec:
 
 def make_updater(tc, ctx: WorkerCtx):
     codec = wire_codec(tc.grad_k)
+    tiers = ctx_tiers(ctx)
 
     def upd(g, m, v, e, chunk, meta, a_t, th_t, key, idx):
+        # hierarchical: fp node-mean gradient first; the quantized
+        # exchange below then ships one row per node over the slow tier.
+        g = tier_grad_mean(g, tiers)
         m2, v2, de = engine.adam_ef_moments(
             g, m, v, e, a_t, tc.beta, th_t, tc.eps, backend=ctx.backend)
         if tc.grad_k is None:
             rows = SH.flatten_pad(de, ctx.n_workers)
-            recv = C.exchange_rows(rows, ctx.worker_axes, ctx.wsizes)
+            recv = C.exchange_rows_tiered(rows, tiers)
             e2 = jnp.zeros_like(e)
         else:
             scale = grids.amax_scale(de)
@@ -37,9 +42,8 @@ def make_updater(tc, ctx: WorkerCtx):
                                               backend=ctx.backend)
             if not tc.error_feedback:
                 e2 = jnp.zeros_like(e)
-            recv = C.exchange_decode(payload, scale, codec, meta.c,
-                                     ctx.worker_axes, ctx.wsizes,
-                                     backend=ctx.backend)
+            recv = C.exchange_decode_tiered(payload, scale, codec, meta.c,
+                                            tiers, backend=ctx.backend)
         return chunk - worker_mean(recv), m2, v2, e2
     return upd
 

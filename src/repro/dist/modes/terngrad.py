@@ -4,7 +4,8 @@ from __future__ import annotations
 
 from repro import comm
 from repro.dist import collectives as C
-from repro.dist.modes.base import ModeSpec, WorkerCtx, worker_mean
+from repro.dist.modes.base import (ModeSpec, WorkerCtx, ctx_tiers,
+                                   tier_grad_mean, worker_mean)
 
 
 def wire_codec(grad_k=None) -> comm.Codec:
@@ -13,13 +14,17 @@ def wire_codec(grad_k=None) -> comm.Codec:
 
 def make_updater(tc, ctx: WorkerCtx):
     codec = wire_codec()
+    tiers = ctx_tiers(ctx)
 
     def upd(g, m, v, e, chunk, meta, a_t, th_t, key, idx):
+        # hierarchical: the step template folds the PRNG key on the
+        # *inter* worker index, so a node's devices draw identical
+        # stochastic ternary codes for the node-mean gradient.
+        g = tier_grad_mean(g, tiers)
         payload, scale = comm.encode_rows(g, codec, ctx.n_workers,
                                           key=key, backend=ctx.backend)
-        recv = C.exchange_decode(payload, scale, codec, meta.c,
-                                 ctx.worker_axes, ctx.wsizes,
-                                 backend=ctx.backend)
+        recv = C.exchange_decode_tiered(payload, scale, codec, meta.c,
+                                        tiers, backend=ctx.backend)
         return chunk - a_t * worker_mean(recv), m, v, e
     return upd
 

@@ -199,3 +199,36 @@ def worker_info(mesh, worker_axes) -> Tuple[Tuple[str, ...],
     axes = tuple(a for a in worker_axes if a in ms)
     sizes = tuple(ms[a] for a in axes)
     return axes, sizes, int(np.prod(sizes)) if sizes else 1
+
+
+def split_worker_axes(worker_axes, wsizes, n_outer: int, n_inner: int):
+    """Plan the per-tier layout of a hierarchical topology: split the
+    worker axes into an (outer, inner) tier pair - the prefix whose
+    sizes multiply to ``n_outer`` and the suffix multiplying to
+    ``n_inner``. Worker ``w = outer_idx * n_inner + inner_idx`` in the
+    flat row-major order of ``collectives.worker_index``, so chunk
+    ownership and state layout are unchanged by the split.
+
+    Raises when the factorization doesn't land on an axis boundary
+    (e.g. asking for 2 nodes out of a single 8-wide ``data`` axis) -
+    reshape the mesh so the node tier has its own axis instead.
+    """
+    axes = tuple(worker_axes)
+    sizes = tuple(int(s) for s in wsizes)
+    total = int(np.prod(sizes)) if sizes else 1
+    if int(n_outer) * int(n_inner) != total:
+        raise ValueError(
+            f"topology ({n_outer} nodes x {n_inner} devices) needs "
+            f"{n_outer * n_inner} workers but the mesh's worker axes "
+            f"{dict(zip(axes, sizes))} give {total}")
+    prod, k = 1, 0
+    while k < len(axes) and prod < n_outer:
+        prod *= sizes[k]
+        k += 1
+    if prod != n_outer:
+        raise ValueError(
+            f"cannot split worker axes {dict(zip(axes, sizes))} into "
+            f"({n_outer} x {n_inner}) tiers on an axis boundary; give "
+            f"the node tier its own mesh axis (e.g. pod={n_outer}, "
+            f"data={n_inner})")
+    return axes[:k], sizes[:k], axes[k:], sizes[k:]

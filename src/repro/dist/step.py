@@ -48,6 +48,7 @@ from repro.adapt import stats as astats
 from repro.core.qadam import QAdamConfig, _alpha_t, _theta_t
 from repro.dist import sharding as SH
 from repro.dist import collectives as C
+from repro.dist import topology as T
 from repro.dist.modes import WorkerCtx, get_mode
 from repro.models.layers import ShardCtx
 
@@ -83,6 +84,12 @@ class TrainConfig:
     # the backward. <= 0 restores the single whole-tree fence.
     exchange_bucket_bytes: int = 4 << 20
     worker_axes: Tuple[str, ...] = ("pod", "data")
+    # link-tier topology (repro.dist.topology): FlatTopology keeps
+    # today's single-tier wire; HierarchicalTopology(nodes, d) runs an
+    # fp intra-node gradient reduce and keeps the quantized+EF exchange
+    # on the node axis only. A frozen dataclass field, so every
+    # topology is its own jit/AOT cache key like any config change.
+    topology: T.Topology = T.FlatTopology()
     batch_dim_shardable: bool = True
     model_gather_quant: Optional[int] = None  # int8 FSDP gather bits
     fused_kernels: Optional[bool] = None      # None = auto (TPU only)
@@ -138,6 +145,9 @@ class StepArtifacts(NamedTuple):
     worker_axes: Tuple[str, ...]
     mesh: Any
     config: Any
+    # resolved topology (topology.Tiers); None on artifacts built by
+    # older callers - accounting treats that as flat.
+    tiers: Any = None
 
 
 def weight_wire_codec(tc, full_numel: int) -> comm.Codec:
@@ -150,19 +160,22 @@ def weight_wire_codec(tc, full_numel: int) -> comm.Codec:
     return comm.uniform_wire_codec(tc.weight_k, tc.weight_absolute)
 
 
-def _exchange_buckets(metas_flat, mode, tc, n_workers):
+def _exchange_buckets(metas_flat, mode, tc, n_workers, tiers=None):
     """Group consecutive leaves into wire buckets of about
     ``tc.exchange_bucket_bytes`` payload each. Each bucket gets its own
     gradient fence, so the first bucket's quantized exchange can be
     scheduled while the backward of later leaves is still running;
     ``<= 0`` collapses to one whole-tree bucket (the pre-bucketing
-    end-of-step barrier)."""
+    end-of-step barrier). Bucket fill counts the payload that actually
+    crosses the exchange (inter) tier, so hierarchical topologies pack
+    ~``devices_per_node`` times more leaves per dispatch."""
     if tc.exchange_bucket_bytes <= 0 or len(metas_flat) <= 1:
         return [list(range(len(metas_flat)))]
     buckets, cur, cur_bytes = [], [], 0
     for i, meta in enumerate(metas_flat):
         cur.append(i)
-        cur_bytes += mode.leaf_wire_nbytes(tc, i, meta.c, n_workers)
+        cur_bytes += mode.leaf_tier_nbytes(tc, i, meta.c, meta.numel,
+                                           n_workers, tiers)["inter"]
         if cur_bytes >= tc.exchange_bucket_bytes:
             buckets.append(cur)
             cur, cur_bytes = [], 0
@@ -332,9 +345,14 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
     qcfg = QAdamConfig(alpha=tc.alpha, beta=tc.beta, theta=tc.theta,
                        eps=tc.eps, schedule=tc.schedule)
     mode = get_mode(tc.mode)
+    topo = tc.topology if tc.topology is not None else T.FlatTopology()
+    # non-tiered modes (dp_adam) run flat collectives on any topology;
+    # resolving their tiers flat keeps the updater/accounting honest.
+    tiers = topo.tiers(worker_axes, wsizes) if mode.tiered \
+        else T.flat_tiers(worker_axes, wsizes)
     updater = mode.make_updater(tc, WorkerCtx(
         worker_axes=worker_axes, wsizes=wsizes, n_workers=n_workers,
-        backend=tc.engine_backend))
+        backend=tc.engine_backend, tiers=tiers))
 
     treedef = jax.tree_util.tree_structure(layout._leaves)
     metas_flat = treedef.flatten_up_to(metas)
@@ -342,7 +360,7 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
         raise ValueError(
             f"bit_plan has {len(tc.bit_plan)} specs for "
             f"{len(metas_flat)} state leaves")
-    buckets = _exchange_buckets(metas_flat, mode, tc, n_workers)
+    buckets = _exchange_buckets(metas_flat, mode, tc, n_workers, tiers)
     chunk_sharded = mode.chunk_sharded_moments  # moments chunked vs full-shard
     state_spec = P(*worker_axes, MODEL_AXIS, None) if model_in_mesh \
         else P(*worker_axes, None, None)
@@ -394,14 +412,14 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
         residual is exactly zero)."""
         codec = weight_wire_codec(tc, meta.full_numel)
         if isinstance(codec, comm.IdentityCodec):
-            rows = C.gather_rows(chunk, worker_axes)
+            rows = C.gather_rows_tiered(chunk, tiers)
             return SH.unflatten_chunked(rows, meta.shp), es
         send = chunk if es is None else chunk + es
         scale = codec.compute_scale(send)
         payload, e_new = comm.encode_rows_ef(send, scale, codec, 1,
                                              backend=tc.engine_backend)
-        rows = C.broadcast_decode(payload[0], scale, codec, meta.c,
-                                  worker_axes, backend=tc.engine_backend)
+        rows = C.broadcast_decode_tiered(payload[0], scale, codec, meta.c,
+                                         tiers, backend=tc.engine_backend)
         return (SH.unflatten_chunked(rows, meta.shp),
                 e_new if es is not None else None)
 
@@ -491,9 +509,13 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
             for i, g in zip(bucket, fenced):
                 gs[i] = g
 
-        # 3+4. per-worker engine update + per-mode quantized exchange
+        # 3+4. per-worker engine update + per-mode quantized exchange.
+        # The PRNG folds the *inter-tier* worker index: flat tiers make
+        # it the plain flat worker id (unchanged), hierarchical tiers
+        # fold the node id only, so a node's devices draw identical
+        # stochastic codes for their identical node-mean gradients.
         base = jax.random.fold_in(jax.random.PRNGKey(tc.seed), t)
-        widx = C.worker_index(worker_axes, wsizes)
+        widx = C.worker_index(tiers.inter_axes, tiers.inter_sizes)
         new_m, new_mm, new_vv, new_ee, stat_rows = [], [], [], [], []
         for i, meta in enumerate(metas_flat):
             key = jax.random.fold_in(jax.random.fold_in(base, i), widx)
@@ -545,7 +567,8 @@ def make_train_step(model, mesh, tc: TrainConfig) -> StepArtifacts:
 
     return StepArtifacts(init_state=init_state, step_fn=step_fn,
                          layout=layout, n_workers=n_workers,
-                         worker_axes=worker_axes, mesh=mesh, config=tc)
+                         worker_axes=worker_axes, mesh=mesh, config=tc,
+                         tiers=tiers)
 
 
 def __getattr__(name):

@@ -1,0 +1,130 @@
+"""Pluggable parameter-server topologies.
+
+The paper's Algorithms 2+3 assume one flat worker<->server wire, but a
+real cluster is hierarchical: fast intra-node links (NVLink/ICI), slow
+inter-node links (DCN/ethernet). The quantized exchange only pays for
+itself on the slow tier, so a :class:`HierarchicalTopology` splits the
+worker axes into two tiers:
+
+  * **intra tier** (fast): gradients are fp all-reduced (deterministic
+    pairwise tree mean - see ``modes.base.tier_grad_mean``) across the
+    devices of one node *before* the optimizer update, so every device
+    in a node computes bit-identical moments, EF residuals and codes.
+  * **inter tier** (slow): the quantized+EF update exchange and the
+    leading leg of the weight broadcast run across nodes only. Each
+    device all-to-alls the ``n_inter`` payload rows for its intra
+    position instead of all ``n_workers`` rows, so inter-tier wire
+    bytes drop by exactly ``1/devices_per_node`` and the EF residual
+    effectively lives at node-leader granularity (replicated across
+    the node's devices).
+
+:class:`FlatTopology` resolves to a single tier spanning all worker
+axes; every tiered code path then degenerates to the legacy flat
+collectives op-for-op, so flat results are bit-identical to the
+pre-topology code.
+
+Resolution contract (:meth:`HierarchicalTopology.tiers`): the node
+(inter) tier must be a *prefix* of the worker axes whose sizes multiply
+to ``nodes``, the remaining suffix to ``devices_per_node`` - e.g. a
+``(pod=2, data=4)`` mesh with ``worker_axes=("pod", "data")`` maps to
+2 nodes of 4 devices. Splitting in the middle of one axis is rejected;
+reshape the mesh instead (``--topology 2x4`` in ``repro.launch.train``
+builds the matching mesh for you).
+
+Topology objects are small frozen dataclasses: they hash and digest
+(``perf.aot._canon``) like any other ``TrainConfig`` field, so every
+topology is its own jit/AOT cache key.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+from repro.dist import sharding as SH
+
+
+@dataclasses.dataclass(frozen=True)
+class Tiers:
+    """A topology resolved against concrete worker axes: the inter
+    (exchange) tier and the intra (fp-reduce) tier, both in mesh axis
+    order. ``intra_axes == ()`` means flat (single-tier) operation."""
+    inter_axes: Tuple[str, ...]
+    inter_sizes: Tuple[int, ...]
+    intra_axes: Tuple[str, ...]
+    intra_sizes: Tuple[int, ...]
+
+    @property
+    def n_inter(self) -> int:
+        n = 1
+        for s in self.inter_sizes:
+            n *= int(s)
+        return n
+
+    @property
+    def n_intra(self) -> int:
+        n = 1
+        for s in self.intra_sizes:
+            n *= int(s)
+        return n
+
+    @property
+    def hierarchical(self) -> bool:
+        return bool(self.intra_axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """How the worker axes map onto link tiers. Subclasses resolve
+    themselves against the mesh's worker axes via :meth:`tiers`."""
+
+    def tiers(self, worker_axes: Sequence[str],
+              wsizes: Sequence[int]) -> Tiers:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatTopology(Topology):
+    """Today's behavior: one tier, every collective spans all worker
+    axes. Bit-identical to the pre-topology code by construction."""
+
+    def tiers(self, worker_axes, wsizes) -> Tiers:
+        return Tiers(inter_axes=tuple(worker_axes),
+                     inter_sizes=tuple(int(s) for s in wsizes),
+                     intra_axes=(), intra_sizes=())
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalTopology(Topology):
+    """``nodes`` groups of ``devices_per_node`` workers: fp intra-node
+    gradient reduce, quantized+EF exchange across nodes only."""
+    nodes: int
+    devices_per_node: int
+
+    def tiers(self, worker_axes, wsizes) -> Tiers:
+        inter_a, inter_s, intra_a, intra_s = SH.split_worker_axes(
+            worker_axes, wsizes, self.nodes, self.devices_per_node)
+        return Tiers(inter_axes=inter_a, inter_sizes=inter_s,
+                     intra_axes=intra_a, intra_sizes=intra_s)
+
+
+def flat_tiers(worker_axes: Sequence[str],
+               wsizes: Sequence[int]) -> Tiers:
+    """Single-tier resolution - what ``None``/absent topologies mean."""
+    return FlatTopology().tiers(worker_axes, wsizes)
+
+
+def parse_topology(spec) -> Topology:
+    """CLI/str form: ``"flat"``/``None`` -> FlatTopology, ``"NxD"``
+    (e.g. ``"2x4"``) -> HierarchicalTopology(N, D). Topology instances
+    pass through."""
+    if spec is None or isinstance(spec, Topology):
+        return spec if isinstance(spec, Topology) else FlatTopology()
+    s = str(spec).strip().lower()
+    if s in ("", "flat"):
+        return FlatTopology()
+    parts = s.split("x")
+    if len(parts) == 2 and all(p.isdigit() for p in parts):
+        return HierarchicalTopology(nodes=int(parts[0]),
+                                    devices_per_node=int(parts[1]))
+    raise ValueError(f"bad topology spec {spec!r}: expected 'flat' or "
+                     f"'NxD' (e.g. '2x4')")

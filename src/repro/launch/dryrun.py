@@ -1,6 +1,3 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-
 """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
 combination against placeholder devices and extract the roofline terms.
 
@@ -8,9 +5,12 @@ combination against placeholder devices and extract the roofline terms.
   PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.jsonl
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
 
-The XLA_FLAGS line above MUST run before any jax import: jax locks the
-device count at first initialization. (setdefault so the test harness can
-run a reduced 8-device pass.)
+``main()`` sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before any jax import (jax locks the device count at first init;
+setdefault so the test harness can run a reduced 8-device pass). The
+flag is scoped to the CLI entry: merely *importing* this module - e.g.
+for ``parse_collectives`` - must not pin the process to 512 placeholder
+devices.
 
 Per combination this records:
   * compiled.memory_analysis()  - bytes per device (proves it fits)
@@ -26,6 +26,7 @@ Per combination this records:
 import argparse
 import dataclasses
 import json
+import os
 import re
 import time
 from typing import Dict, Optional
@@ -424,6 +425,10 @@ def build_and_compile(arch: str, shape_name: str, multi_pod: bool,
 
 
 def main():
+    # must precede the first jax import (the lazy imports inside the
+    # compile helpers): jax locks the device count at first init
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -14,7 +14,15 @@ data-parallel Adam baseline; `--no-ef` ablates error feedback;
 `--steps` is the TOTAL step budget: with `--resume`, the session restores
 the newest checkpoint under `--ckpt-dir` (step counter, optimizer/PRNG
 state, and data-stream position - bit-identical to never stopping) and
-runs only the remaining steps.
+runs only the remaining steps. `--adaptive --resume` additionally
+restores the checkpointed bit plan and stats EMA.
+
+`--topology NxD` exchanges quantized updates hierarchically
+(``repro.dist.topology``): fp gradients reduce over the fast intra-node
+tier first, the quantized+EF exchange crosses only the node tier.
+`--multihost` initializes ``jax.distributed`` for one-process-per-host
+runs; CI simulates hosts with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 from __future__ import annotations
 
@@ -52,8 +60,18 @@ def _run_adaptive(args, model, mesh, tc):
     print(f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
           f"workers={ctl.art.n_workers}")
     try:
-        ctl.run(args.steps)
-        windows = math.ceil(args.steps / args.replan_every)
+        start = ctl.resume(args.ckpt_dir) if args.resume else 0
+        if start:
+            print(f"resumed from step {start} ({args.ckpt_dir}), "
+                  f"plan restored: "
+                  f"{_plan_summary(ctl.tc.bit_plan) if ctl.tc.bit_plan else 'initial log grid'}")
+        remaining = args.steps - start
+        if remaining <= 0:
+            print(f"nothing to do: checkpoint at step {start} >= "
+                  f"--steps {args.steps}")
+            return
+        ctl.run(remaining)
+        windows = math.ceil(remaining / args.replan_every)
         if args.adapt_verify:
             # every plan already passed accounted == measured (see
             # AdaptiveController verify); here: the only host syncs are
@@ -109,6 +127,24 @@ def main():
     ap.add_argument("--data", type=int, default=1, help="data axis size")
     ap.add_argument("--model", type=int, default=1, help="model axis size")
     ap.add_argument("--pod", type=int, default=0, help="pod axis size")
+    ap.add_argument("--topology", default=None, metavar="SPEC",
+                    help="worker exchange topology: 'flat' (default) or "
+                         "'NxD' = HierarchicalTopology(nodes=N, "
+                         "devices_per_node=D); NxD implies --pod N "
+                         "--data D when those are left default")
+    ap.add_argument("--multihost", action="store_true",
+                    help="initialize jax.distributed before device "
+                         "queries (one process per host)")
+    ap.add_argument("--coordinator", default=None, metavar="ADDR",
+                    help="--multihost coordinator address host:port")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="--multihost total process count")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="--multihost rank of this process")
+    ap.add_argument("--tune-buckets", action="store_true",
+                    help="sweep exchange_bucket_bytes against measured "
+                         "step time before training and run with the "
+                         "winner (perf.autotune.tune_exchange_buckets)")
     ap.add_argument("--alpha", type=float, default=1e-3)
     ap.add_argument("--beta", type=float, default=0.99)
     ap.add_argument("--theta", type=float, default=0.999)
@@ -166,9 +202,14 @@ def main():
     if args.resume and not args.ckpt_dir:
         ap.error("--resume requires --ckpt-dir")
     args.adaptive = args.adaptive or args.mode == "adaptive"
-    if args.adaptive and args.resume:
-        ap.error("--adaptive does not support --resume yet (the bit "
-                 "plan is not checkpointed)")
+    if args.multihost:
+        if not (args.coordinator and args.num_processes is not None
+                and args.process_id is not None):
+            ap.error("--multihost requires --coordinator, "
+                     "--num-processes and --process-id")
+        import jax
+        jax.distributed.initialize(args.coordinator, args.num_processes,
+                                   args.process_id)
 
     import jax
     from repro import perf
@@ -184,6 +225,18 @@ def main():
     from repro.train.session import SessionConfig, TrainSession
     from repro.data.pipeline import batch_for_model
 
+    from repro.dist import topology as T
+    topo = T.parse_topology(args.topology)
+    if isinstance(topo, T.HierarchicalTopology):
+        n, d = topo.nodes, topo.devices_per_node
+        if args.pod == 0 and args.data == 1:
+            # NxD picks the mesh too: pod = node axis, data = intra axis
+            args.pod, args.data = n, d
+        elif max(args.pod, 1) * args.data != n * d:
+            ap.error(f"--topology {args.topology} needs {n * d} workers "
+                     f"but --pod/--data give "
+                     f"{max(args.pod, 1) * args.data}")
+
     cfg = get_config(args.arch, smoke=args.smoke)
     model = Model(cfg)
     mesh = make_local_mesh(data=args.data, model=args.model, pod=args.pod)
@@ -196,7 +249,19 @@ def main():
         model_gather_quant=args.model_gather_quant or None,
         error_feedback=not args.no_ef,
         worker_axes=("pod", "data"),
+        topology=topo,
         mode="adaptive" if args.adaptive else args.mode)
+    if args.tune_buckets:
+        from repro.perf.autotune import tune_exchange_buckets
+        # probe batch from a fresh same-seed generator: the training
+        # stream position is untouched
+        probe = next(batch_for_model(cfg, args.seq, args.global_batch,
+                                     seed=args.seed))
+        rep = tune_exchange_buckets(model, mesh, tc, probe)
+        tc = rep["config"]
+        print(f"tuned exchange bucket: {rep['best']} B "
+              f"(speedup {rep['speedup']:.2f}x vs default "
+              f"{rep['default']} B)")
     if args.adaptive:
         _run_adaptive(args, model, mesh, tc)
         return
@@ -206,6 +271,9 @@ def main():
           f"workers={art.n_workers}")
     print(f"comm/device/step: exchange={comm['update_exchange_bytes']/1e6:.2f}MB "
           f"broadcast={comm['weight_broadcast_bytes']/1e6:.2f}MB")
+    if comm["tiers"]["intra"]["total"]:
+        print(f"  per tier: inter={comm['tiers']['inter']['total']/1e6:.2f}MB "
+              f"intra={comm['tiers']['intra']['total']/1e6:.2f}MB")
 
     batches = batch_for_model(cfg, args.seq, args.global_batch,
                               seed=args.seed)

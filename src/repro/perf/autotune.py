@@ -14,6 +14,7 @@ benchmarks), not flipped mid-run.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Optional, Sequence
 
@@ -27,6 +28,10 @@ from repro.opt import engine
 
 CANDIDATE_ROWS = (8, 16, 32, 64)
 CANDIDATE_COLS = (128, 256, 512)
+# exchange-bucket sweep: whole-tree fence, 1 MiB, the 4 MiB default
+# heritage, 16 MiB near-whole-tree. The config's current value always
+# joins the sweep.
+CANDIDATE_BUCKETS = (0, 1 << 20, 4 << 20, 16 << 20)
 
 
 def _time_roundtrip(spec: str, numel: int, iters: int) -> float:
@@ -114,3 +119,50 @@ def tune_mm_cols(*, m: int = 8, k: int = 1 << 10, n: int = 1 << 10,
     if install:
         MM.set_mm_cols(best, backend=key)
     return {"timings_s": timings, "best": best, "installed": install}
+
+
+def tune_exchange_buckets(model, mesh, tc, batch, *,
+                          candidates: Sequence[int] = CANDIDATE_BUCKETS,
+                          steps: int = 3, warmup: int = 1) -> dict:
+    """Sweep ``TrainConfig.exchange_bucket_bytes`` against measured
+    train-step time for this (model, mesh, topology) - the
+    backward/exchange overlap knob the per-bucket gradient fences in
+    ``dist.step`` expose. How much overlap pays depends on the wire: a
+    hierarchical topology ships ~1/devices_per_node the inter-tier
+    payload per leaf, so its best bucket is usually smaller than flat's.
+
+    Unlike the kernel tuners there is no process-global knob to
+    install: the bucket size is part of ``TrainConfig`` (its own jit/AOT
+    cache key), so the winner is returned as ``"config"`` for the
+    caller to build artifacts from. ``tc.exchange_bucket_bytes`` always
+    joins the sweep, so ``"speedup"`` (default time / best time) is
+    >= 1.0 by construction.
+
+    Returns ``{"timings_s": {bucket: seconds}, "best": bucket,
+    "default": tc.exchange_bucket_bytes, "speedup": float,
+    "config": TrainConfig}``.
+    """
+    from repro.dist.step import make_train_step
+
+    cands = list(dict.fromkeys(
+        tuple(int(b) for b in candidates) + (tc.exchange_bucket_bytes,)))
+    timings = {}
+    for b in cands:
+        tcb = dataclasses.replace(tc, exchange_bucket_bytes=b)
+        art = make_train_step(model, mesh, tcb)
+        state = art.init_state(jax.random.PRNGKey(0))
+        step = jax.jit(art.step_fn, donate_argnums=(0,))
+        for _ in range(max(1, warmup)):
+            state, metrics = step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, metrics = step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        timings[b] = (time.perf_counter() - t0) / steps
+        del state
+    best = min(timings, key=timings.get)
+    return {"timings_s": timings, "best": best,
+            "default": tc.exchange_bucket_bytes,
+            "speedup": timings[tc.exchange_bucket_bytes] / timings[best],
+            "config": dataclasses.replace(tc, exchange_bucket_bytes=best)}

@@ -51,19 +51,52 @@ def comm_bytes_per_step(art: StepArtifacts, tc: TrainConfig) -> Dict[str, float]
 
     Per-leaf wire plans (``tc.bit_plan``, the adaptive mode) are exact
     too: the sum goes through ``ModeSpec.leaf_wire_nbytes`` in
-    metas_flat order, so the figure tracks every replan."""
+    metas_flat order, so the figure tracks every replan.
+
+    Topologies (``repro.dist.topology``): the returned ``"tiers"`` dict
+    splits every figure by link tier. Flat topologies report all bytes
+    on ``inter`` (one tier is all there is); a hierarchical topology
+    moves only ``n_inter`` payload rows per leaf across the slow tier
+    (``update_exchange_bytes`` shrinks by exactly ``1/n_intra``) and
+    adds the fast-tier fp gradient pre-reduce under
+    ``tiers.intra.grad_reduce``. ``adapt.controller.measured_tier_bytes``
+    asserts each figure against the actual payload ``.nbytes``."""
     mode = get_mode(tc.mode)
     metas = _leaf_meta(art.layout, art.n_workers)
     leaves = jax.tree.leaves(
         metas, is_leaf=lambda x: type(x).__name__ == "LeafMeta")
     shard_numel = sum(int(np.prod(m.shp)) for m in leaves)
-    a2a = sum(mode.leaf_wire_nbytes(tc, i, m.c, art.n_workers)
-              for i, m in enumerate(leaves))
-    bcast = sum(
-        art.n_workers * weight_wire_codec(tc, m.full_numel).payload_nbytes(m.c)
-        for m in leaves)
-    return {"update_exchange_bytes": a2a, "weight_broadcast_bytes": bcast,
-            "total_bytes": a2a + bcast, "shard_params": shard_numel}
+    tiers = getattr(art, "tiers", None)
+    hier = (mode.tiered and tiers is not None
+            and getattr(tiers, "intra_axes", ()))
+    ex_inter = ex_intra = 0
+    for i, m in enumerate(leaves):
+        d = mode.leaf_tier_nbytes(tc, i, m.c, m.numel, art.n_workers, tiers)
+        ex_inter += d["inter"]
+        ex_intra += d["intra"]
+    bc_inter = bc_intra = 0
+    for m in leaves:
+        p = weight_wire_codec(tc, m.full_numel).payload_nbytes(m.c)
+        if hier:
+            # inter-first gather: each chunk's payload crosses the slow
+            # tier once per node, then fans out within the node.
+            bc_inter += tiers.n_inter * p
+            bc_intra += tiers.n_intra * tiers.n_inter * p
+        else:
+            bc_inter += art.n_workers * p
+    bcast = bc_inter + bc_intra
+    return {"update_exchange_bytes": ex_inter,
+            "weight_broadcast_bytes": bcast,
+            "total_bytes": ex_inter + ex_intra + bcast,
+            "shard_params": shard_numel,
+            "tiers": {
+                "inter": {"update_exchange": ex_inter,
+                          "weight_broadcast": bc_inter,
+                          "total": ex_inter + bc_inter},
+                "intra": {"grad_reduce": ex_intra,
+                          "weight_broadcast": bc_intra,
+                          "total": ex_intra + bc_intra},
+            }}
 
 
 def train(art: StepArtifacts, tc: TrainConfig, batches: Iterator,

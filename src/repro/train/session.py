@@ -373,6 +373,11 @@ class TrainSession:
         self._steps_by_k: Dict[Any, Callable] = {}
         self._step = 0                     # optimizer steps executed
         self._prefetch: Optional[_Prefetcher] = None
+        # extra JSON-safe entries merged into every checkpoint manifest
+        # next to "batches_consumed" - the adaptive controller keeps the
+        # live bit plan + stats-EMA here so --adaptive --resume restores
+        # the plan (see repro.adapt.controller.AdaptiveController.resume)
+        self.ckpt_extra: Dict[str, Any] = {}
         self.history: List[Dict[str, Any]] = []
         # compilations / aot_loads account for every step executable this
         # session built vs loaded ready-made (tests assert a warm AOT dir
@@ -594,7 +599,7 @@ class TrainSession:
         # dispatch, the snapshot stays valid for the writer
         snap = jax.tree.map(jnp.copy, self._state)
         tree = self._program.to_ckpt(snap)
-        extra = {"batches_consumed": self._step}
+        extra = {"batches_consumed": self._step, **self.ckpt_extra}
         self.stats["ckpts"] += 1
         if self.cfg.ckpt_async:
             self._ensure_writer()

@@ -1,0 +1,260 @@
+"""Hierarchical topology correctness on 8 simulated devices (2 nodes x
+4 devices/node).
+
+Three claims, train_equiv_single.py methodology:
+
+1. **Two-level semantics** - HierarchicalTopology(2, 4) with per-node
+   batches must match a sequential two-worker Algorithm 2+3 reference:
+   the intra-node fp mean turns each node into one logical worker, so
+   the 8-device run is the 2-worker parameter server with node
+   gradients. Checked for qadam AND efadam (server EF on the broadcast),
+   including the EF residual carry (worker-side ``e``, server-side
+   ``es``).
+2. **Node-leader EF granularity** - within a node every device carries
+   a bitwise-identical ``e`` residual (they all see the node-mean
+   gradient).
+3. **Flat degeneracy** - with batches identical within each node, the
+   hierarchical run is bitwise identical to the flat run on the same
+   mesh (the intra mean of identical gradients is exact), and the
+   per-tier byte accounting matches measured payload ``.nbytes`` with
+   inter-tier bytes exactly 1/devices_per_node of flat.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.dirname(__file__))
+from common import tiny_config, make_batch, unchunk_params
+
+from repro import comm
+from repro.adapt.controller import verify_accounting
+from repro.core.qadam import QAdamConfig, qadam, apply_updates
+from repro.dist import topology as T
+from repro.dist.step import make_train_step, TrainConfig, _leaf_meta
+from repro.models.model import Model
+from repro.train.loop import comm_bytes_per_step
+
+cfg = tiny_config("yi-6b")
+model = Model(cfg)
+mesh = jax.sharding.Mesh(
+    np.array(jax.devices()[:8]).reshape(2, 4, 1), ("pod", "data", "model"))
+
+B_w, S = 2, 32
+b0 = make_batch(cfg, B_w, S, seed=3)
+b1 = make_batch(cfg, B_w, S, seed=4)
+# node 0 (workers 0-3) trains on b0, node 1 (workers 4-7) on b1; flat
+# worker order is w = node * 4 + intra_index
+batch = jax.tree.map(lambda a, b: jnp.concatenate([a] * 4 + [b] * 4, axis=0),
+                     b0, b1)
+
+HIER = T.HierarchicalTopology(nodes=2, devices_per_node=4)
+
+
+def train_cfg(mode, topo):
+    return TrainConfig(alpha=1e-2, beta=0.9, theta=0.9, schedule="sqrt",
+                       grad_k=4, weight_k=7, weight_absolute=True,
+                       worker_axes=("pod", "data"), mode=mode,
+                       topology=topo)
+
+
+def run_steps(tc, n):
+    art = make_train_step(model, mesh, tc)
+    state = art.init_state(jax.random.PRNGKey(0))
+    step = jax.jit(art.step_fn)
+    losses = []
+    for _ in range(n):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    return art, state, losses
+
+
+def unchunk_full(arr, layout, metas):
+    """Model-shaped tree from a FULL-shard state leaf (m/v/e: every
+    worker holds the whole leaf): take worker (0, 0)'s copy and undo the
+    (Nm, X) model-chunk stacking exactly like ``unchunk_params``."""
+    def rebuild(a, leaf, dim, stk, meta):
+        a = np.asarray(a)[0, 0]          # (Nm, X), any worker's copy
+        shards = [a[mi].reshape(-1)[: int(np.prod(meta.shp))]
+                  .reshape(meta.shp) for mi in range(a.shape[0])]
+        off = 1 if stk else 0
+        if dim == -2:
+            return np.concatenate(shards, axis=off)
+        if dim >= 0:
+            return np.concatenate(shards, axis=dim + off)
+        return shards[0]
+    return jax.tree.map(rebuild, arr, layout._leaves, layout.dims,
+                        layout.stacked, metas)
+
+
+def max_abs_err(tree_a, tree_b):
+    err = jax.tree.map(
+        lambda a, b: float(np.max(np.abs(np.asarray(a, np.float32)
+                                         - np.asarray(b, np.float32)))),
+        tree_a, tree_b)
+    return max(jax.tree.leaves(err))
+
+
+def assert_node_leader_residuals(state):
+    """Within each node every device's EF residual is bitwise identical
+    (they all quantize the same node-mean delta)."""
+    for e in jax.tree.leaves(state["e"]):
+        e = np.asarray(e)                 # (2, 4, Nm, X)
+        for i in range(e.shape[0]):
+            for j in range(1, e.shape[1]):
+                np.testing.assert_array_equal(e[i, j], e[i, 0])
+
+
+N_STEPS = 4
+
+
+def lfn(which):
+    wb = b0 if which == 0 else b1
+    def f(p):
+        ls, nt = model.loss(p, wb)
+        return ls / nt, ls / nt
+    return f
+
+
+# ---------------------------------------------------------------------------
+# 1a. qadam: hierarchical 2x4 vs sequential two-worker Algorithm 2+3
+# ---------------------------------------------------------------------------
+tc_q = train_cfg("qadam", HIER)
+art_q, state_q, losses_q = run_steps(tc_q, N_STEPS)
+metas = _leaf_meta(art_q.layout, art_q.n_workers)
+
+params = model.init(jax.random.PRNGKey(0))
+opt = qadam(QAdamConfig(alpha=1e-2, beta=0.9, theta=0.9, schedule="sqrt",
+                        grad_q="log:4", weight_q="uniform:7",
+                        weight_q_min_numel=2 ** 14))
+o0, o1 = opt.init(params), opt.init(params)
+
+
+# ONE jit program, like the distributed step (see train_equiv_single.py:
+# eager-vs-jit float rounding flips quantizer-boundary codes).
+@jax.jit
+def ref_step(params, o0, o1):
+    fp = opt.forward_params(params, o0)
+    (l0, _), g0 = jax.value_and_grad(lfn(0), has_aux=True)(fp)
+    (l1, _), g1 = jax.value_and_grad(lfn(1), has_aux=True)(fp)
+    u0, o0 = opt.update(g0, o0, params)
+    u1, o1 = opt.update(g1, o1, params)
+    upd = jax.tree.map(lambda a, b: (a + b) / 2, u0, u1)
+    return apply_updates(params, upd), o0, o1, (l0 + l1) / 2
+
+
+ref_losses = []
+for _ in range(N_STEPS):
+    params, o0, o1, lmean = ref_step(params, o0, o1)
+    ref_losses.append(float(lmean))
+
+print("qadam hier losses:", losses_q)
+print("qadam ref  losses:", ref_losses)
+np.testing.assert_allclose(losses_q, ref_losses, rtol=2e-4, atol=1e-5)
+
+rec = unchunk_params(state_q["master"], art_q.layout, metas, (2, 4), 1)
+err = max_abs_err(rec, params)
+print("qadam max param err vs two-worker reference:", err)
+assert err < 5e-5, err
+
+assert_node_leader_residuals(state_q)
+# node 0's residual == reference worker 0's Algorithm-1 residual
+e_rec = unchunk_full(state_q["e"], art_q.layout, metas)
+err_e = max_abs_err(e_rec, o0.e)
+print("qadam max worker-EF err vs reference:", err_e)
+assert err_e < 5e-5, err_e
+
+# ---------------------------------------------------------------------------
+# 1b. efadam: adds server-side EF on the weight broadcast
+# ---------------------------------------------------------------------------
+tc_e = train_cfg("efadam", HIER)
+art_e, state_e, losses_e = run_steps(tc_e, N_STEPS)
+
+wcodec = comm.uniform_wire_codec(7, absolute=True)
+MIN_N = tc_e.weight_q_min_numel
+params2 = model.init(jax.random.PRNGKey(0))
+opt2 = qadam(QAdamConfig(alpha=1e-2, beta=0.9, theta=0.9, schedule="sqrt",
+                         grad_q="log:4", weight_q=None))
+p0, p1 = opt2.init(params2), opt2.init(params2)
+es_ref = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                      params2)
+
+
+@jax.jit
+def ref2_step(params, o0, o1, es):
+    def bcast(p, e):
+        if p.size < MIN_N:
+            return p, e
+        send = p.astype(jnp.float32) + e
+        scale = jnp.float32(0.5)
+        deq = wcodec.dequantize(wcodec.quantize(send, scale), scale)
+        return deq.astype(p.dtype), send - deq
+
+    out = jax.tree.map(bcast, params, es)
+    is_pair = lambda x: isinstance(x, tuple)
+    fp = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+    es2 = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+    (l0, _), g0 = jax.value_and_grad(lfn(0), has_aux=True)(fp)
+    (l1, _), g1 = jax.value_and_grad(lfn(1), has_aux=True)(fp)
+    u0, o0 = opt2.update(g0, o0, params)
+    u1, o1 = opt2.update(g1, o1, params)
+    upd = jax.tree.map(lambda a, b: (a + b) / 2, u0, u1)
+    return apply_updates(params, upd), o0, o1, es2, (l0 + l1) / 2
+
+
+ref_losses2 = []
+for _ in range(N_STEPS):
+    params2, p0, p1, es_ref, lmean2 = ref2_step(params2, p0, p1, es_ref)
+    ref_losses2.append(float(lmean2))
+
+print("efadam hier losses:", losses_e)
+print("efadam ref  losses:", ref_losses2)
+np.testing.assert_allclose(losses_e, ref_losses2, rtol=2e-4, atol=1e-5)
+
+rec2 = unchunk_params(state_e["master"], art_e.layout, metas, (2, 4), 1)
+err2 = max_abs_err(rec2, params2)
+print("efadam max param err vs two-worker reference:", err2)
+assert err2 < 5e-5, err2
+
+assert_node_leader_residuals(state_e)
+es_rec = unchunk_params(state_e["es"], art_e.layout, metas, (2, 4), 1)
+err_es = max_abs_err(es_rec, es_ref)
+print("efadam max server-EF err vs reference:", err_es)
+assert err_es < 5e-5, err_es
+
+# ---------------------------------------------------------------------------
+# 2. flat degeneracy: identical batches within each node => hierarchical
+#    bitwise == flat on the same mesh (and explicit FlatTopology bitwise
+#    == the TrainConfig default)
+# ---------------------------------------------------------------------------
+tc_flat = train_cfg("qadam", T.FlatTopology())
+art_f, state_f, losses_f = run_steps(tc_flat, 2)
+_, state_d, losses_d = run_steps(train_cfg("qadam", None), 2)
+assert losses_f == losses_d, (losses_f, losses_d)
+jax.tree.map(np.testing.assert_array_equal, state_f, state_d)
+
+art_h, state_h, losses_h = run_steps(tc_q, 2)
+assert losses_h == losses_f, (losses_h, losses_f)
+for k in ("master", "m", "v", "e"):
+    jax.tree.map(np.testing.assert_array_equal, state_h[k], state_f[k])
+print("flat degeneracy bitwise OK")
+
+# ---------------------------------------------------------------------------
+# 3. per-tier byte accounting: registry == measured, inter == flat / 4
+# ---------------------------------------------------------------------------
+for art_i, tc_i in ((art_q, tc_q), (art_e, tc_e), (art_f, tc_flat)):
+    verify_accounting(art_i, tc_i)
+flat_bytes = comm_bytes_per_step(art_f, tc_flat)
+hier_bytes = comm_bytes_per_step(art_q, tc_q)
+fi = flat_bytes["tiers"]["inter"]["total"]
+hi = hier_bytes["tiers"]["inter"]["total"]
+assert fi == 4 * hi, (fi, hi)
+assert flat_bytes["tiers"]["intra"]["total"] == 0
+assert hier_bytes["update_exchange_bytes"] * 4 \
+    == flat_bytes["update_exchange_bytes"]
+print(f"accounting OK: inter {hi} (hier) vs {fi} (flat) = 1/4")
+
+print("OK")

@@ -1,0 +1,273 @@
+"""repro.dist.topology: tier resolution, cache keying, per-tier byte
+accounting, and the exchange-bucket tuner.
+
+Everything here runs on ONE device (tier resolution and byte accounting
+are mesh-free; the in-process train runs use a (1, 1) mesh). The real
+2-node x 4-device hierarchical equivalence - bit-exact vs a sequential
+two-worker Algorithm 2+3 reference - runs in a subprocess with 8
+simulated devices (``tests/dist_scripts/topology_equiv.py``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import comm
+from repro.dist import topology as T
+from repro.dist.modes import get_mode
+from repro.dist.step import TrainConfig
+from repro.perf import aot
+
+
+class TestTiersResolution:
+    def test_flat_spans_all_axes(self):
+        t = T.FlatTopology().tiers(("pod", "data"), (2, 4))
+        assert t.inter_axes == ("pod", "data")
+        assert t.inter_sizes == (2, 4)
+        assert t.intra_axes == () and t.intra_sizes == ()
+        assert t.n_inter == 8 and t.n_intra == 1
+        assert not t.hierarchical
+
+    def test_hierarchical_prefix_split(self):
+        t = T.HierarchicalTopology(2, 4).tiers(("pod", "data"), (2, 4))
+        assert t.inter_axes == ("pod",) and t.inter_sizes == (2,)
+        assert t.intra_axes == ("data",) and t.intra_sizes == (4,)
+        assert t.n_inter == 2 and t.n_intra == 4
+        assert t.hierarchical
+
+    def test_multi_axis_inter_tier(self):
+        t = T.HierarchicalTopology(8, 2).tiers(
+            ("a", "b", "c"), (2, 4, 2))
+        assert t.inter_axes == ("a", "b")
+        assert t.intra_axes == ("c",)
+
+    def test_single_axis_split_rejected(self):
+        # nodes*devices matches the total but not an axis boundary
+        with pytest.raises(ValueError, match="axis boundary"):
+            T.HierarchicalTopology(2, 4).tiers(("data",), (8,))
+
+    def test_wrong_total_rejected(self):
+        with pytest.raises(ValueError):
+            T.HierarchicalTopology(2, 4).tiers(("pod", "data"), (2, 2))
+
+    def test_degenerate_one_by_one(self):
+        t = T.HierarchicalTopology(1, 1).tiers(("data",), (1,))
+        assert t.n_inter == 1 and t.n_intra == 1
+
+    def test_flat_tiers_helper(self):
+        assert T.flat_tiers(("data",), (4,)) \
+            == T.FlatTopology().tiers(("data",), (4,))
+
+    def test_parse(self):
+        assert T.parse_topology(None) == T.FlatTopology()
+        assert T.parse_topology("flat") == T.FlatTopology()
+        assert T.parse_topology("2x4") == T.HierarchicalTopology(2, 4)
+        topo = T.HierarchicalTopology(3, 2)
+        assert T.parse_topology(topo) is topo
+        with pytest.raises(ValueError, match="topology spec"):
+            T.parse_topology("2x4x2")
+        with pytest.raises(ValueError, match="topology spec"):
+            T.parse_topology("fast")
+
+
+class TestCacheKeys:
+    """The topology must key every compile cache: TrainConfig hash (jit
+    static arg / session step token) and the AOT facts digest."""
+
+    def test_trainconfig_hash_distinct(self):
+        flat = TrainConfig(topology=T.FlatTopology())
+        hier = TrainConfig(topology=T.HierarchicalTopology(2, 4))
+        hier2 = TrainConfig(topology=T.HierarchicalTopology(4, 2))
+        assert len({hash(flat), hash(hier), hash(hier2)}) == 3
+        assert flat != hier and hier != hier2
+
+    def test_aot_digest_distinct(self):
+        digs = {aot.digest(TrainConfig(topology=t)) for t in (
+            T.FlatTopology(),
+            T.HierarchicalTopology(2, 4),
+            T.HierarchicalTopology(4, 2))}
+        assert len(digs) == 3
+
+    def test_default_equals_explicit_flat(self):
+        # the default field value IS FlatTopology: no spurious recompile
+        assert TrainConfig() == TrainConfig(topology=T.FlatTopology())
+
+
+def _sliced_payload_nbytes(spec, numel, n_workers, n_src):
+    """Ground truth for one leaf: encode a real tensor, keep the n_src
+    rows that cross the exchange tier."""
+    codec = comm.get_codec(spec)
+    x = jnp.linspace(-1.0, 1.0, numel, dtype=jnp.float32)
+    if isinstance(codec, comm.BlockwiseCodec):
+        from repro.opt import engine
+        codes2d, _ = engine.quantize_blockwise(x, codec.block)
+        rows = comm.pad_rows(codes2d.reshape(-1)[:numel], n_workers)
+        return comm.pack_rows(rows, codec.bits)[:n_src].nbytes
+    payload, _ = comm.encode_rows(x, codec, n_workers,
+                                  key=jax.random.PRNGKey(0))
+    return payload[:n_src].nbytes
+
+
+class TestLeafTierBytes:
+    """Registry accounting == encoded payload bytes at every lane
+    width, for flat and hierarchical tiers - all mesh-free."""
+
+    HIER = T.Tiers(inter_axes=("pod",), inter_sizes=(2,),
+                   intra_axes=("data",), intra_sizes=(4,))
+    FLAT = T.flat_tiers(("pod", "data"), (2, 4))
+    NUMEL, N_WORKERS = 8 * 97, 8   # c = 97: padding in play
+
+    def _plan_tc(self, specs):
+        return TrainConfig(mode="adaptive", worker_axes=("pod", "data"),
+                           bit_plan=tuple(specs))
+
+    @pytest.mark.parametrize("spec", sorted(
+        __import__("repro.adapt.allocate", fromlist=["WIDTH_SPECS"])
+        .WIDTH_SPECS.values()))
+    def test_every_lane_width(self, spec):
+        mode = get_mode("adaptive")
+        tc = self._plan_tc([spec])
+        c = self.NUMEL // self.N_WORKERS
+        for tiers, n_src in ((self.FLAT, self.N_WORKERS),
+                             (self.HIER, 2)):
+            d = mode.leaf_tier_nbytes(tc, 0, c, self.NUMEL,
+                                      self.N_WORKERS, tiers)
+            want = _sliced_payload_nbytes(spec, self.NUMEL,
+                                          self.N_WORKERS, n_src)
+            assert d["inter"] == want, (spec, tiers, d, want)
+        assert mode.leaf_tier_nbytes(
+            tc, 0, c, self.NUMEL, self.N_WORKERS, self.HIER)["intra"] \
+            == 4 * self.NUMEL * 4
+
+    def test_flat_matches_legacy_wire_nbytes(self):
+        mode = get_mode("qadam")
+        tc = TrainConfig(grad_k=6)
+        d = mode.leaf_tier_nbytes(tc, 0, 128, 1024, 8, self.FLAT)
+        assert d == {"inter": mode.leaf_wire_nbytes(tc, 0, 128, 8),
+                     "intra": 0}
+        assert mode.leaf_tier_nbytes(tc, 0, 128, 1024, 8, None) == d
+
+    def test_untiered_mode_ignores_hierarchy(self):
+        mode = get_mode("dp_adam")
+        assert not mode.tiered
+        tc = TrainConfig(mode="dp_adam")
+        d = mode.leaf_tier_nbytes(tc, 0, 128, 1024, 8, self.HIER)
+        assert d["intra"] == 0
+        assert d["inter"] == mode.leaf_wire_nbytes(tc, 0, 128, 8)
+
+    def test_hier_inter_is_exact_fraction(self):
+        mode = get_mode("qadam")
+        tc = TrainConfig(grad_k=6)
+        flat = mode.leaf_tier_nbytes(tc, 0, 128, 1024, 8, self.FLAT)
+        hier = mode.leaf_tier_nbytes(tc, 0, 128, 1024, 8, self.HIER)
+        assert flat["inter"] == 4 * hier["inter"]
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    from repro.configs import get_config
+    from repro.models.model import Model
+    model = Model(get_config("yi-6b", smoke=True))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    return model, mesh
+
+
+def _batches(model, seed=0):
+    k = jax.random.PRNGKey(seed)
+    v = model.cfg.vocab_size
+    while True:
+        k, s = jax.random.split(k)
+        tok = jax.random.randint(s, (2, 16), 0, v)
+        yield {"tokens": tok, "targets": tok}
+
+
+def _batch(model, seed=0):
+    return next(_batches(model, seed))
+
+
+class TestFlatIdentity:
+    def test_default_vs_explicit_flat_bitwise(self, small_setup):
+        from repro.dist.step import make_train_step
+        model, mesh = small_setup
+        batch = _batch(model)
+        states = []
+        for topo in (T.FlatTopology(), None):
+            tc = TrainConfig(worker_axes=("data",))
+            if topo is not None:
+                tc = dataclasses.replace(tc, topology=topo)
+            art = make_train_step(model, mesh, tc)
+            assert art.tiers is not None and not art.tiers.hierarchical
+            state = art.init_state(jax.random.PRNGKey(0))
+            step = jax.jit(art.step_fn)
+            for _ in range(2):
+                state, metrics = step(state, batch)
+            states.append(jax.tree.map(np.asarray, state))
+        jax.tree.map(np.testing.assert_array_equal, *states)
+
+
+class TestTopologyIsSwapCacheKey:
+    def test_swap_artifacts_recompiles(self, small_setup):
+        """Same mesh geometry, different topology object -> different
+        TrainConfig -> a second compile cache entry (the step token is
+        the config)."""
+        from repro.dist.step import make_train_step
+        from repro.train.session import SessionConfig, TrainSession
+        model, mesh = small_setup
+        tc1 = TrainConfig(worker_axes=("data",))
+        tc2 = dataclasses.replace(
+            tc1, topology=T.HierarchicalTopology(1, 1))
+        art1 = make_train_step(model, mesh, tc1)
+        sess = TrainSession.from_artifacts(
+            art1, _batches(model), SessionConfig(log_every=0),
+            key=jax.random.PRNGKey(0), log=lambda *_: None)
+        try:
+            sess.run(1)
+            assert sess.stats["compilations"] == 1
+            sess.swap_artifacts(make_train_step(model, mesh, tc2))
+            sess.run(1)
+            assert sess.stats["compilations"] == 2
+            # swapping back must hit the cache, not recompile
+            sess.swap_artifacts(art1)
+            sess.run(1)
+            assert sess.stats["compilations"] == 2
+        finally:
+            sess.close()
+
+
+class TestBucketTuner:
+    def test_tune_exchange_buckets(self, small_setup):
+        from repro.perf.autotune import tune_exchange_buckets
+        model, mesh = small_setup
+        tc = TrainConfig(worker_axes=("data",))
+        rep = tune_exchange_buckets(model, mesh, tc, _batch(model),
+                                    candidates=(0, 1 << 20),
+                                    steps=2, warmup=1)
+        assert set(rep) == {"timings_s", "best", "default", "speedup",
+                            "config"}
+        # the incumbent joins the sweep, so tuned can never lose
+        assert rep["speedup"] >= 1.0
+        assert rep["default"] == tc.exchange_bucket_bytes
+        assert rep["best"] in rep["timings_s"]
+        assert rep["config"].exchange_bucket_bytes == rep["best"]
+        assert rep["config"] == dataclasses.replace(
+            tc, exchange_bucket_bytes=rep["best"])
+
+
+@pytest.mark.slow
+class TestHierarchicalEquivalence:
+    def test_topology_equiv_2x4(self):
+        """8 simulated devices: HierarchicalTopology(2, 4) bit-exact vs
+        the sequential two-worker Algorithm 2+3 reference (qadam +
+        efadam, EF residual carry included), flat degeneracy bitwise,
+        per-tier accounting exact."""
+        import os
+        import subprocess
+        import sys
+        scripts = os.path.join(os.path.dirname(__file__), "dist_scripts")
+        p = subprocess.run(
+            [sys.executable, os.path.join(scripts, "topology_equiv.py")],
+            capture_output=True, text=True, timeout=560)
+        assert p.returncode == 0, f"{p.stdout}\n{p.stderr}"
+        assert "OK" in p.stdout, p.stdout
