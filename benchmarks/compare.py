@@ -58,6 +58,13 @@ RATIO_FLOORS = [
     # the tuned exchange bucket must never lose to the config default
     ("dist_hier_inter_bytes", 1 / 0.27),
     ("dist_bucket_tuned", 1.0),
+    # PR-10 headline: paged KV cache at equal cache memory - tokens/s at
+    # least fixed-lane's, >= 2x peak concurrent requests, and p99
+    # time-to-first-token within 1.5x of fixed (it is typically far
+    # better: admission doesn't wait for a whole free lane)
+    ("serve_paged_toks", 1.0),
+    ("serve_paged_concurrency", 2.0),
+    ("serve_ttft_p99", 1 / 1.5),
 ]
 
 

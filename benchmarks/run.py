@@ -206,6 +206,102 @@ def bench_serve(emit, requests=8, slots=4, prompt_len=16, max_new=32,
          params_nbytes(qparams) / params_nbytes(params))
 
 
+def bench_fleet(emit, n_requests=36, seed=0):
+    """The paged-cache headline: an arrival-process-driven request fleet
+    served by a fixed-lane session and a paged session holding EXACTLY
+    the same cache bytes (fixed: 4 slots x 96 tokens; paged: the same
+    384 tokens as 24 x 16-token pages fanned over 12 slots). Mixed
+    prompt lengths and SLO classes arrive on a deterministic Poisson
+    process (seeded numpy, identical schedule for both sessions); the
+    driver submits on schedule and steps the session, exactly like a
+    serving loop. Gated compare.py floors: paged tokens/s >= fixed
+    (``serve_paged_toks``), paged peak concurrency >= 2x fixed
+    (``serve_paged_concurrency``), and paged p99 TTFT within 1.5x of
+    fixed (``serve_ttft_p99``). Smoke-scale on CPU."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.model import Model
+    from repro.serve import Request, ServeSession, cache_nbytes
+
+    cfg = get_config("yi-6b", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(seed)
+    slos = ["interactive", "standard", "batch"]
+    sched = []
+    step_at = 0
+    for i in range(n_requests):
+        step_at += int(rng.poisson(0.8))
+        sched.append((step_at,
+                      [int(t) for t in rng.integers(1, cfg.vocab_size,
+                                                    size=rng.integers(4, 25))],
+                      int(rng.integers(6, 13)), slos[i % 3]))
+
+    max_seq, ps = 96, 16
+    def make(paged):
+        if paged:
+            return ServeSession(model, params, slots=12, max_seq=max_seq,
+                                seed=seed, paged=True, page_size=ps,
+                                num_pages=24, prefill_chunk=8)
+        return ServeSession(model, params, slots=4, max_seq=max_seq,
+                            seed=seed, prefill_chunk=8)
+
+    def run(paged):
+        sess = make(paged)
+        # compile warmup: a long prompt exercises both chunk shapes
+        # (mid + final), the decode step, and the release path; the jits
+        # live on the session instance, so warm the instance we time
+        sess.submit(Request(prompt=list(range(1, 21)), max_new_tokens=3))
+        sess.drain()
+        sess.stats["max_inflight"] = 0
+        sess.ttft_s.clear()
+        sess._steps = 0
+        t0 = time.perf_counter()
+        it = iter(sched)
+        nxt = next(it, None)
+        submitted = []
+        while nxt is not None:
+            while nxt is not None and nxt[0] <= sess._steps:
+                _, prompt, max_new, slo = nxt
+                submitted.append(sess.submit(Request(
+                    prompt=prompt, max_new_tokens=max_new, slo=slo)))
+                nxt = next(it, None)
+            if nxt is None:
+                break
+            if sess.inflight or sess.queued:
+                sess.step()
+            else:
+                sess._steps += 1       # idle tick waiting for an arrival
+        res = sess.drain()             # finish everything in flight
+        dt = time.perf_counter() - t0
+        toks = sum(len(res[h].tokens) for h in submitted)
+        ttfts = sorted(sess.ttft_s.values())
+        p99 = ttfts[min(len(ttfts) - 1, int(len(ttfts) * 0.99))]
+        return dict(dt=dt, toks=toks, tok_s=toks / dt, p99=p99,
+                    peak=sess.stats["max_inflight"],
+                    bytes=cache_nbytes(sess._state["cache"]))
+
+    fx = run(paged=False)
+    pg = run(paged=True)
+    # pool bytes must match the fixed lanes (the page tables are the only
+    # extra, a few hundred int32s)
+    mem_ratio = pg["bytes"] / fx["bytes"]
+
+    emit("serve_fleet_fixed", 1e6 / fx["tok_s"],
+         f"{fx['tok_s']:.1f}tok_s_peak{fx['peak']}_p99ttft"
+         f"{fx['p99'] * 1e3:.0f}ms")
+    emit("serve_paged_toks", 1e6 / pg["tok_s"],
+         f"{pg['tok_s']:.1f}tok_s_{pg['tok_s'] / fx['tok_s']:.2f}x_vs_fixed_"
+         f"mem{mem_ratio:.3f}x", pg["tok_s"] / fx["tok_s"])
+    emit("serve_paged_concurrency", 0.0,
+         f"peak{pg['peak']}_vs_{fx['peak']}_at_equal_cache_mem",
+         pg["peak"] / max(fx["peak"], 1))
+    emit("serve_ttft_p99", pg["p99"] * 1e6,
+         f"{pg['p99'] * 1e3:.0f}ms_vs_{fx['p99'] * 1e3:.0f}ms_fixed",
+         fx["p99"] / max(pg["p99"], 1e-9))
+
+
 def bench_train(emit, steps=24, chunk=8):
     """TrainSession steps/s vs the legacy blocking per-step loop (which
     pulled+converted a batch and forced a `float(loss)` host sync every
@@ -727,6 +823,7 @@ BENCHES = {
     "comm_codec": bench_comm_codec,
     "comm_cost": bench_comm_cost,
     "serve": bench_serve,
+    "fleet": bench_fleet,
     "train": bench_train,
     "startup": bench_startup,
     "table2_cifar100_analogue": bench_table2,
@@ -740,6 +837,7 @@ BENCHES = {
 # named suites: coarse groups for CI jobs / snapshot baselines
 SUITES = {
     "serve": ["serve"],
+    "fleet": ["fleet"],
     "train": ["train"],
     "comm": ["comm_codec", "comm_cost"],
     "kernels": ["kernels", "comm_codec", "comm_cost"],
@@ -750,6 +848,30 @@ SUITES = {
               "fig34_convergence", "comm_cost"],
     "all": list(BENCHES),
 }
+
+
+# suites dominated by host allocation (session scheduling, request
+# bookkeeping, numpy batch staging) where glibc malloc contention shows
+# up as run-to-run noise; tcmalloc flattens it (SNIPPETS 1/2 preload the
+# same library for exactly these loops)
+HOST_ALLOC_HEAVY = {"serve", "fleet", "train", "startup"}
+
+
+def _check_tcmalloc(names) -> None:
+    if not HOST_ALLOC_HEAVY & set(names):
+        return
+    if "tcmalloc" in os.environ.get("LD_PRELOAD", ""):
+        return
+    import glob
+    hits = sorted(glob.glob("/usr/lib/*/libtcmalloc*.so*")
+                  + glob.glob("/usr/lib/libtcmalloc*.so*"))
+    if not hits:
+        return                     # not installed: nothing to suggest
+    print(f"# warning: host-alloc-heavy bench without tcmalloc; numbers "
+          f"may carry malloc noise. Re-run with\n"
+          f"#   LD_PRELOAD={hits[0]} "
+          f"TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000",
+          file=sys.stderr, flush=True)
 
 
 def main() -> None:
@@ -769,6 +891,7 @@ def main() -> None:
         names = args.only.split(",")
     else:
         names = list(BENCHES)
+    _check_tcmalloc(names)
 
     print("name,us_per_call,derived,ratio")
 

@@ -24,6 +24,15 @@ def _cache_specs_for(cfg, b0):
     if cfg.arch_type != "ssm":
         specs["k"] = P(None, b0, MODEL_AXIS, None, None)
         specs["v"] = P(None, b0, MODEL_AXIS, None, None)
+        # paged cache (repro.serve.paged): the physical pool shards its
+        # page axis over the model axis - the sequence sharding's paged
+        # analogue (requires num_pages % model-axis size == 0) - while
+        # every shard holds the full page table (global ids; shards own
+        # the rows that land in their local page range, see
+        # models.model.decode_step's ownership mask)
+        specs["pk"] = P(None, MODEL_AXIS, None, None, None)
+        specs["pv"] = P(None, MODEL_AXIS, None, None, None)
+        specs["ptab"] = P(b0, None)
     if cfg.arch_type in ("ssm", "hybrid"):
         specs["ssm"] = P(None, b0, None, None, None)
         specs["conv"] = P(None, b0, None, None)

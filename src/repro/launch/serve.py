@@ -33,6 +33,20 @@ def main():
                     help="dequantize-then-matmul instead of contracting"
                          " straight from codes (debug/perf comparison)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: one physical page pool + per-slot"
+                         " page tables; concurrency is bounded by tokens in"
+                         " flight, not slots * max_seq")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per page (max_seq must be a multiple)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical pool pages (default: fixed-lane-equal"
+                         " memory, slots * max_seq / page_size)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="chunked-prefill tokens per admission dispatch")
+    ap.add_argument("--slo-mix", action="store_true",
+                    help="tag requests round-robin interactive/standard/"
+                         "batch to exercise priority admission+preemption")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--compile-cache", default=None, metavar="DIR",
                     help="persistent XLA compilation cache dir (default "
@@ -74,13 +88,23 @@ def main():
     session = ServeSession(model, params, slots=args.slots,
                            max_seq=args.max_seq, seed=args.seed,
                            aot_dir=args.aot_dir,
-                           fused_matmul=not args.no_fused_matmul)
+                           fused_matmul=not args.no_fused_matmul,
+                           paged=args.paged, page_size=args.page_size,
+                           num_pages=args.num_pages,
+                           prefill_chunk=args.prefill_chunk)
+    if args.paged:
+        print(f"paged cache: {session.num_pages} pages x "
+              f"{session.page_size} tokens "
+              f"({session.num_pages * session.page_size} tokens vs "
+              f"{args.slots * args.max_seq} fixed-lane)")
     rng = np.random.default_rng(args.seed)
+    slos = ["interactive", "standard", "batch"]
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,
                                              size=args.prompt_len)),
                     max_new_tokens=args.max_new,
-                    temperature=args.temperature)
-            for _ in range(args.requests)]
+                    temperature=args.temperature,
+                    slo=slos[i % 3] if args.slo_mix else "standard")
+            for i in range(args.requests)]
     t0 = time.time()
     handles = [session.submit(r) for r in reqs]
     results = session.drain()

@@ -180,7 +180,7 @@ def attention(q, k, v, *, q_pos, causal=True, window=0, softcap=None,
 
 def decode_attention(q, k_cache, v_cache, *, total_len, window=0,
                      softcap=None, q_pos, ctx: ShardCtx = ShardCtx(),
-                     meta_kv=None):
+                     meta_kv=None, kv_positions=None, extra_valid=None):
     """Single-token decode against a sequence-sharded KV cache.
 
     q: (B,1,H,hd); k_cache/v_cache: (B,S_loc,K,hd) covering global positions
@@ -195,18 +195,30 @@ def decode_attention(q, k_cache, v_cache, *, total_len, window=0,
     meta_kv: optional (mk, mv) learned prefix of shape (B,M,K,hd); always
     visible. Under cp it is counted on shard 0 only (so the logsumexp
     combine sees it exactly once).
+
+    kv_positions: optional (S_loc,) global positions of the cache columns,
+    overriding the contiguous-shard default (paged views carry global
+    positions even when the pool - not the sequence - is what's sharded).
+    extra_valid: optional (B,S_loc) mask ANDed into validity; the paged
+    path uses it for page ownership, so each cp shard counts each page
+    exactly once in the logsumexp combine.
     """
     B, _, H, hd = q.shape
     S_loc, K = k_cache.shape[1], k_cache.shape[2]
     rep = H // K
-    pos0 = ctx.cp_index() * S_loc
-    kv_pos = pos0 + jnp.arange(S_loc)
+    if kv_positions is None:
+        pos0 = ctx.cp_index() * S_loc
+        kv_pos = pos0 + jnp.arange(S_loc)
+    else:
+        kv_pos = kv_positions
     tl = jnp.broadcast_to(jnp.asarray(total_len), (B,))
     qp = jnp.broadcast_to(jnp.asarray(q_pos), (B,))
     valid = kv_pos[None, :] < tl[:, None]                 # (B, S_loc)
     win = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window, jnp.int32),
                     jnp.int32(2 ** 30))
     valid &= kv_pos[None, :] > qp[:, None] - win
+    if extra_valid is not None:
+        valid &= extra_valid
     if meta_kv is not None:
         mk, mv = meta_kv
         M = mk.shape[1]
@@ -235,6 +247,60 @@ def decode_attention(q, k_cache, v_cache, *, total_len, window=0,
         o, z = o_un, denom
     out = o / jnp.maximum(z[..., None], 1e-30)
     return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def chunk_attention(q, k_cache, v_cache, *, q_pos, window=0, softcap=None,
+                    meta_kv=None, kv_positions=None, extra_valid=None,
+                    ctx: ShardCtx = ShardCtx()):
+    """Chunked-prefill attention: Sq in-flight prompt tokens per slot
+    attend to that slot's cache view (which already contains the chunk's
+    own K/V - the model writes before attending, exactly like decode).
+
+    q: (B,Sq,H,hd); k_cache/v_cache: (B,S,K,hd) cache view.
+    q_pos: (B,Sq) global positions of the chunk tokens; causality within
+    the chunk rides on these (kv_pos <= q_pos_i matches decode's
+    kv_pos < total_len with total_len = pos+1). Padding queries past the
+    chunk's valid prefix produce garbage outputs the caller discards.
+
+    Local-path only: chunked admission is a per-slot (B=1) host-scheduled
+    operation; mesh sessions admit by token injection instead.
+    """
+    if ctx.sharded:
+        raise NotImplementedError("chunk_attention is local-only; mesh "
+                                  "sessions admit via token injection")
+    B, Sq, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    rep = H // K
+    kv_pos = jnp.arange(S) if kv_positions is None else kv_positions
+    qp = jnp.asarray(q_pos)                                   # (B,Sq)
+    valid = kv_pos[None, None, :] <= qp[:, :, None]           # (B,Sq,S)
+    win = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window, jnp.int32),
+                    jnp.int32(2 ** 30))
+    valid &= kv_pos[None, None, :] > qp[:, :, None] - win
+    if extra_valid is not None:
+        valid &= extra_valid[:, None, :]
+    if meta_kv is not None:
+        mk, mv = meta_kv
+        M = mk.shape[1]
+        k_cache = jnp.concatenate([mk.astype(k_cache.dtype), k_cache], axis=1)
+        v_cache = jnp.concatenate([mv.astype(v_cache.dtype), v_cache], axis=1)
+        valid = jnp.concatenate(
+            [jnp.ones((B, Sq, M), bool), valid], axis=2)
+        S += M
+    qr = q.reshape(B, Sq, K, rep, hd)
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qr, k_cache,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    scores = _softcap(scores, softcap)
+    mask = valid[:, None, None]                               # (B,1,1,Sq,S)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    l_loc = jnp.max(scores, axis=-1)
+    l_safe = jnp.where(jnp.isfinite(l_loc), l_loc, -1e30)
+    p = jnp.exp(scores - l_safe[..., None])
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkrqs,bskd->bqkrd", p, v_cache.astype(jnp.float32))
+    out = o / jnp.maximum(jnp.moveaxis(denom, -1, 1)[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -549,8 +615,8 @@ def mamba2_mix(params, x, scfg: SSMConfig, d_model: int,
             cp_wire_dtype=jnp.bfloat16
             if scfg.cp_wire_dtype == "bfloat16" else jnp.float32)
         new_ssm = final_state
-    else:
-        # single-token recurrence (S == 1)
+    elif S == 1:
+        # single-token recurrence
         h = decode_cache["ssm"]                  # (B,H,P,N)
         dA = jnp.exp(a_bar[:, 0])                # (B,H)
         Bh = jnp.repeat(Bm[:, 0], H // G, axis=1)   # (B,H,N)
@@ -561,6 +627,14 @@ def mamba2_mix(params, x, scfg: SSMConfig, d_model: int,
         y = jnp.einsum("bhpn,bhn->bhp", h, Ch.astype(jnp.float32))
         y = y[:, None].astype(x.dtype)           # (B,1,H,P)
         new_ssm = h
+    else:
+        # chunked prefill: advance the cached state by a whole chunk of
+        # prompt tokens through the same chunked scan as training, seeded
+        # with the decode state (requires S % scfg.chunk == 0 - sessions
+        # gate chunked admission on that)
+        y, new_ssm = ssd_chunked(
+            xdt, a_bar, Bm, Cm, chunk=scfg.chunk,
+            initial_state=decode_cache["ssm"])
 
     y = y + xs * params["D"].astype(xs.dtype)[None, None, :, None]
     y = y.reshape(B, S, di)

@@ -446,13 +446,32 @@ class Model:
     # ---------------- KV cache (decode) ----------------
     def init_cache(self, batch_size: int, max_seq_local: int,
                    encoder_seq_local: int = 0,
-                   dtype=None) -> Dict[str, Any]:
+                   dtype=None,
+                   page_pool: Optional[Tuple[int, int]] = None
+                   ) -> Dict[str, Any]:
+        """Decode cache. With ``page_pool=(num_pages, page_size)`` the KV
+        lanes become a shared physical page pool ``pk``/``pv`` plus a
+        per-slot page table ``ptab`` (entries init to the RELEASED
+        sentinel ``num_pages``: writes drop, reads are masked). SSM/conv
+        state stays per-slot (it is O(1) in sequence length - paging buys
+        nothing), as do whisper's fixed-length cross caches."""
         cfg = self.cfg
         dtype = dtype or _dt(cfg)
         B = batch_size
         K, hd, lyr = cfg.n_kv_heads, cfg.head_dim_, cfg.n_layers
         cache: Dict[str, Any] = {}
-        if cfg.arch_type != "ssm":
+        if cfg.arch_type != "ssm" and page_pool is not None:
+            num_pages, page_size = page_pool
+            if max_seq_local % page_size:
+                raise ValueError(
+                    f"max_seq_local={max_seq_local} must be a multiple of "
+                    f"page_size={page_size} (the per-slot view keeps the "
+                    "fixed-lane shape so decode stays bitwise identical)")
+            npag = max_seq_local // page_size
+            cache["pk"] = jnp.zeros((lyr, num_pages, page_size, K, hd), dtype)
+            cache["pv"] = jnp.zeros((lyr, num_pages, page_size, K, hd), dtype)
+            cache["ptab"] = jnp.full((B, npag), num_pages, jnp.int32)
+        elif cfg.arch_type != "ssm":
             cache["k"] = jnp.zeros((lyr, B, max_seq_local, K, hd), dtype)
             cache["v"] = jnp.zeros((lyr, B, max_seq_local, K, hd), dtype)
         if cfg.arch_type in ("ssm", "hybrid"):
@@ -516,6 +535,31 @@ class Model:
         K, hd = cfg.n_kv_heads, cfg.head_dim_
         H = cfg.n_heads
 
+        paged = "pk" in cache
+        if paged:
+            # lazy: models never import the serve stack at module scope
+            from repro.serve.paged import gather_pages
+            cache = dict(cache)
+            ptab = cache.pop("ptab")                     # (B, npag) global ids
+            P_loc, ps = cache["pk"].shape[1], cache["pk"].shape[2]
+            npag = ptab.shape[1]
+            S_view = npag * ps
+            page0 = ctx.cp_index() * P_loc               # pages cp-sharded
+            posv = pos if per_slot else jnp.broadcast_to(pos, (B,))
+            rows_p = jnp.arange(B)
+            wslot = jnp.clip(posv // ps, 0, npag - 1)
+            wloc = ptab[rows_p, wslot] - page0
+            # unwritable (out-of-view position, RELEASED-sentinel table row,
+            # or a page another cp shard owns) redirects to index P_loc:
+            # out-of-bounds scatters drop, so the write just vanishes
+            widx = jnp.where((posv < S_view) & (wloc >= 0) & (wloc < P_loc),
+                             wloc, P_loc)
+            woff = posv % ps
+            own = (ptab >= page0) & (ptab < page0 + P_loc)   # (B, npag)
+            extra_valid = jnp.repeat(own, ps, axis=1)        # (B, S_view)
+            view_pos = jnp.arange(S_view)
+            ptab_loc = ptab - page0   # gather_pages clips; `own` masks strays
+
         S_loc = cache["k"].shape[2] if "k" in cache else 0
         if ctx.sharded and S_loc:
             local_pos = pos - ctx.cp_index() * S_loc
@@ -559,7 +603,18 @@ class Model:
                 ppos = pos[:, None] if per_slot else pos[None]
                 q = L.rope(q, ppos, theta)
                 k = L.rope(k, ppos, theta)
-            if per_slot:
+            if paged:
+                # scatter this token's K/V into each slot's current page;
+                # the gathered view then matches the fixed lane bitwise at
+                # every valid position
+                kp = cache_l["pk"].at[widx, woff].set(
+                    k[:, 0].astype(cache_l["pk"].dtype), mode="drop")
+                vp = cache_l["pv"].at[widx, woff].set(
+                    v[:, 0].astype(cache_l["pv"].dtype), mode="drop")
+                new_cache_l["pk"], new_cache_l["pv"] = kp, vp
+                kc = gather_pages(kp, ptab_loc)
+                vc = gather_pages(vp, ptab_loc)
+            elif per_slot:
                 # per-row scatter: slot i appends at its own position
                 rows = jnp.arange(B)
                 kc = cache_l["k"].at[rows, local_pos_c].set(
@@ -578,7 +633,8 @@ class Model:
                     (0, local_pos_c, 0, 0))
                 kc = jnp.where(in_range, kc, cache_l["k"])
                 vc = jnp.where(in_range, vc, cache_l["v"])
-            new_cache_l["k"], new_cache_l["v"] = kc, vc
+            if not paged:
+                new_cache_l["k"], new_cache_l["v"] = kc, vc
 
             meta_kv = None
             if cfg.meta_tokens:
@@ -590,7 +646,9 @@ class Model:
             attn_out = L.decode_attention(
                 q, kc, vc, total_len=pos + 1, window=window,
                 softcap=cfg.attn_softcap, q_pos=pos, ctx=ctx,
-                meta_kv=meta_kv)
+                meta_kv=meta_kv,
+                kv_positions=view_pos if paged else None,
+                extra_valid=extra_valid if paged else None)
             attn_out = L.pmatmul(attn_out.reshape(B, 1, H * hd), pa["o"])
 
             if cfg.arch_type == "hybrid":
@@ -631,6 +689,165 @@ class Model:
             unroll=cfg.scan_unroll)
         x = L.apply_norm(x, params["final_norm"], cfg)
         logits = self._head(params, x)[:, 0]
+        if paged:
+            new_cache["ptab"] = ptab
+        return logits, new_cache
+
+    def decode_chunk(self, params, inputs, cache, start, nvalid,
+                     ctx: ShardCtx = ShardCtx()):
+        """Chunked prefill: advance B slots by one fixed-size chunk of
+        prompt tokens against their own (fixed-lane or paged) cache.
+
+        inputs: {"token": (B,Sq)} or {"embeds": (B,Sq,d)}; start: (B,)
+        global position of each slot's first chunk token; nvalid: (B,)
+        valid tokens in the chunk - the padded tail's cache writes are
+        dropped and its activations never reach a valid position (its
+        tokens sit at *future* positions nothing valid attends to).
+
+        Returns (logits (B,V) of position start+nvalid-1, new_cache): one
+        jit shape per chunk size regardless of prompt length. For SSM and
+        hybrid stacks the caller must dispatch only full chunks with
+        Sq % cfg.ssm.chunk == 0 (the SSD scan has no per-token validity
+        masking - sessions gate admission on it).
+
+        Local-path only (mesh sessions admit by token injection).
+        """
+        cfg = self.cfg
+        if ctx.sharded:
+            raise NotImplementedError("decode_chunk is local-only")
+        if cfg.arch_type == "encdec":
+            raise NotImplementedError("enc-dec serving prefills via prefill()")
+        start = jnp.asarray(start, jnp.int32)
+        nvalid = jnp.asarray(nvalid, jnp.int32)
+        params = ctx.gather(params, "static")
+        if cfg.input_mode == "embeddings":
+            x = inputs["embeds"].astype(_dt(cfg))
+        elif L.code_resident(params["embed"]):
+            x = params["embed"].astype(_dt(cfg)).take(inputs["token"])
+        else:
+            x = params["embed"].astype(_dt(cfg))[inputs["token"]]
+        if cfg.emb_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        B, Sq, _ = x.shape
+        windows, thetas = self._flags()
+        K, hd = cfg.n_kv_heads, cfg.head_dim_
+        H = cfg.n_heads
+        rows = jnp.arange(B)
+        q_pos = start[:, None] + jnp.arange(Sq)[None, :]       # (B, Sq)
+        valid_q = jnp.arange(Sq)[None, :] < nvalid[:, None]    # (B, Sq)
+
+        paged = "pk" in cache
+        if paged:
+            from repro.serve.paged import gather_pages
+            cache = dict(cache)
+            ptab = cache.pop("ptab")
+            P_loc, ps = cache["pk"].shape[1], cache["pk"].shape[2]
+            npag = ptab.shape[1]
+            S_view = npag * ps
+            wslot = jnp.clip(q_pos // ps, 0, npag - 1)
+            wloc = ptab[rows[:, None], wslot]                  # (B, Sq)
+            widx = jnp.where(valid_q & (q_pos < S_view)
+                             & (wloc < P_loc), wloc, P_loc)
+            woff = q_pos % ps
+            own = ptab < P_loc                                 # (B, npag)
+            extra_valid = jnp.repeat(own, ps, axis=1)
+            view_pos = jnp.arange(S_view)
+            ptab_loc = ptab
+        else:
+            S_loc = cache["k"].shape[2] if "k" in cache else 0
+            if S_loc:
+                lane_idx = jnp.where(valid_q & (q_pos < S_loc), q_pos, S_loc)
+
+        def block(carry, scanned):
+            x = carry
+            p, window, theta, cache_l = scanned
+            p = ctx.gather(p, "blocks")
+            h = L.apply_norm(x, p["ln1"], cfg)
+            new_cache_l = dict(cache_l)
+            if cfg.arch_type == "ssm":
+                out, st = L.mamba2_mix(
+                    p["ssm"], h, cfg.ssm, cfg.d_model,
+                    decode_cache={"ssm": cache_l["ssm"],
+                                  "conv": cache_l["conv"]})
+                new_cache_l["ssm"], new_cache_l["conv"] = st["ssm"], st["conv"]
+                return x + out, new_cache_l
+
+            pa = p["attn"]
+            q = L.pmatmul(h, pa["q"])
+            k = L.pmatmul(h, pa["k"])
+            v = L.pmatmul(h, pa["v"])
+            if cfg.qkv_bias:
+                q = q + pa["bq"].astype(h.dtype)
+                k = k + pa["bk"].astype(h.dtype)
+                v = v + pa["bv"].astype(h.dtype)
+            q = q.reshape(B, Sq, H, hd)
+            k = k.reshape(B, Sq, K, hd)
+            v = v.reshape(B, Sq, K, hd)
+            if cfg.qk_norm:
+                q = L.rmsnorm(q, pa["q_norm"], cfg.norm_eps)
+                k = L.rmsnorm(k, pa["k_norm"], cfg.norm_eps)
+            q = L.rope(q, q_pos, theta)
+            k = L.rope(k, q_pos, theta)
+            if paged:
+                kp = cache_l["pk"].at[widx, woff].set(
+                    k.astype(cache_l["pk"].dtype), mode="drop")
+                vp = cache_l["pv"].at[widx, woff].set(
+                    v.astype(cache_l["pv"].dtype), mode="drop")
+                new_cache_l["pk"], new_cache_l["pv"] = kp, vp
+                kc = gather_pages(kp, ptab_loc)
+                vc = gather_pages(vp, ptab_loc)
+            else:
+                kc = cache_l["k"].at[rows[:, None], lane_idx].set(
+                    k.astype(cache_l["k"].dtype), mode="drop")
+                vc = cache_l["v"].at[rows[:, None], lane_idx].set(
+                    v.astype(cache_l["v"].dtype), mode="drop")
+                new_cache_l["k"], new_cache_l["v"] = kc, vc
+
+            meta_kv = None
+            if cfg.meta_tokens:
+                meta_kv = (
+                    jnp.broadcast_to(pa["meta_k"].astype(h.dtype),
+                                     (B,) + pa["meta_k"].shape),
+                    jnp.broadcast_to(pa["meta_v"].astype(h.dtype),
+                                     (B,) + pa["meta_v"].shape))
+            attn_out = L.chunk_attention(
+                q, kc, vc, q_pos=q_pos, window=window,
+                softcap=cfg.attn_softcap, meta_kv=meta_kv,
+                kv_positions=view_pos if paged else None,
+                extra_valid=extra_valid if paged else None)
+            attn_out = L.pmatmul(attn_out.reshape(B, Sq, H * hd), pa["o"])
+
+            if cfg.arch_type == "hybrid":
+                ssm_out, st = L.mamba2_mix(
+                    p["ssm"], h, cfg.ssm, cfg.d_model,
+                    decode_cache={"ssm": cache_l["ssm"],
+                                  "conv": cache_l["conv"]})
+                new_cache_l["ssm"], new_cache_l["conv"] = st["ssm"], st["conv"]
+                attn_out = 0.5 * (
+                    L.apply_norm(attn_out, p["attn_out_norm"], cfg)
+                    + L.apply_norm(ssm_out, p["ssm_out_norm"], cfg))
+            if cfg.post_norm:
+                attn_out = L.apply_norm(attn_out, p["ln1_post"], cfg)
+            x = x + attn_out
+
+            h2 = L.apply_norm(x, p["ln2"], cfg)
+            if cfg.moe is not None:
+                mlp_out, _ = L.moe(p["moe"], h2, cfg.moe, ctx=ctx)
+            else:
+                mlp_out = L.mlp(p["mlp"], h2, cfg.act)
+            if cfg.post_norm:
+                mlp_out = L.apply_norm(mlp_out, p["ln2_post"], cfg)
+            return x + mlp_out, new_cache_l
+
+        x, new_cache = jax.lax.scan(
+            block, x, (params["blocks"], windows, thetas, cache),
+            unroll=cfg.scan_unroll)
+        x = L.apply_norm(x, params["final_norm"], cfg)
+        last = jnp.clip(nvalid - 1, 0, Sq - 1)
+        xl = x[rows, last][:, None]                            # (B, 1, d)
+        logits = self._head(params, xl)[:, 0]
+        if paged:
+            new_cache["ptab"] = ptab
         return logits, new_cache
 
 

@@ -1,11 +1,14 @@
 """Serving: continuous-batching sessions over code-resident quantized
-weights (the paper's Q_x "Size" motivation, applied for real)."""
+weights (the paper's Q_x "Size" motivation, applied for real), with a
+paged KV cache bounding concurrency by tokens in flight."""
 from repro.serve.engine import Engine
-from repro.serve.quantized import (QuantizedLeaf, is_quantized,
-                                   make_dequant_gather, params_nbytes,
-                                   quantize_params)
+from repro.serve.paged import PagePool, gather_pages, pages_for
+from repro.serve.quantized import (QuantizedLeaf, cache_nbytes,
+                                   is_quantized, make_dequant_gather,
+                                   params_nbytes, quantize_params)
 from repro.serve.session import Request, Result, ServeSession
 
-__all__ = ["Engine", "QuantizedLeaf", "Request", "Result", "ServeSession",
-           "is_quantized", "make_dequant_gather", "params_nbytes",
+__all__ = ["Engine", "PagePool", "QuantizedLeaf", "Request", "Result",
+           "ServeSession", "cache_nbytes", "gather_pages", "is_quantized",
+           "make_dequant_gather", "pages_for", "params_nbytes",
            "quantize_params"]

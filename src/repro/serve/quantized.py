@@ -279,3 +279,10 @@ def params_nbytes(params) -> int:
     for leaf in jax.tree.leaves(params, is_leaf=_is_qleaf):
         total += leaf.nbytes if _is_qleaf(leaf) else int(leaf.nbytes)
     return total
+
+
+def cache_nbytes(cache) -> int:
+    """Resident bytes of a decode cache (fixed lanes or paged pool +
+    tables alike) - the number the fleet benchmark equalizes when it
+    compares paged vs fixed-lane serving at equal cache memory."""
+    return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(cache))

@@ -4,7 +4,11 @@
 
   * ``submit(Request) -> handle`` claims a free slot (or queues); new
     requests join mid-flight as others finish - the batch never drains to
-    restart.
+    restart. Requests carry an SLO class (``interactive`` > ``standard``
+    > ``batch``): the pending queue is priority-ordered and, under pool
+    pressure, a higher-class arrival preempts the lowest-class occupant
+    (requeue-and-recompute by default, or ``preempt_mode="kill"`` which
+    surfaces ``finish_reason="preempted"``).
   * ``step()`` runs ONE jitted decode step over all slots: token embedding,
     attention against each slot's own cache prefix (per-slot positions -
     slot i attends exactly its ``pos_i`` written entries, never padding or
@@ -15,25 +19,38 @@
   * ``drain()`` runs until every submitted request finished and returns
     ``{handle: Result}``.
 
-Decode state keeps a fixed shape - (slots,) control vectors + a
-(layers, slots, max_seq, ...) cache - so exactly one compiled decode step
-is reused for the whole session, with the state buffers donated through
-it. Admission runs one batched prefill over the prompt and scatters the
-KV/SSM cache into the claimed slot lane (compiled once per distinct
-prompt length, like the old engine's per-shape prefill); where prefill
-can't apply (mesh ``decode_fn`` sessions, SSD chunk-misaligned prompts)
-the prompt is injected through the decode step one token per dispatch.
+Decode state keeps a fixed shape - (slots,) control vectors + the cache -
+so exactly one compiled decode step is reused for the whole session, with
+the state buffers donated through it. The cache is either fixed-lane
+(``(layers, slots, max_seq, ...)``) or, with ``paged=True``, a physical
+page pool + per-slot page table (``repro.serve.paged``): slots then pin
+only the pages their tokens occupy, so concurrency is bounded by tokens
+in flight rather than ``slots * max_seq``, and admission validates page
+availability up front - ``finish_reason="cache_full"`` cannot happen
+while the pool has free pages.
+
+Admission (local sessions) runs **chunked prefill** by default: the
+prompt advances through ``model.decode_chunk`` in fixed-size chunks, one
+chunk interleaved before each decode dispatch, so a long prompt never
+stalls the decode batch and the per-prompt-length jit cache collapses to
+exactly two chunk shapes (mid/final). ``prefill="whole"`` restores the
+legacy one-shot batched prefill (fixed lanes only, compiled per prompt
+length); mesh ``decode_fn`` sessions and SSD chunk-misaligned prompts
+fall back to injecting the prompt through the decode step one token per
+dispatch.
 
 The decode callable is pluggable: the default wraps
 ``model.decode_step`` locally (dequantizing ``QuantizedParams`` per layer
 at use); pass ``decode_fn=`` from ``repro.dist.serve.make_serve_step`` to
 run the same session over a mesh - single-device and sharded serving are
-one API.
+one API (paged state is local-only for now; the mesh decode over a
+sharded page pool lives in ``repro.dist.serve``'s cache specs).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -43,7 +60,14 @@ import numpy as np
 from repro.models.layers import ShardCtx
 from repro.perf import aot
 from repro.perf import cache as perf_cache
+from repro.serve.paged import PagePool
 from repro.serve.quantized import is_quantized, make_dequant_gather
+
+# SLO classes, higher = more urgent. The queue is ordered by (class,
+# arrival); preemption only ever evicts a strictly lower class.
+SLO_PRIORITY = {"batch": 0, "standard": 1, "interactive": 2}
+
+_PAGED_LEAVES = ("pk", "pv", "ptab")
 
 
 def _raw_key(key: jax.Array) -> jax.Array:
@@ -63,6 +87,7 @@ class Request:
     prompt: Sequence[int]
     max_new_tokens: int = 16
     temperature: float = 0.0
+    slo: str = "standard"           # "interactive" | "standard" | "batch"
 
 
 @dataclasses.dataclass
@@ -70,7 +95,8 @@ class Result:
     tokens: List[int]
     prompt_len: int
     handle: int = -1
-    finish_reason: str = "length"       # "length" | "eos" | "cache_full"
+    # "length" | "eos" | "cache_full" | "preempted"
+    finish_reason: str = "length"
 
 
 class ServeSession:
@@ -85,18 +111,30 @@ class ServeSession:
     eos_id: optional token id that finishes a request early.
     decode_fn: optional ``(params, inputs, cache, pos) -> (logits, cache)``
         override, e.g. from ``dist.serve.make_serve_step(..., "decode")``.
+    paged: replace the fixed cache lanes with a page pool + page tables
+        (``page_size`` tokens per page, ``num_pages`` physical pages -
+        default ``slots * max_seq / page_size``, i.e. fixed-lane-equal
+        memory). Local decode path only; requires
+        ``max_seq % page_size == 0``. Decode over the paged view is
+        bitwise identical to fixed-lane decode.
+    prefill: admission mode - "auto" (chunked locally, injection on a
+        mesh), "chunked", "whole" (legacy batched prefill, fixed lanes
+        only), or "inject". Chunked admission advances ``prefill_chunk``
+        prompt tokens per session step, interleaved with decode.
+    preempt_mode: "requeue" re-admits a preempted request from its prompt
+        with its original sampling key (identical tokens to an
+        unpreempted run); "kill" returns the partial generation with
+        ``finish_reason="preempted"``.
     sync_interval: while requests are queued AND a slot may have finished
         early (EOS configured), harvest every N steps. Without an EOS the
         scheduler knows each slot's earliest possible finish step
         host-side and harvests only then - O(requests) syncs, never
         O(tokens); with an empty queue the steady-state loop never syncs.
     aot_dir: AOT artifact directory (``repro.perf.aot``) for the compiled
-        decode step, keyed on (model config digest, slots, max_seq,
-        sample mode, quantization, arg signature). A warm dir makes the
-        first dispatch skip trace+lower+compile; local decode path only
-        (a mesh ``decode_fn`` closure can't be digested, so it falls back
-        to plain jit). ``stats`` records ``compilations`` vs
-        ``aot_loads``.
+        decode step, keyed on (model config digest, slots, max_seq, paged
+        geometry, sample mode, quantization, arg signature). A warm dir
+        makes the first dispatch skip trace+lower+compile; local decode
+        path only. ``stats`` records ``compilations`` vs ``aot_loads``.
     """
 
     def __init__(self, model, params, *, slots: int = 8, max_seq: int = 256,
@@ -104,7 +142,11 @@ class ServeSession:
                  decode_fn: Optional[Callable] = None,
                  base_key: Optional[jax.Array] = None, seed: int = 0,
                  sync_interval: int = 8, aot_dir: Optional[str] = None,
-                 fused_matmul: bool = True):
+                 fused_matmul: bool = True,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 prefill: str = "auto", prefill_chunk: int = 32,
+                 preempt_mode: str = "requeue"):
         cfg = model.cfg
         if cfg.input_mode != "tokens" or cfg.arch_type == "encdec":
             raise ValueError("ServeSession serves token-input decoder LMs")
@@ -113,6 +155,34 @@ class ServeSession:
         self.sync_interval = max(1, sync_interval)
         self.params = params
         self._local = decode_fn is None
+        self.paged = bool(paged)
+        if self.paged:
+            if not self._local:
+                raise ValueError("paged sessions use the local decode path; "
+                                 "mesh paged decode runs through "
+                                 "dist.serve cache specs directly")
+            if cfg.arch_type == "ssm":
+                raise ValueError("pure-SSM models hold no KV cache to page")
+            if max_seq % page_size:
+                raise ValueError(f"max_seq={max_seq} must be a multiple of "
+                                 f"page_size={page_size}")
+            self.page_size = int(page_size)
+            self.num_pages = int(num_pages if num_pages is not None
+                                 else slots * (max_seq // page_size))
+            self._pool = PagePool(self.num_pages, self.page_size)
+        else:
+            self.page_size = self.num_pages = 0
+            self._pool = None
+        if prefill not in ("auto", "chunked", "whole", "inject"):
+            raise ValueError(f"unknown prefill mode {prefill!r}")
+        if prefill == "whole" and self.paged:
+            raise ValueError("whole-prompt prefill fills a dense lane; "
+                             "paged sessions admit chunked (or inject)")
+        self._prefill_mode = prefill
+        self.prefill_chunk = max(1, int(prefill_chunk))
+        if preempt_mode not in ("requeue", "kill"):
+            raise ValueError(f"unknown preempt_mode {preempt_mode!r}")
+        self.preempt_mode = preempt_mode
         # fused_matmul: quantized projections contract straight from codes
         # (repro.comm.matmul); False restores dequantize-then-matmul.
         # Bitwise-identical tokens either way - this is a perf knob.
@@ -136,6 +206,9 @@ class ServeSession:
         self._step_sample = jax.jit(self._build_step(sample=True),
                                     donate_argnums=(1,))
         self._admit_fn = jax.jit(self._build_admit(), donate_argnums=(0,))
+        self._stage_fn = jax.jit(self._build_stage(), donate_argnums=(0,))
+        self._release_fn = jax.jit(self._build_release(), donate_argnums=(0,))
+        self._chunk_fns: Dict[bool, Callable] = {}   # is_last -> jitted
         self._aot_dir = aot_dir if self._local else None
         self._step_ready: Dict[bool, Callable] = {}  # sample -> executable
         perf_cache.ensure_persistent_cache()  # opt-in via env, see cache.py
@@ -145,14 +218,22 @@ class ServeSession:
         self._hot: set = set()          # handles in slots with temp > 0
         self._slot_handle: List[Optional[int]] = [None] * slots
         self._slot_done_step = [0] * slots   # earliest possible finish
-        self._pending = collections.deque()
+        self._slot_pages: List[Optional[List[int]]] = [None] * slots
+        self._prefill_q: "collections.OrderedDict[int, dict]" = \
+            collections.OrderedDict()   # slot -> chunked-admission progress
+        self._pending: List[int] = []   # handles, (priority, arrival) order
         self._requests: Dict[int, Request] = {}
+        self._req_key: Dict[int, jax.Array] = {}   # stable across preemption
         self._results: Dict[int, Result] = {}
+        self._submit_t: Dict[int, float] = {}
+        self.ttft_s: Dict[int, float] = {}  # submit -> first-token dispatch
         self._next_handle = 0
-        self._admit_seq = 0             # admissions since the last reseed
+        self._admit_seq = 0             # submissions since the last reseed
         self._steps = 0
         self.stats = {"dispatches": 0, "syncs": 0, "admitted": 0,
-                      "compilations": 0, "aot_loads": 0}
+                      "compilations": 0, "aot_loads": 0,
+                      "preemptions": 0, "chunk_dispatches": 0,
+                      "max_inflight": 0}
 
     # ------------------------------------------------------------------
     # device-side state + compiled programs
@@ -160,7 +241,8 @@ class ServeSession:
 
     def _init_state(self):
         B, S = self.slots, self.max_seq
-        cache = self.model.init_cache(B, max_seq_local=S)
+        pool = (self.num_pages, self.page_size) if self.paged else None
+        cache = self.model.init_cache(B, max_seq_local=S, page_pool=pool)
         z = lambda dt: jnp.zeros((B,), dt)
         return dict(cache=cache, cur=z(jnp.int32), pos=z(jnp.int32),
                     plen=z(jnp.int32), gen=z(jnp.int32),
@@ -170,8 +252,24 @@ class ServeSession:
                     prompt=jnp.zeros((B, S), jnp.int32),
                     out=jnp.zeros((B, S), jnp.int32))
 
+    def _claim_cache(self, cache, slot, ptab_row):
+        """Slot-reuse reclaim, in-jit: zero only the recurrent lanes (SSM
+        state, conv tail) - per-slot attention masking already makes a
+        previous occupant's K/V rows unreachable, so the old whole-lane
+        zeroing was pure wasted bandwidth - and install the slot's page
+        table row when paged."""
+        cache = dict(cache)
+        for name in cache:
+            if name in ("ssm", "conv"):
+                cache[name] = cache[name].at[:, slot].set(0)
+        if self.paged:
+            cache["ptab"] = cache["ptab"].at[slot].set(ptab_row)
+        return cache
+
     def _build_admit(self):
-        def admit(st, slot, prompt, plen, max_new, temp, key):
+        S, paged = self.max_seq, self.paged
+
+        def admit(st, slot, prompt, plen, max_new, temp, key, ptab_row):
             st = dict(st)
             st["prompt"] = st["prompt"].at[slot].set(prompt)
             st["cur"] = st["cur"].at[slot].set(prompt[0])
@@ -182,19 +280,51 @@ class ServeSession:
             st["active"] = st["active"].at[slot].set(True)
             st["temp"] = st["temp"].at[slot].set(temp)
             st["rng"] = st["rng"].at[slot].set(key)
-            # Per-slot positions already mask attention to the new
-            # occupant's own written prefix, but recurrent state (SSM,
-            # conv tail) accumulates - zero the slot's cache lane.
-            st["cache"] = jax.tree.map(lambda c: c.at[:, slot].set(0),
-                                       st["cache"])
+            st["cache"] = self._claim_cache(st["cache"], slot, ptab_row)
             return st
         return admit
 
+    def _build_stage(self):
+        """Claim a slot for chunked admission: recurrent lanes zeroed and
+        the page-table row installed, but the slot stays inactive with
+        ``pos = max_seq`` so interleaved decode steps neither advance it
+        nor write into its (paged) cache while chunks are in flight."""
+        S = self.max_seq
+
+        def stage(st, slot, ptab_row):
+            st = dict(st)
+            st["active"] = st["active"].at[slot].set(False)
+            st["pos"] = st["pos"].at[slot].set(S)
+            st["gen"] = st["gen"].at[slot].set(0)
+            st["cache"] = self._claim_cache(st["cache"], slot, ptab_row)
+            return st
+        return stage
+
+    def _build_release(self):
+        """Free a slot in-jit (harvest page reclaim / preemption): decode
+        writes for the row are suppressed (paged: RELEASED-sentinel page
+        table + out-of-view position drop the scatters, so recycled pages
+        can never be corrupted by the previous owner)."""
+        S, paged, P = self.max_seq, self.paged, self.num_pages
+
+        def release(st, slot):
+            st = dict(st)
+            st["active"] = st["active"].at[slot].set(False)
+            st["pos"] = st["pos"].at[slot].set(S)
+            if paged:
+                cache = dict(st["cache"])
+                npag = cache["ptab"].shape[1]
+                cache["ptab"] = cache["ptab"].at[slot].set(
+                    jnp.full((npag,), P, jnp.int32))
+                st["cache"] = cache
+            return st
+        return release
+
     def _build_prefill(self, plen: int):
-        """Admission via one batched prefill over the whole prompt: fills
-        the slot's cache lane and emits the first generated token, so the
-        decode loop starts at the generation boundary (len(prompt) fewer
-        dispatches per request than token injection)."""
+        """Legacy admission via one batched prefill over the whole prompt:
+        fills the slot's cache lane and emits the first generated token.
+        Compiled once per distinct prompt length (``prefill="whole"``);
+        chunked admission replaces this with two chunk-shaped programs."""
         model, S, eos, ctx = self.model, self.max_seq, self.eos_id, self._ctx
 
         def prefill(params, st, slot, prompt, max_new, temp, key):
@@ -232,13 +362,92 @@ class ServeSession:
             return st
         return prefill
 
-    def _can_prefill(self, plen: int) -> bool:
+    def _build_chunk(self, is_last: bool):
+        """One chunked-prefill dispatch for one slot: advance the slot's
+        cache by ``prefill_chunk`` prompt tokens via ``model.decode_chunk``.
+        The final chunk additionally samples the first generated token
+        with exactly the whole-prefill key discipline (one split, draw on
+        one half, store the other), so chunked admissions reproduce the
+        same per-request sampling streams on fixed-lane and paged
+        sessions alike."""
+        model, S, eos, ctx = self.model, self.max_seq, self.eos_id, self._ctx
+
+        def chunk(params, st, slot, tokens, start, nvalid, max_new, temp,
+                  key):
+            st = dict(st)
+            cache = st["cache"]
+            lane = {}
+            for name in cache:
+                if name in ("pk", "pv"):
+                    lane[name] = cache[name]
+                elif name == "ptab":
+                    lane[name] = jax.lax.dynamic_slice_in_dim(
+                        cache[name], slot, 1, axis=0)
+                else:
+                    lane[name] = jax.lax.dynamic_slice_in_dim(
+                        cache[name], slot, 1, axis=1)
+            lg, new_lane = model.decode_chunk(
+                params, {"token": tokens[None]}, lane,
+                start[None], nvalid[None], ctx)
+            newc = {}
+            for name in cache:
+                if name in ("pk", "pv"):
+                    newc[name] = new_lane[name]
+                elif name == "ptab":
+                    newc[name] = cache[name]   # rows set at staging
+                else:
+                    newc[name] = jax.lax.dynamic_update_slice_in_dim(
+                        cache[name], new_lane[name], slot, axis=1)
+            st["cache"] = newc
+            if is_last:
+                lgf = lg[0].astype(jnp.float32)
+                greedy = jnp.argmax(lgf).astype(jnp.int32)
+                k_next, k_draw = jax.random.split(key)
+                sampled = jax.random.categorical(
+                    k_draw, lgf / jnp.maximum(temp, 1e-6)).astype(jnp.int32)
+                hot = temp > 0.0
+                t0 = jnp.where(hot, sampled, greedy)
+                plen = start + nvalid
+                st["cur"] = st["cur"].at[slot].set(t0)
+                st["pos"] = st["pos"].at[slot].set(plen)
+                st["plen"] = st["plen"].at[slot].set(plen)
+                st["gen"] = st["gen"].at[slot].set(1)
+                st["out"] = st["out"].at[slot, 0].set(t0)
+                st["max_new"] = st["max_new"].at[slot].set(max_new)
+                done = max_new <= 1
+                if eos is not None:
+                    done |= t0 == jnp.int32(eos)
+                st["active"] = st["active"].at[slot].set(~done)
+                st["temp"] = st["temp"].at[slot].set(temp)
+                st["rng"] = st["rng"].at[slot].set(
+                    jnp.where(hot, k_next, key))
+            return st
+        return chunk
+
+    def _can_prefill_whole(self, plen: int) -> bool:
         if not self._local or plen < 2:
             return False
         if self.cfg.arch_type in ("ssm", "hybrid"):
             # the SSD chunked scan needs the sequence to tile its chunk
             return plen % self.cfg.ssm.chunk == 0
         return True
+
+    def _admission_mode(self, plen: int) -> str:
+        if self._prefill_mode == "inject" or not self._local:
+            return "inject"
+        if self._prefill_mode == "whole":
+            return "whole" if self._can_prefill_whole(plen) else "inject"
+        # "auto"/"chunked": chunked wherever the architecture allows
+        if self.cfg.arch_type in ("ssm", "hybrid"):
+            c = self.prefill_chunk
+            # decode_chunk has no per-token SSD masking: every dispatched
+            # chunk must be full and SSD-chunk-aligned
+            if c % self.cfg.ssm.chunk == 0 and plen % c == 0:
+                return "chunked"
+            if not self.paged and self._can_prefill_whole(plen):
+                return "whole"
+            return "inject"
+        return "chunked"
 
     def _build_step(self, sample: bool):
         decode, eos, S = self._decode, self.eos_id, self.max_seq
@@ -249,11 +458,18 @@ class ServeSession:
             logits, new_cache = decode(params, {"token": st["cur"][:, None]},
                                        st["cache"], pos)
 
-            def keep(new, old):  # cache leaves are (layers, B, ...)
-                a = active.reshape((1, B) + (1,) * (new.ndim - 2))
-                return jnp.where(a, new, old)
-
-            cache = jax.tree.map(keep, new_cache, st["cache"])
+            # cache retention: fixed lanes revert inactive slots' writes
+            # (leaves are (layers, B, ...)); the paged pool and tables pass
+            # through - released rows already dropped their scatters, and a
+            # finished-but-unharvested row's rewrite is idempotent (same
+            # frozen inputs -> same bytes into its own pages)
+            cache = {}
+            for name, new in new_cache.items():
+                if name in _PAGED_LEAVES:
+                    cache[name] = new
+                else:
+                    a = active.reshape((1, B) + (1,) * (new.ndim - 2))
+                    cache[name] = jnp.where(a, new, st["cache"][name])
 
             # sampling lives INSIDE the compiled step: greedy argmax plus
             # (when any admitted request is hot) per-slot temperature/
@@ -311,35 +527,171 @@ class ServeSession:
     def queued(self) -> int:
         return len(self._pending)
 
+    @property
+    def free_pages(self) -> int:
+        return self._pool.free_pages if self.paged else 0
+
+    def _request_pages(self, req: Request) -> int:
+        # cache rows actually written: prompt + all generated tokens but
+        # the last (which is emitted, never fed back)
+        return self._pool.pages_for(len(req.prompt) + req.max_new_tokens - 1)
+
     def submit(self, req: Request) -> int:
         """Queue a request; returns its handle. Claims a free slot
-        immediately when one is available."""
+        immediately when one is available (preempting a lower SLO class
+        under slot/page pressure)."""
         plen = len(req.prompt)
         if plen < 1:
             raise ValueError("empty prompt")
+        if req.slo not in SLO_PRIORITY:
+            raise ValueError(f"unknown SLO class {req.slo!r}; expected one "
+                             f"of {sorted(SLO_PRIORITY)}")
         if plen + req.max_new_tokens - 1 > self.max_seq:
             raise ValueError(
                 f"prompt_len={plen} + max_new={req.max_new_tokens} - 1 "
                 f"exceeds max_seq={self.max_seq}")
+        if self.paged and self._request_pages(req) > self.num_pages:
+            raise ValueError(
+                f"request needs {self._request_pages(req)} pages; the pool "
+                f"holds {self.num_pages}")
         h = self._next_handle
         self._next_handle += 1
         self._requests[h] = req
-        free = [s for s, owner in enumerate(self._slot_handle)
-                if owner is None]
-        if free:
-            self._admit(free[0], h, req)
-        else:
-            self._pending.append(h)
+        # fold on the submission ordinal since the last (re)seed: identical
+        # (requests, key) sequences after a reseed() draw identical
+        # sampling streams, and the key survives preemption-requeue so a
+        # resumed request replays its exact draws
+        self._req_key[h] = jax.random.fold_in(self._base_key,
+                                              self._admit_seq)
+        self._admit_seq += 1
+        self._submit_t[h] = time.perf_counter()
+        self._enqueue(h)
+        self._schedule()
         return h
 
-    def _admit(self, slot: int, handle: int, req: Request):
+    def _enqueue(self, h: int):
+        """Insert into the pending queue ordered by (SLO class desc,
+        arrival asc) - handles are arrival-ordered, so a preempted request
+        resumes ahead of later arrivals in its class."""
+        pr = SLO_PRIORITY[self._requests[h].slo]
+        keyf = lambda hh: (-SLO_PRIORITY[self._requests[hh].slo], hh)
+        lo = 0
+        me = (-pr, h)
+        while lo < len(self._pending) and keyf(self._pending[lo]) < me:
+            lo += 1
+        self._pending.insert(lo, h)
+
+    def _schedule(self, allow_harvest: bool = True):
+        """Admit from the head of the priority queue while resources
+        allow. Under pressure, first collect any already-finished slots
+        (so a completed request is never "preempted"), then preempt
+        strictly-lower-SLO occupants."""
+        while self._pending:
+            h = self._pending[0]
+            req = self._requests[h]
+            if self._try_admit(h, req):
+                self._pending.pop(0)
+                continue
+            if allow_harvest and self.inflight:
+                allow_harvest = False
+                if self._collect_finished():
+                    continue
+            if not self._try_preempt_for(req):
+                break
+
+    def _try_admit(self, handle: int, req: Request) -> bool:
+        free = [s for s, owner in enumerate(self._slot_handle)
+                if owner is None]
+        if not free:
+            return False
+        pages = None
+        if self.paged:
+            pages = self._pool.alloc(self._request_pages(req))
+            if pages is None:
+                return False
+        self._admit(free[0], handle, req, pages)
+        return True
+
+    def _try_preempt_for(self, req: Request) -> bool:
+        """Reclaim slot+pages from the lowest-SLO, most-recently-admitted
+        occupant strictly below ``req``'s class. Returns False (nothing
+        touched) when no such victim exists or even evicting all of them
+        could not seat the request."""
+        pr = SLO_PRIORITY[req.slo]
+        victims = [(SLO_PRIORITY[self._requests[h].slo], -h, s)
+                   for s, h in enumerate(self._slot_handle)
+                   if h is not None and h in self._requests
+                   and SLO_PRIORITY[self._requests[h].slo] < pr]
+        if self.preempt_mode == "kill":
+            # killed handles leave self._requests; look them up anyway
+            victims = [(SLO_PRIORITY[self._requests[h].slo], -h, s)
+                       for s, h in enumerate(self._slot_handle)
+                       if h is not None
+                       and SLO_PRIORITY[self._requests[h].slo] < pr]
+        if not victims:
+            return False
+        if self.paged:
+            reclaim = sum(len(self._slot_pages[s] or ())
+                          for _, _, s in victims)
+            if self._pool.free_pages + reclaim < self._request_pages(req):
+                return False
+        victims.sort()
+        self._preempt(victims[0][2])
+        return True
+
+    def _preempt(self, slot: int):
+        h = self._slot_handle[slot]
+        self.stats["preemptions"] += 1
+        mid_prefill = slot in self._prefill_q
+        if self.preempt_mode == "kill":
+            if mid_prefill:
+                req = self._requests.pop(h)
+                self._results[h] = Result(tokens=[],
+                                          prompt_len=len(req.prompt),
+                                          handle=h,
+                                          finish_reason="preempted")
+            else:
+                snap = self._sync()
+                n = int(snap["gen"][slot])
+                req = self._requests.pop(h)
+                self._results[h] = Result(
+                    tokens=[int(t) for t in snap["out"][slot, :n]],
+                    prompt_len=len(req.prompt), handle=h,
+                    finish_reason="preempted")
+            self._req_key.pop(h, None)
+        else:
+            # requeue-and-recompute: the request (and its sampling key)
+            # goes back to the head of its SLO class
+            self._enqueue(h)
+        self._free_slot(slot, release=True)
+
+    def _free_slot(self, slot: int, release: bool):
+        h = self._slot_handle[slot]
+        self._slot_handle[slot] = None
+        self._slot_done_step[slot] = 0
+        self._prefill_q.pop(slot, None)
+        self._hot.discard(h)
+        if self.paged and self._slot_pages[slot] is not None:
+            self._pool.free(self._slot_pages[slot])
+            self._slot_pages[slot] = None
+        if release:
+            self._state = self._release_fn(self._state, slot)
+
+    def _admit(self, slot: int, handle: int, req: Request,
+               pages: Optional[List[int]]):
         plen = len(req.prompt)
-        # fold on the admission ordinal since the last (re)seed, not the
-        # lifetime handle: identical (requests, key) sequences after a
-        # reseed() draw identical sampling streams
-        key = jax.random.fold_in(self._base_key, self._admit_seq)
-        self._admit_seq += 1
-        if self._can_prefill(plen):
+        key = self._req_key[handle]
+        if self.paged:
+            npag = self.max_seq // self.page_size
+            row = np.full((npag,), self.num_pages, np.int32)
+            row[:len(pages)] = pages
+            ptab_row = jnp.asarray(row)
+            self._slot_pages[slot] = pages
+        else:
+            ptab_row = jnp.zeros((1,), jnp.int32)  # unused placeholder
+        self._slot_handle[slot] = handle
+        mode = self._admission_mode(plen)
+        if mode == "whole":
             fn = self._prefill_fns.get(plen)
             if fn is None:
                 fn = jax.jit(self._build_prefill(plen), donate_argnums=(1,))
@@ -349,20 +701,75 @@ class ServeSession:
                 jnp.asarray(np.asarray(req.prompt, np.int32)),
                 jnp.int32(req.max_new_tokens),
                 jnp.float32(req.temperature), key)
-            remaining = req.max_new_tokens - 1  # first token emitted here
+            self._finalize_admission(slot, handle, req,
+                                     remaining=req.max_new_tokens - 1)
+        elif mode == "chunked":
+            self._state = self._stage_fn(self._state, jnp.int32(slot),
+                                         ptab_row)
+            self._prefill_q[slot] = dict(
+                handle=handle, tokens=np.asarray(req.prompt, np.int32),
+                next=0, plen=plen, max_new=req.max_new_tokens,
+                temp=req.temperature, key=key)
+            nchunks = -(-plen // self.prefill_chunk)
+            # provisional bound until the final chunk lands
+            self._slot_done_step[slot] = (self._steps + nchunks
+                                          + req.max_new_tokens)
+            self._advance_prefill()    # first chunk goes out immediately
         else:
             prompt = np.zeros((self.max_seq,), np.int32)
             prompt[:plen] = np.asarray(req.prompt, np.int32)
             self._state = self._admit_fn(
                 self._state, jnp.int32(slot), jnp.asarray(prompt),
                 jnp.int32(plen), jnp.int32(req.max_new_tokens),
-                jnp.float32(req.temperature), key)
-            remaining = plen + req.max_new_tokens - 1
-        self._slot_handle[slot] = handle
+                jnp.float32(req.temperature), key, ptab_row)
+            self._finalize_admission(slot, handle, req,
+                                     remaining=plen + req.max_new_tokens - 1)
+        self.stats["admitted"] += 1
+        self.stats["max_inflight"] = max(self.stats["max_inflight"],
+                                         self.inflight)
+
+    def _finalize_admission(self, slot: int, handle: int, req: Request,
+                            remaining: int):
         self._slot_done_step[slot] = self._steps + remaining
         if req.temperature > 0:
             self._hot.add(handle)
-        self.stats["admitted"] += 1
+        if handle not in self.ttft_s and handle in self._submit_t:
+            self.ttft_s[handle] = (time.perf_counter()
+                                   - self._submit_t[handle])
+
+    def _chunk_fn(self, is_last: bool) -> Callable:
+        fn = self._chunk_fns.get(is_last)
+        if fn is None:
+            fn = jax.jit(self._build_chunk(is_last), donate_argnums=(1,))
+            self._chunk_fns[is_last] = fn
+        return fn
+
+    def _advance_prefill(self):
+        """Dispatch ONE prompt chunk for the oldest mid-prefill slot.
+        ``step()`` calls this before every decode dispatch, so long
+        prompts stream in without ever stalling the decode batch."""
+        if not self._prefill_q:
+            return
+        slot, pp = next(iter(self._prefill_q.items()))
+        c = self.prefill_chunk
+        lo = pp["next"]
+        hi = min(lo + c, pp["plen"])
+        tok = np.zeros((c,), np.int32)
+        tok[:hi - lo] = pp["tokens"][lo:hi]
+        is_last = hi >= pp["plen"]
+        fn = self._chunk_fn(is_last)
+        self._state = fn(self.params, self._state, jnp.int32(slot),
+                         jnp.asarray(tok), jnp.int32(lo),
+                         jnp.int32(hi - lo), jnp.int32(pp["max_new"]),
+                         jnp.float32(pp["temp"]), pp["key"])
+        pp["next"] = hi
+        self.stats["chunk_dispatches"] += 1
+        if is_last:
+            del self._prefill_q[slot]
+            h = pp["handle"]
+            self._finalize_admission(
+                slot, h, self._requests[h],
+                remaining=max(0, pp["max_new"] - 1))
 
     def _step_callable(self, sample: bool) -> Callable:
         """The ready-to-dispatch decode step: first use per variant loads
@@ -375,7 +782,11 @@ class ServeSession:
                      "slots": self.slots, "max_seq": self.max_seq,
                      "eos": self.eos_id, "sample": sample,
                      "quantized": is_quantized(self.params),
-                     "fused_matmul": self.fused_matmul}
+                     "fused_matmul": self.fused_matmul,
+                     "paged": self.paged, "page_size": self.page_size,
+                     "num_pages": self.num_pages,
+                     "prefill": self._prefill_mode,
+                     "prefill_chunk": self.prefill_chunk}
             fn = aot.load_or_compile(jitted, (self.params, self._state),
                                      aot_dir=self._aot_dir, facts=facts,
                                      stats=self.stats)
@@ -383,11 +794,13 @@ class ServeSession:
         return fn
 
     def step(self):
-        """One decode step for every slot (a single device dispatch). While
-        the pending queue is non-empty, finished slots are harvested as
-        soon as one *can* have finished (plus every ``sync_interval`` steps
+        """One decode step for every slot (a single device dispatch),
+        preceded by at most one chunked-prefill dispatch. While the
+        pending queue is non-empty, finished slots are harvested as soon
+        as one *can* have finished (plus every ``sync_interval`` steps
         when an EOS may end a request early), so queued requests claim
         slots mid-flight without a per-token host sync."""
+        self._advance_prefill()
         fn = self._step_callable(bool(self._hot))
         self._state = fn(self.params, self._state)
         self.stats["dispatches"] += 1
@@ -407,13 +820,19 @@ class ServeSession:
         return jax.device_get({k: self._state[k] for k in keys})
 
     def harvest(self) -> List[int]:
-        """Collect finished slots into results, free them, and admit queued
-        requests. Returns the handles that completed on this call."""
+        """Collect finished slots into results, free them (returning their
+        pages to the pool), and admit queued requests. Returns the handles
+        that completed on this call."""
+        finished = self._collect_finished()
+        self._schedule(allow_harvest=False)
+        return finished
+
+    def _collect_finished(self) -> List[int]:
         snap = self._sync()
         finished = []
         for s in range(self.slots):
             h = self._slot_handle[s]
-            if h is None or snap["active"][s]:
+            if h is None or snap["active"][s] or s in self._prefill_q:
                 continue
             n = int(snap["gen"][s])
             req = self._requests.pop(h)   # bounded host state: one entry
@@ -426,13 +845,9 @@ class ServeSession:
                 tokens=[int(t) for t in snap["out"][s, :n]],
                 prompt_len=int(snap["plen"][s]), handle=h,
                 finish_reason=reason)
-            self._slot_handle[s] = None
-            self._hot.discard(h)
+            self._req_key.pop(h, None)
+            self._free_slot(s, release=self.paged)
             finished.append(h)
-        while self._pending and self.free_slots:
-            h = self._pending.popleft()
-            slot = self._slot_handle.index(None)
-            self._admit(slot, h, self._requests[h])
         return finished
 
     def drain(self, max_steps: Optional[int] = None) -> Dict[int, Result]:
@@ -443,11 +858,18 @@ class ServeSession:
         bounded."""
         outstanding = self.inflight + self.queued
         budget = (max_steps if max_steps is not None
-                  else (outstanding + self.slots) * self.max_seq + self.max_seq)
+                  else (outstanding + self.slots) * 2 * self.max_seq
+                  + self.max_seq)
         while self.inflight or self._pending:
             if budget <= 0:
                 raise RuntimeError("drain exceeded its step budget")
-            if self._pending:
+            if self._prefill_q:
+                # one chunk advances per step: burst exactly through the
+                # outstanding chunks, then recompute bounds
+                burst = sum(-(-(pp["plen"] - pp["next"])
+                              // self.prefill_chunk) or 1
+                            for pp in self._prefill_q.values())
+            elif self._pending:
                 # step() harvests on its own bound-aware cadence
                 burst = 8
             elif self.eos_id is not None:
@@ -470,7 +892,7 @@ class ServeSession:
 
     def reseed(self, key: jax.Array):
         """Set the base sampling key for subsequently admitted requests
-        (restarting the per-admission key sequence, so the same requests
+        (restarting the per-submission key sequence, so the same requests
         under the same key reproduce their draws)."""
         self._base_key = _raw_key(key)
         self._admit_seq = 0

@@ -85,6 +85,38 @@ for t, (a, b) in enumerate(zip(logits_seq, ref_seq)):
 d = max(np.max(np.abs(a - b)) for a, b in zip(logits_seq, ref_seq))
 print("max logits err:", d)
 
+# ---- paged cache over the mesh == fixed lanes over the mesh (bitwise) ----
+# (page pool sharded over the model axis; every shard holds the global
+# page table and writes/reads only the rows in its local page range -
+# the gathered view must equal the fixed lane at every valid position)
+if cfg.arch_type != "ssm" and cfg.arch_type != "encdec":
+    PS = 8
+    npag = S_MAX // PS
+    num_pages = B * npag               # 2 divides it: shards split evenly
+    fixed_c = model.init_cache(B, max_seq_local=S_MAX)
+    paged_c = model.init_cache(B, max_seq_local=S_MAX,
+                               page_pool=(num_pages, PS))
+    # a deliberately scrambled page assignment: the table indirection,
+    # not the layout, must carry the order
+    perm = np.random.default_rng(7).permutation(num_pages).astype(np.int32)
+    paged_c["ptab"] = jnp.asarray(perm.reshape(B, npag))
+    for t in range(toks.shape[1]):
+        inp = {"token": toks[:, t:t + 1]}
+        flg, fixed_c = jstep(params, inp, fixed_c, jnp.int32(t))
+        plg, paged_c = jstep(params, inp, paged_c, jnp.int32(t))
+        if cfg.meta_tokens:
+            # the meta prefix is pinned to shard 0 while the slot's pages
+            # may live on shard 1, so the flash psum combine splits the
+            # columns differently than fixed lanes do: ulp-level, not
+            # bitwise (local paged decode IS bitwise - tests/test_paged.py)
+            np.testing.assert_allclose(np.asarray(flg), np.asarray(plg),
+                                       rtol=1e-5, atol=1e-6,
+                                       err_msg=f"paged mesh decode t={t}")
+        else:
+            np.testing.assert_array_equal(np.asarray(flg), np.asarray(plg),
+                                          err_msg=f"paged mesh decode t={t}")
+    print("mesh paged decode == mesh fixed-lane decode")
+
 # ---- ServeSession over the SAME mesh step == batch-synchronous loop ----
 # (single API for local and sharded serving: the session drives the
 # shard_map'd decode with per-slot position vectors; greedy tokens must

@@ -1,0 +1,318 @@
+"""Paged KV cache: gather kernel parity, allocator invariants, and
+paged-vs-fixed ServeSession token identity (the tentpole guarantee:
+bitwise-identical decode for the same request stream, greedy and keyed
+sampling, under mixed lengths, fragmentation, and preemption)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.serve import (PagePool, Request, ServeSession, cache_nbytes,
+                         gather_pages, pages_for, quantize_params)
+from repro.serve.paged import _gather_jnp, _gather_pallas
+
+
+@pytest.fixture(scope="module")
+def yi():
+    cfg = get_config("yi-6b", smoke=True)
+    model = Model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+MIXED = [[5, 6, 7, 8], [9, 10, 11, 12, 13, 14], [3, 14],
+         [21, 22, 23, 24, 25], [7, 8, 9], [2, 4, 6, 8, 10, 12, 14, 16]]
+
+
+def _serve(model, params, reqs, **kw):
+    sess = ServeSession(model, params, max_seq=48, **kw)
+    hs = [sess.submit(Request(**vars(r))) for r in reqs]
+    res = sess.drain()
+    return [res[h] for h in hs], sess
+
+
+def _mixed_reqs(max_new=6, hot_every=2):
+    return [Request(prompt=p, max_new_tokens=max_new,
+                    temperature=(0.9 if hot_every and i % hot_every else 0.0))
+            for i, p in enumerate(MIXED)]
+
+
+# ---------------------------------------------------------------------------
+# gather kernel
+# ---------------------------------------------------------------------------
+
+class TestGatherPages:
+    def test_pallas_matches_jnp_bitwise(self):
+        rng = np.random.default_rng(0)
+        pool = jnp.asarray(rng.normal(size=(10, 4, 2, 8)).astype(np.float32))
+        ptab = jnp.asarray(rng.integers(0, 10, size=(3, 5), dtype=np.int32))
+        ref = _gather_jnp(pool, ptab)
+        out = _gather_pallas(pool, ptab, interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+    def test_dispatch_clips_released_sentinel(self):
+        pool = jnp.arange(2 * 2 * 1 * 2, dtype=jnp.float32).reshape(2, 2, 1, 2)
+        # sentinel id 2 (== num_pages) must clip into the pool, not crash;
+        # callers mask those columns out
+        ptab = jnp.asarray([[0, 2]], jnp.int32)
+        out = gather_pages(pool, ptab)
+        assert out.shape == (1, 4, 1, 2)
+        np.testing.assert_array_equal(np.asarray(out[0, :2]),
+                                      np.asarray(pool[0]))
+        np.testing.assert_array_equal(np.asarray(out[0, 2:]),
+                                      np.asarray(pool[1]))
+
+    def test_backend_override(self):
+        pool = jnp.ones((4, 2, 1, 2), jnp.float32)
+        ptab = jnp.zeros((2, 3), jnp.int32)
+        a = gather_pages(pool, ptab, backend="jnp")
+        b = gather_pages(pool, ptab, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+class TestPagePool:
+    def test_alloc_free_roundtrip(self):
+        pool = PagePool(8, 4)
+        a = pool.alloc(3)
+        b = pool.alloc(5)
+        assert len(a) == 3 and len(b) == 5 and pool.free_pages == 0
+        assert pool.alloc(1) is None          # exhausted: no change
+        assert pool.free_pages == 0
+        pool.free(a)
+        assert pool.free_pages == 3 and pool.used_pages == 5
+
+    def test_distinct_ids(self):
+        pool = PagePool(6, 2)
+        pages = pool.alloc(6)
+        assert sorted(pages) == list(range(6))
+
+    def test_foreign_and_double_free(self):
+        pool = PagePool(4, 2)
+        pages = pool.alloc(2)
+        with pytest.raises(ValueError):
+            pool.free([99])
+        pool.free(pages)
+        with pytest.raises(RuntimeError):
+            pool.free(pages + pool.alloc(0 or 2))
+
+    def test_fragmentation_cycles(self):
+        """Interleaved alloc/free cycles fragment the id space; the free
+        list must stay exact (no leak, no dup) throughout."""
+        pool = PagePool(16, 4)
+        rng = np.random.default_rng(3)
+        held = []
+        for _ in range(200):
+            if held and rng.random() < 0.5:
+                pool.free(held.pop(rng.integers(len(held))))
+            else:
+                got = pool.alloc(int(rng.integers(1, 5)))
+                if got is not None:
+                    held.append(got)
+            live = [p for h in held for p in h]
+            assert len(set(live)) == len(live)
+            assert len(live) + pool.free_pages == 16
+
+    def test_pages_for(self):
+        assert pages_for(0, 8) == 0
+        assert pages_for(1, 8) == 1
+        assert pages_for(8, 8) == 1
+        assert pages_for(9, 8) == 2
+
+
+# ---------------------------------------------------------------------------
+# session: paged == fixed, token for token
+# ---------------------------------------------------------------------------
+
+class TestPagedSessionIdentity:
+    def test_mixed_lengths_greedy_and_sampled(self, yi):
+        """The tentpole guarantee: same request stream (greedy AND keyed
+        sampling), same tokens, fixed lanes vs pages - with more requests
+        than slots so the queue and slot-reuse paths both run."""
+        cfg, model, params = yi
+        a, _ = _serve(model, params, _mixed_reqs(), slots=3, seed=7)
+        b, sp = _serve(model, params, _mixed_reqs(), slots=3, seed=7,
+                       paged=True, page_size=8)
+        assert [r.tokens for r in a] == [r.tokens for r in b]
+        assert sp.free_pages == sp.num_pages  # every page reclaimed
+
+    def test_chunked_matches_whole_prefill_greedy(self, yi):
+        """Chunked admission vs the legacy whole-prompt prefill on fixed
+        lanes: greedy tokens must agree (the bridge that anchors chunked
+        admissions to the old admission math)."""
+        cfg, model, params = yi
+        reqs = _mixed_reqs(hot_every=0)
+        a, _ = _serve(model, params, reqs, slots=3, prefill="whole")
+        b, _ = _serve(model, params, reqs, slots=3, prefill="chunked")
+        assert [r.tokens for r in a] == [r.tokens for r in b]
+
+    def test_admission_order_invariance(self, yi):
+        """Greedy results per request must not depend on submission order
+        (slots are independent lanes; the scheduler only changes WHEN a
+        request runs, never WHAT it computes)."""
+        cfg, model, params = yi
+        base = {p: None for p in map(tuple, MIXED)}
+        for order in (list(range(6)), [3, 0, 5, 1, 4, 2]):
+            reqs = [Request(prompt=MIXED[i], max_new_tokens=6)
+                    for i in order]
+            res, _ = _serve(model, params, reqs, slots=2, seed=0,
+                            paged=True, page_size=8)
+            for i, r in zip(order, res):
+                key = tuple(MIXED[i])
+                if base[key] is None:
+                    base[key] = r.tokens
+                assert r.tokens == base[key]
+
+    def test_fragmented_pool_still_identical(self, yi):
+        """Many reuse cycles scramble the free list; a fragmented page
+        table must serve the same tokens as a fresh session."""
+        cfg, model, params = yi
+        sess = ServeSession(model, params, slots=2, max_seq=48, seed=0,
+                            paged=True, page_size=8, num_pages=10)
+        for cycle in range(4):     # churn: odd lengths force fragmentation
+            hs = [sess.submit(Request(prompt=MIXED[(cycle + i) % 6],
+                                      max_new_tokens=3 + cycle))
+                  for i in range(3)]
+            sess.drain()
+        hs = [sess.submit(Request(prompt=p, max_new_tokens=6))
+              for p in MIXED]
+        res = sess.drain()
+        fresh, _ = _serve(model, params, _mixed_reqs(hot_every=0),
+                          slots=2, seed=0, paged=True, page_size=8)
+        assert [res[h].tokens for h in hs] == [r.tokens for r in fresh]
+        assert sess.free_pages == 10
+
+    def test_quantized_fused_paged_identity(self, yi):
+        """Code-resident packed weights (qx6 and qx2) through the fused
+        dequant-matmul: paged == fixed, and fused == unfused, per token."""
+        cfg, model, params = yi
+        for k_x in (6, 2):
+            qp = quantize_params(params, k_x=k_x, min_numel=16, pack=True)
+            reqs = _mixed_reqs(max_new=5)
+            a, _ = _serve(model, qp, reqs, slots=2, seed=1)
+            b, _ = _serve(model, qp, reqs, slots=2, seed=1,
+                          paged=True, page_size=8)
+            c, _ = _serve(model, qp, reqs, slots=2, seed=1,
+                          paged=True, page_size=8, fused_matmul=False)
+            assert [r.tokens for r in a] == [r.tokens for r in b], k_x
+            assert [r.tokens for r in b] == [r.tokens for r in c], k_x
+
+    def test_cache_nbytes_equal_memory(self, yi):
+        """The fleet benchmark's premise: a pool of slots*max_seq/page_size
+        pages holds the same cache bytes as the fixed lanes (+ the tables,
+        a few hundred int32s)."""
+        cfg, model, params = yi
+        fx = ServeSession(model, params, slots=4, max_seq=48)
+        pg = ServeSession(model, params, slots=4, max_seq=48,
+                          paged=True, page_size=8)
+        fb = cache_nbytes(fx._state["cache"])
+        pb = cache_nbytes(pg._state["cache"])
+        assert fb < pb <= fb * 1.01
+
+
+# ---------------------------------------------------------------------------
+# scheduler: concurrency, SLO, preemption
+# ---------------------------------------------------------------------------
+
+class TestPagedScheduler:
+    def test_concurrency_beyond_fixed_capacity(self, yi):
+        """A quarter of the fixed-lane memory still seats every request at
+        once: concurrency follows tokens in flight, not slots*max_seq, and
+        cache_full never fires while the pool has pages (admission
+        validates pages up front)."""
+        cfg, model, params = yi
+        sess = ServeSession(model, params, slots=8, max_seq=48,
+                            paged=True, page_size=8, num_pages=12)
+        hs = [sess.submit(Request(prompt=p, max_new_tokens=5))
+              for p in MIXED]
+        res = sess.drain()
+        assert sess.stats["max_inflight"] > 2   # > fixed-equal-memory slots
+        assert {res[h].finish_reason for h in hs} == {"length"}
+
+    def test_submit_rejects_oversized_request(self, yi):
+        cfg, model, params = yi
+        sess = ServeSession(model, params, slots=2, max_seq=48,
+                            paged=True, page_size=8, num_pages=3)
+        with pytest.raises(ValueError):
+            sess.submit(Request(prompt=list(range(1, 30)), max_new_tokens=8))
+
+    def test_slo_priority_order(self, yi):
+        """With one slot, a queued interactive request must be admitted
+        ahead of batch requests that arrived before it."""
+        cfg, model, params = yi
+        sess = ServeSession(model, params, slots=1, max_seq=48,
+                            preempt_mode="kill")
+        running = sess.submit(Request(prompt=[1, 2, 3], max_new_tokens=4,
+                                      slo="interactive"))
+        b1 = sess.submit(Request(prompt=[4, 5, 6], max_new_tokens=4,
+                                 slo="batch"))
+        b2 = sess.submit(Request(prompt=[7, 8, 9], max_new_tokens=4,
+                                 slo="batch"))
+        hi = sess.submit(Request(prompt=[2, 4, 6], max_new_tokens=4,
+                                 slo="interactive"))
+        assert sess._pending == [hi, b1, b2]
+        res = sess.drain()
+        assert all(res[h].finish_reason == "length"
+                   for h in (running, b1, b2, hi))
+
+    def test_preempt_requeue_token_identity(self, yi):
+        """An interactive arrival evicts a running batch request; the
+        victim recomputes from its prompt with its original key and must
+        produce exactly the tokens of an unpreempted run - and so must
+        the interactive request."""
+        cfg, model, params = yi
+        r_batch = Request(prompt=[5, 6, 7, 8], max_new_tokens=8,
+                          temperature=0.7, slo="batch")
+        r_inter = Request(prompt=[9, 10, 11], max_new_tokens=6,
+                          slo="interactive")
+        calm, _ = _serve(model, params, [r_batch, r_inter], slots=4,
+                         seed=3, paged=True, page_size=8)
+        sess = ServeSession(model, params, slots=1, max_seq=48, seed=3,
+                            paged=True, page_size=8, num_pages=12)
+        hb = sess.submit(Request(**vars(r_batch)))
+        for _ in range(3):
+            sess.step()
+        hi = sess.submit(Request(**vars(r_inter)))
+        res = sess.drain()
+        assert sess.stats["preemptions"] == 1
+        assert res[hi].tokens == calm[1].tokens
+        assert res[hb].tokens == calm[0].tokens
+        assert res[hb].finish_reason == "length"
+
+    def test_preempt_kill_surfaces_partial(self, yi):
+        cfg, model, params = yi
+        sess = ServeSession(model, params, slots=1, max_seq=48, seed=3,
+                            paged=True, page_size=8, num_pages=12,
+                            preempt_mode="kill")
+        hb = sess.submit(Request(prompt=[5, 6, 7, 8], max_new_tokens=8,
+                                 slo="batch"))
+        for _ in range(3):
+            sess.step()
+        hi = sess.submit(Request(prompt=[9, 10, 11], max_new_tokens=6,
+                                 slo="interactive"))
+        res = sess.drain()
+        assert res[hb].finish_reason == "preempted"
+        assert 0 < len(res[hb].tokens) < 8
+        assert res[hi].finish_reason == "length"
+
+    def test_finished_slot_harvested_not_preempted(self, yi):
+        """A slot whose request already completed must be collected, not
+        'preempted', when a higher class needs the room."""
+        cfg, model, params = yi
+        sess = ServeSession(model, params, slots=1, max_seq=48,
+                            paged=True, page_size=8, num_pages=12,
+                            preempt_mode="kill")
+        hb = sess.submit(Request(prompt=[5, 6, 7, 8], max_new_tokens=4,
+                                 slo="batch"))
+        for _ in range(12):
+            sess.step()            # finishes well before the arrival
+        hi = sess.submit(Request(prompt=[9, 10, 11], max_new_tokens=4,
+                                 slo="interactive"))
+        res = sess.drain()
+        assert sess.stats["preemptions"] == 0
+        assert res[hb].finish_reason == "length"
+        assert len(res[hb].tokens) == 4
